@@ -1,0 +1,158 @@
+"""Subprocess collective microbenchmarks (paper Figs 7-10).
+
+Run with a device count set by the parent:
+    python -m benchmarks._collective_bench --devices 24 --fig fig7
+
+Prints ``name,us_per_call,derived`` CSV rows.  Wall time on fake CPU devices
+is a scheduling proxy (no real ICI); the ``derived`` column carries the
+traffic-model bytes (plans.py) that the roofline validates on real HW.
+"""
+
+import argparse
+import os
+import sys
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--devices", type=int, default=24)
+ap.add_argument("--fig", default="all")
+ap.add_argument("--reps", type=int, default=30)
+args = ap.parse_args()
+
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={args.devices} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax import shard_map  # noqa: E402
+from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+
+from repro.core import collectives as cc  # noqa: E402
+from repro.core.plans import (GatherPlan, NodeMap,  # noqa: E402
+                              allgather_traffic)
+
+REPS = args.reps
+
+
+def mesh_for(nodes: int, cores: int) -> Mesh:
+    devs = np.array(jax.devices()[:nodes * cores]).reshape(nodes, cores)
+    return Mesh(devs, ("node", "core"))
+
+
+def timeit(fn, *xs) -> float:
+    fn(*xs)[0].block_until_ready() if isinstance(fn(*xs), tuple) else \
+        fn(*xs).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*xs)
+    jax.tree.leaves(out)[0].block_until_ready()
+    return (time.perf_counter() - t0) / REPS * 1e6  # us
+
+
+def allgather_pair(nodes, cores, elems, scheme):
+    """Per-rank contribution of ``elems`` doubles; returns a timed callable
+    + its derived traffic."""
+    mesh = mesh_for(nodes, cores)
+    n_ranks = nodes * cores
+    x = jnp.arange(n_ranks * elems, dtype=jnp.float64).astype(jnp.float32)
+    spec = P(("node", "core"))
+
+    if scheme == "naive":
+        def body(v):
+            return cc.naive_all_gather(v, fast_axis="core",
+                                       slow_axis="node")
+        out_spec = P(None)
+    else:
+        def body(v):
+            return cc.shared_all_gather(v, fast_axis="core",
+                                        slow_axis="node")
+        out_spec = spec
+
+    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
+                          out_specs=out_spec, check_vma=False))
+    tr = allgather_traffic(scheme="hier" if scheme == "hybrid" else "naive",
+                           num_nodes=nodes, ranks_per_node=cores,
+                           bytes_per_rank=elems * 8)
+    return (lambda: f(x)), tr
+
+
+def bench_fig7():
+    """One full node (8 cores): hybrid needs no exchange at all."""
+    for elems in (1, 64, 1024, 8192, 32768):
+        for scheme in ("naive", "hybrid"):
+            fn, tr = allgather_pair(1, 8, elems, scheme)
+            us = timeit(lambda _=0: fn())
+            print(f"fig7_allgather_1node_{scheme}_{elems},{us:.1f},"
+                  f"fast_bytes={tr.fast_bytes};copies_per_node="
+                  f"{tr.result_bytes_per_node // max(elems * 8, 1)}")
+
+
+def bench_fig8():
+    """One rank per node (worst case: no shared-memory advantage)."""
+    for nodes in (4, 8):
+        for elems in (64, 8192):
+            for scheme in ("naive", "hybrid"):
+                fn, tr = allgather_pair(nodes, 1, elems, scheme)
+                us = timeit(lambda _=0: fn())
+                print(f"fig8_allgather_{nodes}n1p_{scheme}_{elems},{us:.1f},"
+                      f"slow_bytes={tr.slow_bytes}")
+
+
+def bench_fig9():
+    """Fixed nodes, growing ranks-per-node: the hybrid advantage grows."""
+    for ppn in (2, 4, 8, 12):
+        for elems in (512, 16384):
+            for scheme in ("naive", "hybrid"):
+                fn, tr = allgather_pair(2, ppn, elems, scheme)
+                us = timeit(lambda _=0: fn())
+                print(f"fig9_allgather_2n{ppn}p_{scheme}_{elems},{us:.1f},"
+                      f"fast_bytes={tr.fast_bytes}")
+
+
+def bench_fig10():
+    """Irregularly populated nodes (padded + GatherPlan compaction)."""
+    nodes, cores = 2, 8
+    pops = (8, 6)  # 24-core analogue of the paper's 24/16 split
+    mesh = mesh_for(nodes, cores)
+    elems = 4096
+    plan = GatherPlan(NodeMap.irregular(list(pops)), elem_per_rank=elems)
+    plan.check()
+    x = jnp.ones((nodes * cores * elems,), jnp.float32)
+    valid = jnp.asarray(
+        [[elems if c < p else 0 for c in range(cores)]
+         for p in pops], jnp.int32).reshape(nodes * cores, 1)
+    spec = P(("node", "core"))
+
+    def hybrid(v, val):
+        blocks, counts = cc.shared_all_gather_v(v, val, slow_axis="node")
+        return blocks
+
+    def naive(v, val):
+        del val
+        return cc.naive_all_gather(v, fast_axis="core", slow_axis="node")
+
+    fh = jax.jit(shard_map(hybrid, mesh=mesh, in_specs=(spec, spec),
+                           out_specs=P(None, "core"), check_vma=False))
+    fn_ = jax.jit(shard_map(naive, mesh=mesh, in_specs=(spec, spec),
+                            out_specs=P(None), check_vma=False))
+    for name, f in (("naive", fn_), ("hybrid", fh)):
+        us = timeit(lambda _=0: f(x, valid))
+        print(f"fig10_allgatherv_irregular_{name},{us:.1f},"
+              f"counts={'/'.join(str(c) for c in plan.counts())}")
+
+
+FIGS = {"fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
+        "fig10": bench_fig10}
+
+
+def main():
+    figs = list(FIGS) if args.fig == "all" else [args.fig]
+    for f in figs:
+        FIGS[f]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,157 @@
+"""BPMF — Bayesian Probabilistic Matrix Factorization (paper §5.2.2).
+
+Gibbs sampling over user/item factors on a two-tier mesh (2 nodes x 4
+cores).  Each iteration samples the user factors (needs ALL item factors)
+then the item factors (needs ALL user factors) — the two all-gathers the
+paper accelerates:
+
+* naive  (Ori_BPMF): flat allgather, every core a private copy of the full
+  factor matrix;
+* hybrid (Hy_BPMF): bridge-only exchange (``shared_all_gather``), one copy
+  per node sharded over its cores, read at use.
+
+Both produce identical samples (same RNG); RMSE on held-out entries falls.
+
+    PYTHONPATH=src python examples/bpmf.py [--iters 10]
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse  # noqa: E402
+import time      # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+import numpy as np              # noqa: E402
+from jax import lax, shard_map  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.core import collectives as cc          # noqa: E402
+from repro.core.plans import allgather_traffic    # noqa: E402
+
+NODES, CORES = 2, 4
+D = 16           # latent dim
+BETA = 100.0     # observation precision (matches noise sd 0.1)
+LAM = 16.0       # prior precision (= D, the BPMF default scale)
+
+
+def gather(x, scheme):
+    """Allgather factor shards: (n_loc, D) -> (N, D)."""
+    if scheme == "naive":
+        return cc.naive_all_gather(x, fast_axis="core", slow_axis="node")
+    shard = cc.shared_all_gather(x, fast_axis="core", slow_axis="node")
+    full = cc.shared_read(shard, fast_axis="core")
+    return cc.shared_to_rank_order(full, num_pods=NODES,
+                                   chips_per_pod=CORES)
+
+
+def sample_factors(r_loc, mask_loc, other_full, key):
+    """Posterior sample for this shard's rows given the other factor matrix.
+    r_loc: (n_loc, M); other_full: (M, D)."""
+    n_loc = r_loc.shape[0]
+    vt = other_full  # (M, D)
+
+    def one(r_i, m_i, k):
+        prec = BETA * (vt.T * m_i) @ vt + LAM * jnp.eye(D)
+        cov = jnp.linalg.inv(prec)
+        mean = BETA * cov @ (vt.T @ (r_i * m_i))
+        chol = jnp.linalg.cholesky(cov)
+        return mean + chol @ jax.random.normal(k, (D,))
+
+    keys = jax.random.split(key, n_loc)
+    return jax.vmap(one)(r_loc, mask_loc, keys)
+
+
+def bpmf(r, mask, scheme, mesh, iters, seed=0):
+    N, M = r.shape
+
+    def body(r_u, m_u, r_v, m_v):
+        node = lax.axis_index("node")
+        core = lax.axis_index("core")
+        rank = node * CORES + core
+        key = jax.random.PRNGKey(seed)
+        ki = jax.random.fold_in(jax.random.PRNGKey(seed + 1), rank)
+        u = 0.1 * jax.random.normal(ki, (N // (NODES * CORES), D))
+        v = 0.1 * jax.random.normal(jax.random.fold_in(ki, 7),
+                                    (M // (NODES * CORES), D))
+
+        def it(carry, i):
+            u, v, key, acc, n = carry
+            key, k1, k2 = jax.random.split(key, 3)
+            v_full = gather(v, scheme)                    # (M, D)
+            u = sample_factors(r_u, m_u, v_full,
+                               jax.random.fold_in(k1, rank))
+            u_full = gather(u, scheme)                    # (N, D)
+            v = sample_factors(r_v, m_v, u_full,
+                               jax.random.fold_in(k2, rank))
+            # posterior-predictive average after burn-in (BPMF's estimator)
+            burned = i >= iters // 2
+            pred = gather(u, scheme) @ gather(v, scheme).T
+            acc = acc + jnp.where(burned, 1.0, 0.0) * pred
+            n = n + jnp.where(burned, 1.0, 0.0)
+            return (u, v, key, acc, n), None
+
+        acc0 = jnp.zeros((N, M))
+        (u, v, _, acc, n), _ = lax.scan(it, (u, v, key, acc0, 0.0),
+                                        jnp.arange(iters))
+        return (acc / jnp.maximum(n, 1.0))[None], gather(v, scheme)[None]
+
+    spec = P(("node", "core"))
+    f = shard_map(body, mesh=mesh,
+                  in_specs=(spec, spec, spec, spec),
+                  out_specs=(P(None), P(None)), check_vma=False)
+    rj = jnp.asarray(r)
+    mj = jnp.asarray(mask)
+    pred, _ = jax.jit(f)(rj, mj, jnp.asarray(r.T.copy()),
+                         jnp.asarray(mask.T.copy()))
+    return np.asarray(pred[0])
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--users", type=int, default=128)
+    ap.add_argument("--items", type=int, default=128)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((NODES, CORES), ("node", "core"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    rng = np.random.default_rng(0)
+    u_true = rng.normal(size=(args.users, D)) / np.sqrt(D)
+    v_true = rng.normal(size=(args.items, D)) / np.sqrt(D)
+    r = (u_true @ v_true.T + 0.1 * rng.normal(size=(args.users,
+                                                    args.items)))
+    mask = (rng.uniform(size=r.shape) < 0.3).astype(np.float32)
+    test_mask = ((rng.uniform(size=r.shape) < 0.1) * (1 - mask))
+    r_obs = (r * mask).astype(np.float32)
+
+    results = {}
+    for scheme in ("naive", "hybrid"):
+        t0 = time.time()
+        pred = bpmf(r_obs, mask, scheme, mesh, args.iters)
+        dt = time.time() - t0
+        rmse = float(np.sqrt((((pred - r) ** 2) * test_mask).sum()
+                             / test_mask.sum()))
+        base = float(np.sqrt(((r ** 2) * test_mask).sum()
+                             / test_mask.sum()))
+        tr = allgather_traffic(scheme="hier" if scheme == "hybrid"
+                               else "naive", num_nodes=NODES,
+                               ranks_per_node=CORES,
+                               bytes_per_rank=args.items * D * 4
+                               // (NODES * CORES))
+        results[scheme] = (dt, rmse)
+        print(f"{scheme:6s}: TT({args.iters} iters)={dt*1e3:8.1f} ms  "
+              f"RMSE={rmse:.4f} (baseline {base:.4f})  "
+              f"intra-node copy bytes/gather={tr.fast_bytes:,}")
+    ratio = results["naive"][0] / results["hybrid"][0]
+    print(f"Ori_BPMF/Hy_BPMF time ratio: {ratio:.2f} "
+          f"(paper Fig. 12: >1, growing with core count)")
+    assert abs(results["naive"][1] - results["hybrid"][1]) < 1e-4, \
+        "schemes must produce identical samples"
+
+
+if __name__ == "__main__":
+    main()

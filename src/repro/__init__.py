@@ -1,0 +1,3 @@
+"""repro: hierarchical MPI+MPI-style collectives as a multi-pod JAX framework."""
+
+__version__ = "1.0.0"

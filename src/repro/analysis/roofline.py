@@ -1,0 +1,204 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+
+  compute    = HLO_FLOPs / (chips * 197e12)
+  memory     = HLO_bytes / (chips * 819e9)
+  collective = link_bytes(fast tier) / (chips * ICI_bw)
+               + link_bytes(slow tier) / (chips * DCN_bw)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed) and the
+optimized HLO text (collective ops).  Two corrections are applied:
+
+* **loop-body undercount** — cost analysis counts while-loop bodies once; we
+  lower the step at scan ``unroll=1`` (A) and ``unroll=2`` (B) and
+  extrapolate: per-unit u = B - A, outside = 2A - B, total = outside + n*u.
+* **inner sequential scans** (flash KV blocks, sLSTM time steps, xent chunks)
+  are invisible to the unroll trick; the model supplies analytic notes
+  (``Model.cost_notes``) that are added to the compute/memory terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from repro.core.topology import (DCN_BW_PER_HOST, HBM_BW, ICI_BW_PER_LINK,
+                                 PEAK_FLOPS_BF16)
+
+DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+               "f32": 4, "s32": 4, "u32": 4, "f16": 2, "bf16": 2,
+               "s16": 2, "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+               "s8": 1, "u8": 1, "pred": 1}
+
+COLL_RE = re.compile(
+    r"=\s*(?P<shape>\(?[a-z0-9\[\],{}:/*= ]+?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+SHAPE_RE = re.compile(r"(?P<dt>[a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+def _first_group(line: str, num_devices: int) -> tuple[int, list[int]]:
+    """(group_size, first group's device ids)."""
+    m = GROUPS_BRACE_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len(ids), ids
+    m = GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        arr = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            arr = arr.transpose(perm)
+        rows = arr.reshape(g, s)
+        return s, rows[0].tolist()
+    return num_devices, list(range(num_devices))
+
+
+@dataclasses.dataclass
+class CollectiveBytes:
+    """Per-chip link bytes by tier (each device's share of the traffic)."""
+    fast: float = 0.0   # intra-pod ICI
+    slow: float = 0.0   # cross-pod DCN
+    by_op: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "CollectiveBytes", scale: float = 1.0):
+        self.fast += other.fast * scale
+        self.slow += other.slow * scale
+        for k, v in other.by_op.items():
+            self.by_op[k] = self.by_op.get(k, 0.0) + v * scale
+        return self
+
+    @staticmethod
+    def combine(a: "CollectiveBytes", b: "CollectiveBytes", n_units: int
+                ) -> "CollectiveBytes":
+        """A/B unroll extrapolation: out + n*(B-A)."""
+        out = CollectiveBytes()
+        out.add(a, 2.0).add(b, -1.0)            # outside = 2A - B
+        out.add(b, float(n_units)).add(a, -float(n_units))
+        out.fast = max(out.fast, 0.0)
+        out.slow = max(out.slow, 0.0)
+        return out
+
+
+def parse_collectives(hlo: str, *, num_devices: int,
+                      pod_size: Optional[int] = None) -> CollectiveBytes:
+    """Sum per-chip link bytes of every collective in the (already SPMD-
+    partitioned) HLO module.  Ring-model cost per chip:
+      all-gather: out*(n-1)/n ; reduce-scatter: out*(n-1) (out = in/n);
+      all-reduce: 2*out*(n-1)/n ; all-to-all: out*(n-1)/n ; permute: out.
+    A collective whose group spans pods is charged to the slow tier.
+    """
+    out = CollectiveBytes()
+    for line in hlo.splitlines():
+        m = COLL_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        op = m.group("op")
+        bytes_out = _shape_bytes(m.group("shape"))
+        n, ids = _first_group(line, num_devices)
+        if n <= 1:
+            continue
+        if op == "all-gather":
+            link = bytes_out * (n - 1) / n
+        elif op == "reduce-scatter":
+            link = bytes_out * (n - 1)
+        elif op == "all-reduce":
+            link = 2.0 * bytes_out * (n - 1) / n
+        elif op == "all-to-all":
+            link = bytes_out * (n - 1) / n
+        else:  # collective-permute
+            link = float(bytes_out)
+        cross = (pod_size is not None
+                 and len({i // pod_size for i in ids}) > 1)
+        key = f"{op}{'/slow' if cross else ''}"
+        out.by_op[key] = out.by_op.get(key, 0.0) + link
+        if cross:
+            out.slow += link
+        else:
+            out.fast += link
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    fast_coll_s: float
+    slow_coll_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    model_flops: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute / max-term: 1.0 = compute-bound at peak."""
+        bound = max(self.compute_s, self.memory_s, self.collective_s, 1e-30)
+        return self.compute_s / bound
+
+    def to_dict(self) -> dict:
+        return {**dataclasses.asdict(self), "dominant": self.dominant,
+                "useful_flops_ratio": self.useful_flops_ratio,
+                "roofline_fraction": self.roofline_fraction}
+
+
+def extrapolate_cost(cost_a: dict, cost_b: dict, n_units: int
+                     ) -> tuple[float, float]:
+    """(flops, bytes) per device: outside + n_units * per_unit."""
+    def one(key):
+        a = float(cost_a.get(key, 0.0))
+        b = float(cost_b.get(key, 0.0))
+        u = max(b - a, 0.0)
+        return max(2 * a - b, 0.0) + n_units * u
+    return one("flops"), one("bytes accessed")
+
+
+def roofline(*, flops_per_dev: float, bytes_per_dev: float,
+             coll: CollectiveBytes, chips: int, notes: dict,
+             model_flops: float, ici_links: int = 4) -> RooflineTerms:
+    """All *_per_dev quantities are per-device (cost_analysis of the SPMD
+    module is per-device); notes are GLOBAL analytic corrections."""
+    flops = flops_per_dev + notes.get("flops", 0.0) / chips
+    bytes_ = bytes_per_dev + notes.get("bytes", 0.0) / chips
+    fast_s = coll.fast / (ici_links * ICI_BW_PER_LINK)
+    slow_s = coll.slow / DCN_BW_PER_HOST
+    return RooflineTerms(
+        compute_s=flops / PEAK_FLOPS_BF16,
+        memory_s=bytes_ / HBM_BW,
+        collective_s=fast_s + slow_s,
+        fast_coll_s=fast_s, slow_coll_s=slow_s,
+        hlo_flops=flops, hlo_bytes=bytes_, model_flops=model_flops / chips)

@@ -1,0 +1,4 @@
+from repro.configs.base import (ModelConfig, MoESpec, get_config,
+                                list_configs, register)
+
+__all__ = ["ModelConfig", "MoESpec", "get_config", "list_configs", "register"]

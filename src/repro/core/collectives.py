@@ -1,0 +1,217 @@
+"""Hierarchical (MPI+MPI-style) collectives for two-tier TPU meshes.
+
+Every function here is a *shard_map body* primitive: it operates on the local
+shard and takes mesh axis names.  ``fast_axis`` is the intra-pod tier (ICI —
+the paper's shared-memory node); ``slow_axis`` is the cross-pod tier (DCN —
+the paper's network between nodes).  ``fast_axis``/``slow_axis`` may each be a
+single name or a tuple of names.
+
+Three families, mirroring the paper's comparison:
+
+* ``naive_*``   — pure-MPI analogue: single flat phase, result fully
+                  replicated on every chip (one private copy per rank).
+* ``hier_*``    — two-phase (intra-pod, then bridge) schedule producing the
+                  same fully-replicated result; isolates the *latency* effect
+                  of the hierarchical schedule (paper Figs 7-10).
+* ``shared_*``  — the paper's memory-optimal scheme: the result exists ONCE
+                  per pod, sharded over ``fast_axis`` (the shared-memory
+                  window).  Children "load" from it with ``shared_read`` (an
+                  intra-pod gather at use time — the TPU's load/store).
+
+The multi-leader refinement (paper ref [14]) is built in: chip *i* of every
+pod is the leader for shard *i*, so the bridge exchange is spread over all
+chips instead of serialized through one.
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _axes(ax) -> tuple:
+    return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+
+
+def axis_size(ax) -> int:
+    s = 1
+    for a in _axes(ax):
+        s *= lax.axis_size(a)
+    return s
+
+
+def axis_index(ax) -> jax.Array:
+    """Linearized index over (possibly tuple) axis, row-major."""
+    axes = _axes(ax)
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+# ---------------------------------------------------------------------------
+# Allgather (paper §4.1)
+# ---------------------------------------------------------------------------
+
+def naive_all_gather(x: jax.Array, *, fast_axis, slow_axis=None,
+                     axis: int = 0) -> jax.Array:
+    """Pure-MPI analogue: one flat all-gather; full private copy per chip."""
+    names = (_axes(slow_axis) if slow_axis else ()) + _axes(fast_axis)
+    return lax.all_gather(x, names, axis=axis, tiled=True)
+
+
+def hier_all_gather(x: jax.Array, *, fast_axis, slow_axis=None,
+                    axis: int = 0) -> jax.Array:
+    """Two-phase allgather: intra-pod gather, then bridge exchange of whole
+    node regions (leaders' ``MPI_Allgatherv`` in the regular case)."""
+    node_region = lax.all_gather(x, _axes(fast_axis), axis=axis, tiled=True)
+    if slow_axis is None:
+        return node_region
+    return lax.all_gather(node_region, _axes(slow_axis), axis=axis, tiled=True)
+
+
+def shared_all_gather(x: jax.Array, *, fast_axis, slow_axis=None,
+                      axis: int = 0) -> jax.Array:
+    """Paper's scheme: children write their partitions in place (no intra-pod
+    copies); only the bridge exchange runs.  Chip *i* ends holding shard *i*
+    of the pod's single shared copy: the concatenation over pods of every
+    pod's chip-*i* contribution.
+
+    Global element order of the shared copy is (local_rank, pod) — i.e. the
+    node-sorted rank array of paper §6 with the multi-leader interleave.  Use
+    ``shared_read`` to materialize the full buffer (ordered (local, pod)), or
+    ``shared_to_rank_order`` to get SMP rank order.
+    """
+    if slow_axis is None:
+        return x  # single node: partition already in the shared window
+    return lax.all_gather(x, _axes(slow_axis), axis=axis, tiled=True)
+
+
+def shared_read(shard: jax.Array, *, fast_axis, axis: int = 0) -> jax.Array:
+    """Load the pod-shared buffer (an intra-pod gather at use time)."""
+    return lax.all_gather(shard, _axes(fast_axis), axis=axis, tiled=True)
+
+
+def shared_to_rank_order(full: jax.Array, *, num_pods: int,
+                         chips_per_pod: int, axis: int = 0) -> jax.Array:
+    """Reorder a ``shared_read`` result from (local, pod, chunk) layout to
+    SMP rank order (pod, local, chunk) along ``axis``."""
+    moved = jnp.moveaxis(full, axis, 0)
+    n = moved.shape[0]
+    chunk = n // (num_pods * chips_per_pod)
+    r = moved.reshape((chips_per_pod, num_pods, chunk) + moved.shape[1:])
+    r = jnp.swapaxes(r, 0, 1)
+    r = r.reshape((n,) + moved.shape[1:])
+    return jnp.moveaxis(r, 0, axis)
+
+
+def shared_all_gather_v(x_padded: jax.Array, valid: jax.Array, *,
+                        slow_axis, axis: int = 0
+                        ) -> tuple[jax.Array, jax.Array]:
+    """Irregular variant (paper Figs 4/10): per-chip contributions of
+    different true lengths, padded to a common max.  Returns the bridge-
+    gathered padded blocks plus the gathered valid-counts; the compaction map
+    is ``plans.GatherPlan`` (a one-off, like the paper's counts/displs)."""
+    blocks = lax.all_gather(x_padded, _axes(slow_axis), axis=axis, tiled=False)
+    counts = lax.all_gather(valid, _axes(slow_axis), tiled=False)
+    return blocks, counts
+
+
+# ---------------------------------------------------------------------------
+# Broadcast (paper §4.2)
+# ---------------------------------------------------------------------------
+
+def naive_broadcast(x: jax.Array, *, root: int, fast_axis, slow_axis=None
+                    ) -> jax.Array:
+    """Pure-MPI analogue: every chip ends with a private full copy."""
+    names = (_axes(slow_axis) if slow_axis else ()) + _axes(fast_axis)
+    me = axis_index(names)
+    contrib = jnp.where(me == root, x, jnp.zeros_like(x))
+    return lax.psum(contrib, names)
+
+
+def hier_broadcast(x: jax.Array, *, root_pod: int = 0, fast_axis,
+                   slow_axis=None) -> jax.Array:
+    """Two-phase broadcast to full replication: bridge bcast between leaders,
+    then intra-pod bcast (leader -> children copies of the naive scheme)."""
+    fast = _axes(fast_axis)
+    me_fast = axis_index(fast)
+    # intra-pod: chip 0 is the leader
+    if slow_axis is not None:
+        slow = _axes(slow_axis)
+        my_pod = axis_index(slow)
+        lead = jnp.where((my_pod == root_pod) & (me_fast == 0), x,
+                         jnp.zeros_like(x))
+        lead = lax.psum(lead, slow)  # bridge bcast (only leaders nonzero)
+    else:
+        lead = jnp.where(me_fast == 0, x, jnp.zeros_like(x))
+    return lax.psum(jnp.where(me_fast == 0, lead, jnp.zeros_like(lead)), fast)
+
+
+def shared_broadcast(x: jax.Array, *, root_pod: int = 0, fast_axis,
+                     slow_axis=None, axis: int = 0) -> jax.Array:
+    """Paper's scheme: ONE shared copy per pod, sharded over ``fast_axis``.
+
+    Phase 1 (intra-pod scatter at the root pod): the root leader's message is
+    reduce-scattered so chip *i* holds shard *i* — this is the write into the
+    shared window.  Phase 2 (bridge): shard *i* crosses pods once (multi-
+    leader bcast).  Children read via ``shared_read``.
+    """
+    fast = _axes(fast_axis)
+    me_fast = axis_index(fast)
+    contrib = jnp.where(me_fast == 0, x, jnp.zeros_like(x))
+    shard = lax.psum_scatter(contrib, fast, scatter_dimension=axis,
+                             tiled=True)
+    if slow_axis is None:
+        return shard
+    slow = _axes(slow_axis)
+    my_pod = axis_index(slow)
+    shard = jnp.where(my_pod == root_pod, shard, jnp.zeros_like(shard))
+    return lax.psum(shard, slow)
+
+
+# ---------------------------------------------------------------------------
+# Allreduce / reductions (gradient bridge — paper's scheme applied to psum)
+# ---------------------------------------------------------------------------
+
+def naive_psum(x: jax.Array, *, fast_axis, slow_axis=None) -> jax.Array:
+    """Flat allreduce; result replicated per chip."""
+    names = (_axes(slow_axis) if slow_axis else ()) + _axes(fast_axis)
+    return lax.psum(x, names)
+
+
+def hier_psum(x: jax.Array, *, fast_axis, slow_axis=None, axis: int = 0
+              ) -> jax.Array:
+    """Two-phase allreduce to full replication: intra-pod reduce-scatter,
+    bridge allreduce on shards (multi-leader), intra-pod allgather."""
+    shard = lax.psum_scatter(x, _axes(fast_axis), scatter_dimension=axis,
+                             tiled=True)
+    if slow_axis is not None:
+        shard = lax.psum(shard, _axes(slow_axis))
+    return lax.all_gather(shard, _axes(fast_axis), axis=axis, tiled=True)
+
+
+def shared_psum_scatter(x: jax.Array, *, fast_axis, slow_axis=None,
+                        axis: int = 0) -> jax.Array:
+    """Paper's memory-optimal reduction: result exists once per pod, sharded
+    over ``fast_axis``.  This is the gradient-reduction of hier train mode:
+    children write partial sums (intra-pod RS), leaders exchange on the
+    bridge, the reduced value never gets replicated."""
+    shard = lax.psum_scatter(x, _axes(fast_axis), scatter_dimension=axis,
+                             tiled=True)
+    if slow_axis is not None:
+        shard = lax.psum(shard, _axes(slow_axis))
+    return shard
+
+
+# ---------------------------------------------------------------------------
+# All-to-all helper (used by MoE EP and the SUMMA panels)
+# ---------------------------------------------------------------------------
+
+def hier_all_to_all(x: jax.Array, *, fast_axis, split_axis: int,
+                    concat_axis: int) -> jax.Array:
+    return lax.all_to_all(x, _axes(fast_axis), split_axis=split_axis,
+                          concat_axis=concat_axis, tiled=True)

@@ -1,0 +1,254 @@
+"""Decomposition algebra for hierarchical (MPI+MPI-style) collectives.
+
+Pure python/numpy — no jax — so invariants are hypothesis-testable.
+
+The paper's scheme (Figs 3b/4): ranks are grouped into *nodes* (fast-memory
+domains).  Each node keeps ONE shared result buffer; the lowest rank per node
+is the *leader*; leaders form the *bridge communicator* and perform the only
+network exchange (an irregular allgatherv, since node contributions differ).
+Here a "node" is a TPU pod and the leader role is spread over every chip of
+the pod (multi-leader, paper ref [14]): chip i exchanges shard i.
+
+Two kinds of object live here:
+
+* placement / displacement math (``GatherPlan``) — the "one-off" counts and
+  displs computation of the paper's Fig. 4, generalized to irregular node
+  populations (Fig. 10);
+* the traffic model (``CollectiveTraffic``) — closed-form bytes moved per
+  memory tier for the naive (pure-MPI analogue) and hierarchical schemes,
+  used for benchmark "derived" columns and roofline cross-checks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+
+# ---------------------------------------------------------------------------
+# Node/bridge placement (paper Fig. 1/2).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class NodeMap:
+    """Assignment of global ranks to nodes (fast-memory domains).
+
+    ``node_of[r]`` = node id of global rank ``r``.  SMP-style placement packs
+    consecutive ranks; irregular populations (paper §5.1.3) are allowed.
+    """
+
+    node_of: tuple[int, ...]
+
+    def __post_init__(self):
+        if not self.node_of:
+            raise ValueError("empty rank set")
+        seen: list[int] = []
+        for n in self.node_of:
+            if n not in seen:
+                seen.append(n)
+        # node ids must be dense 0..N-1 in first-appearance order (the paper's
+        # comm-split semantics with key=rank keeps rank order inside nodes).
+        if seen != list(range(len(seen))):
+            raise ValueError(f"node ids must be dense/ordered, got {seen}")
+
+    @staticmethod
+    def smp(num_nodes: int, ranks_per_node: int) -> "NodeMap":
+        return NodeMap(tuple(r // ranks_per_node
+                             for r in range(num_nodes * ranks_per_node)))
+
+    @staticmethod
+    def irregular(populations: Sequence[int]) -> "NodeMap":
+        out: list[int] = []
+        for node, p in enumerate(populations):
+            if p < 1:
+                raise ValueError("every node needs >=1 rank")
+            out.extend([node] * p)
+        return NodeMap(tuple(out))
+
+    @property
+    def num_ranks(self) -> int:
+        return len(self.node_of)
+
+    @property
+    def num_nodes(self) -> int:
+        return max(self.node_of) + 1
+
+    def population(self, node: int) -> int:
+        return sum(1 for n in self.node_of if n == node)
+
+    def populations(self) -> tuple[int, ...]:
+        return tuple(self.population(n) for n in range(self.num_nodes))
+
+    def leaders(self) -> tuple[int, ...]:
+        """Lowest global rank per node (paper: 'the lowest ranking process')."""
+        first: dict[int, int] = {}
+        for r, n in enumerate(self.node_of):
+            first.setdefault(n, r)
+        return tuple(first[n] for n in range(self.num_nodes))
+
+    def local_rank(self, rank: int) -> int:
+        node = self.node_of[rank]
+        return sum(1 for r in range(rank) if self.node_of[r] == node)
+
+
+# ---------------------------------------------------------------------------
+# Allgatherv plan (paper Fig. 4: counts / displacements, computed one-off).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GatherPlan:
+    """Bridge-exchange plan for the induced irregular allgather.
+
+    Every rank contributes ``elem_per_rank`` elements.  Node ``k``'s shared
+    buffer region holds the concatenation of its ranks' contributions; the
+    bridge allgatherv exchanges whole node regions between leaders.
+    """
+
+    node_map: NodeMap
+    elem_per_rank: int
+
+    @property
+    def total_elems(self) -> int:
+        return self.elem_per_rank * self.node_map.num_ranks
+
+    def counts(self) -> tuple[int, ...]:
+        """recvcounts of the bridge allgatherv: one entry per node."""
+        return tuple(p * self.elem_per_rank
+                     for p in self.node_map.populations())
+
+    def displs(self) -> tuple[int, ...]:
+        """Displacements of each node's region in the shared result buffer."""
+        out, acc = [], 0
+        for c in self.counts():
+            out.append(acc)
+            acc += c
+        return tuple(out)
+
+    def rank_offset(self, rank: int) -> int:
+        """Where rank's private partition starts in the global result buffer.
+
+        This is the paper's ``s_buf + msg*rank`` pointer arithmetic (line 20 of
+        Fig. 4) generalized to irregular populations via the node-sorted rank
+        order.
+        """
+        node = self.node_map.node_of[rank]
+        return self.displs()[node] + \
+            self.node_map.local_rank(rank) * self.elem_per_rank
+
+    def check(self) -> None:
+        """Structural invariants (used by hypothesis tests)."""
+        counts, displs = self.counts(), self.displs()
+        assert sum(counts) == self.total_elems
+        assert displs[0] == 0
+        for i in range(1, len(displs)):
+            assert displs[i] == displs[i - 1] + counts[i - 1]
+        offsets = sorted(self.rank_offset(r)
+                         for r in range(self.node_map.num_ranks))
+        # partitions tile the buffer exactly (no gap, no overlap)
+        assert offsets == list(range(0, self.total_elems, self.elem_per_rank))
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (bytes moved per tier).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveTraffic:
+    """Bytes crossing each tier, and result bytes resident per node.
+
+    ``slow_bytes``  — total bytes crossing the network (bridge) tier.
+    ``fast_bytes``  — total bytes copied inside nodes (shared-memory tier).
+    ``result_bytes_per_node`` — memory footprint of the collective's result
+    per node (the paper's C1 memory claim: hybrid keeps ONE copy).
+    """
+
+    slow_bytes: int
+    fast_bytes: int
+    result_bytes_per_node: int
+
+
+def allgather_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
+                      bytes_per_rank: int) -> CollectiveTraffic:
+    """Traffic for an allgather of ``bytes_per_rank`` from every rank.
+
+    naive (pure MPI, SMP-aware, Fig. 3a): gather to leader (fast), bridge
+    exchange (slow), broadcast to children (fast); every rank ends with a
+    private full copy.
+
+    hier (paper, Fig. 3b): children write partitions in place (zero copies),
+    leaders exchange node regions (slow), result shared once per node.
+    """
+    P, c, m = num_nodes, ranks_per_node, bytes_per_rank
+    n = P * c * m  # full result size
+    node_contrib = c * m
+    # bridge allgather among P leaders: each leader sends its region to P-1
+    # peers (counting bytes leaving a node once per remote destination).
+    slow = P * node_contrib * (P - 1)
+    if scheme == "naive":
+        # fast tier: children->leader aggregation ((c-1) contributions) plus
+        # leader->children broadcast of the full result to c-1 children.
+        fast = P * ((c - 1) * m + (c - 1) * n)
+        result_per_node = c * n  # one private copy per rank
+    elif scheme == "hier":
+        fast = 0  # partitions written in place in the shared window
+        result_per_node = n  # ONE shared copy (paper C1)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return CollectiveTraffic(slow, fast, result_per_node)
+
+
+def broadcast_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
+                      msg_bytes: int) -> CollectiveTraffic:
+    """Traffic for a broadcast of ``msg_bytes`` from a single root."""
+    P, c, n = num_nodes, ranks_per_node, msg_bytes
+    slow = (P - 1) * n  # root's node region -> every other leader
+    if scheme == "naive":
+        fast = P * (c - 1) * n  # leader -> each child's private copy
+        result_per_node = c * n
+    elif scheme == "hier":
+        fast = 0
+        result_per_node = n
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return CollectiveTraffic(slow, fast, result_per_node)
+
+
+def allreduce_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
+                      msg_bytes: int) -> CollectiveTraffic:
+    """Traffic for an allreduce (grad-reduction analogue).
+
+    hier: reduce-scatter intra-node (each chip ends with shard), cross-node
+    allreduce of shards on the bridge (multi-leader), result stays sharded —
+    one copy per node.  naive: flat ring allreduce over all ranks; every rank
+    keeps a private full copy.
+    """
+    P, c, n = num_nodes, ranks_per_node, msg_bytes
+    if scheme == "naive":
+        R = P * c
+        ring = 2 * n * (R - 1)  # total bytes on the ring
+        # fraction of ring hops that cross nodes under SMP placement: P/R of
+        # the hops are node boundaries.
+        slow = ring * (P / R) if P > 1 else 0
+        fast = ring - slow
+        result_per_node = c * n
+    elif scheme == "hier":
+        fast = 2 * n * (c - 1) / c * P  # RS + AG inside each node
+        slow = 2 * n * (P - 1) / P if P > 1 else 0  # bridge ring on shards
+        result_per_node = n
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return CollectiveTraffic(int(slow), int(fast), result_per_node)
+
+
+def collective_time_model(traffic: CollectiveTraffic, *, num_nodes: int,
+                          ranks_per_node: int, fast_bw: float = 100e9,
+                          slow_bw: float = 25e9) -> float:
+    """Crude alpha-free time model: per-tier bytes / per-tier bandwidth.
+
+    Used only for benchmark 'derived' columns — real numbers come from the
+    dry-run roofline.
+    """
+    slow_t = (traffic.slow_bytes / max(num_nodes, 1)) / slow_bw
+    fast_t = (traffic.fast_bytes / max(num_nodes * ranks_per_node, 1)) / fast_bw
+    return slow_t + fast_t

@@ -1,0 +1,62 @@
+"""One-copy-per-pod parameter store (the MPI-3 shared window analogue).
+
+In the paper, replicated data lives once per node in an ``MPI_Win_allocate_
+shared`` segment; on-node ranks load/store it directly.  On TPU the analogue
+is: a tensor that is *logically replicated* across the pod is *physically
+sharded* over the pod's ``data`` axis and gathered over ICI at use time
+(``fsdp_gather`` = the load), with gradient transpose writing back partitions
+(reduce-scatter = the store).  Across pods the tensor is replicated — one
+copy per pod, exactly Fig. 3b.
+
+These helpers are pure functions usable both inside shard_map bodies (gather/
+scatter) and on the host (choosing shard dims, slicing for init/checkpoint).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def choose_shard_dim(shape: tuple[int, ...], n: int,
+                     skip_dims: tuple[int, ...] = ()) -> Optional[int]:
+    """Pick the dim to shard an FSDP tensor over ``n`` chips: the largest dim
+    divisible by ``n`` (ties -> earliest), skipping ``skip_dims`` (e.g. the
+    stacked-layer dim under scan).  None -> keep replicated (tiny tensor)."""
+    best, best_size = None, 0
+    for d, s in enumerate(shape):
+        if d in skip_dims or s % n != 0:
+            continue
+        if s > best_size:
+            best, best_size = d, s
+    return best
+
+
+def shard_slice(x, idx: int, n: int, dim: Optional[int]):
+    """Host-side: take shard ``idx`` of ``n`` along ``dim`` (None -> as-is)."""
+    if dim is None:
+        return x
+    size = x.shape[dim] // n
+    sl = [slice(None)] * x.ndim
+    sl[dim] = slice(idx * size, (idx + 1) * size)
+    return x[tuple(sl)]
+
+
+def fsdp_gather(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
+    """Load from the pod-shared window: intra-pod all-gather at use time.
+    AD transpose is automatically the intra-pod reduce-scatter (the store)."""
+    if dim is None:
+        return x
+    axes = fast_axis if isinstance(fast_axis, tuple) else (fast_axis,)
+    return lax.all_gather(x, axes, axis=dim, tiled=True)
+
+
+def fsdp_scatter(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
+    """Explicit store: reduce-scatter partial contributions back to shards."""
+    axes = fast_axis if isinstance(fast_axis, tuple) else (fast_axis,)
+    if dim is None:
+        return lax.psum(x, axes)
+    return lax.psum_scatter(x, axes, scatter_dimension=dim, tiled=True)

@@ -1,0 +1,110 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA-native).
+
+TPU adaptation of the online-softmax attention kernel: q is tiled into
+(block_q, head_dim) VMEM blocks aligned to the MXU (128-multiples); the KV
+stream is walked in block_kv chunks with fp32 running (m, l, o) carried in
+registers/VMEM.  GQA is expressed in the BlockSpec index maps: the kv-block
+of q-head ``h`` is head ``h // group`` — no KV replication in HBM.
+
+Validated on CPU via interpret=True against kernels/ref.py (exact softmax).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv: int, Tkv: int,
+            causal: bool, window: Optional[int], q_offset: int, scale: float):
+    bq, hd = q_ref.shape[1], q_ref.shape[2]
+    q = q_ref[0].astype(jnp.float32) * scale                 # (bq, hd)
+    qi = pl.program_id(1)
+    qpos = q_offset + qi * bq + lax.iota(jnp.int32, bq)      # (bq,)
+
+    n_kv = Tkv // block_kv
+
+    def body(j, carry):
+        o, m, l = carry
+        k = k_ref[0, pl.dslice(j * block_kv, block_kv)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(j * block_kv, block_kv)].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        kpos = j * block_kv + lax.iota(jnp.int32, block_kv)
+        mask = jnp.ones((bq, block_kv), jnp.bool_)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= (qpos[:, None] - kpos[None, :]) < window
+        s = jnp.where(mask, s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=1)
+        o_new = o * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return o_new, m_new, l_new
+
+    o0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+
+    if causal:
+        # skip fully-masked kv blocks beyond the last q position
+        hi = jnp.minimum(
+            (q_offset + (qi + 1) * bq + block_kv - 1) // block_kv, n_kv)
+    else:
+        hi = n_kv
+    o, m, l = lax.fori_loop(0, hi, body, (o0, m0, l0))
+    o_ref[0] = (o / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           q_offset: int = 0,
+                           block_q: int = 128, block_kv: int = 128,
+                           interpret: bool = True) -> jax.Array:
+    """q: (B, H, Tq, hd); k, v: (B, KV, Tkv, hd).  Returns (B, H, Tq, hd).
+
+    H % KV == 0 (GQA).  Tq % block_q == 0, Tkv % block_kv == 0 (pad in
+    ops.py).  hd should be a multiple of 128 for MXU alignment on real TPUs
+    (not enforced in interpret mode).
+    """
+    B, H, Tq, hd = q.shape
+    KV, Tkv = k.shape[1], k.shape[2]
+    assert H % KV == 0, (H, KV)
+    group = H // KV
+    block_q = min(block_q, Tq)
+    block_kv = min(block_kv, Tkv)
+    assert Tq % block_q == 0 and Tkv % block_kv == 0
+
+    qr = q.reshape(B * H, Tq, hd)
+    kr = k.reshape(B * KV, Tkv, hd)
+    vr = v.reshape(B * KV, Tkv, hd)
+
+    grid = (B * H, Tq // block_q)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_kv=block_kv, Tkv=Tkv, causal=causal,
+                          window=window, q_offset=q_offset,
+                          scale=1.0 / math.sqrt(hd)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda bh, qi: (bh, qi, 0)),
+            pl.BlockSpec((1, Tkv, hd), lambda bh, qi, g=group: (bh // g, 0, 0)),
+            pl.BlockSpec((1, Tkv, hd), lambda bh, qi, g=group: (bh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), lambda bh, qi: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tq, hd), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Tq, hd)

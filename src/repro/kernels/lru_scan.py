@@ -1,0 +1,59 @@
+"""Pallas TPU blocked linear-recurrence scan (RG-LRU / mLSTM decay core).
+
+h_t = a_t * h_{t-1} + x_t, elementwise over channels.  The time axis is
+walked in (block_t) chunks along an ``arbitrary`` grid dimension; the carry
+h lives in a VMEM scratch that persists across the time-grid steps, so HBM
+traffic is exactly one read of (a, x) and one write of h — the memory-bound
+roofline for this op.  Channels tile the lane dimension (128-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, x_ref, o_ref, h_ref, *, block_t: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[0].astype(jnp.float32)          # (block_t, bc)
+    x = x_ref[0].astype(jnp.float32)
+
+    def step(t, carry):
+        h = carry * a[t] + x[t]
+        o_ref[0, t] = h.astype(o_ref.dtype)
+        return h
+
+    h = lax.fori_loop(0, block_t, step, h_ref[...])
+    h_ref[...] = h
+
+
+def lru_scan_pallas(a: jax.Array, x: jax.Array, *, block_t: int = 256,
+                    block_c: int = 128, interpret: bool = True) -> jax.Array:
+    """a, x: (B, T, C) -> h: (B, T, C).  T % block_t == 0, C % block_c == 0
+    (ops.py pads)."""
+    B, T, C = a.shape
+    block_t = min(block_t, T)
+    block_c = min(block_c, C)
+    assert T % block_t == 0 and C % block_c == 0
+    grid = (B, C // block_c, T // block_t)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_t=block_t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_c), lambda b, c, t: (b, t, c)),
+            pl.BlockSpec((1, block_t, block_c), lambda b, c, t: (b, t, c)),
+        ],
+        out_specs=pl.BlockSpec((1, block_t, block_c),
+                               lambda b, c, t: (b, t, c)),
+        out_shape=jax.ShapeDtypeStruct((B, T, C), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c,), jnp.float32)],
+        interpret=interpret,
+    )(a, x)

@@ -1,0 +1,57 @@
+"""Pallas TPU blocked matmul — the SUMMA per-panel compute kernel.
+
+The paper's SUMMA benchmark (§5.2.1) multiplies b x b panels after each
+broadcast round; this kernel is that panel product, tiled for the MXU:
+(block_m, block_k) x (block_k, block_n) VMEM tiles, fp32 accumulation in a
+VMEM scratch carried across the k grid dimension (``arbitrary`` semantics),
+written out once on the last k step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 128,
+                  interpret: bool = True) -> jax.Array:
+    """a: (M, K) @ b: (K, N) -> (M, N).  Dims must divide by the blocks
+    (ops.py pads)."""
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    block_m, block_n, block_k = (min(block_m, M), min(block_n, N),
+                                 min(block_k, K))
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    n_k = K // block_k
+    grid = (M // block_m, N // block_n, n_k)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, k: (i, k)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)

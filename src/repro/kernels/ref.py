@@ -1,0 +1,50 @@
+"""Pure-jnp oracles for every kernel (the allclose ground truth)."""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: Optional[int] = None,
+                  q_offset: int = 0) -> jax.Array:
+    """q: (B, H, Tq, hd); k, v: (B, KV, Tkv, hd).  Exact softmax attention
+    with GQA head mapping, fp32 throughout."""
+    B, H, Tq, hd = q.shape
+    KV, Tkv = k.shape[1], k.shape[2]
+    group = H // KV
+    kq = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vq = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq)
+    s = s / math.sqrt(hd)
+    qpos = q_offset + jnp.arange(Tq)
+    kpos = jnp.arange(Tkv)
+    mask = jnp.ones((Tq, Tkv), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vq)
+    return out.astype(q.dtype)
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return (a.astype(jnp.float32) @ b.astype(jnp.float32)).astype(a.dtype)
+
+
+def lru_scan_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """h_t = a_t h_{t-1} + x_t via associative scan, fp32."""
+    def combine(p, q):
+        a1, x1 = p
+        a2, x2 = q
+        return a1 * a2, a2 * x1 + x2
+
+    _, h = jax.lax.associative_scan(
+        combine, (a.astype(jnp.float32), x.astype(jnp.float32)), axis=1)
+    return h.astype(x.dtype)

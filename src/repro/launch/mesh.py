@@ -1,0 +1,33 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (the dry-run sets the fake-device flag first)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.topology import MeshTopology, multi_pod, single_pod
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_topo(topo: MeshTopology):
+    names = topo.axis_names()
+    shape = tuple(topo.axis_sizes[a] for a in names)
+    return jax.make_mesh(shape, names,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+
+
+def topo_for(*, multi_pod_flag: bool) -> MeshTopology:
+    return multi_pod() if multi_pod_flag else single_pod()
+
+
+def small_topo(pods: int = 2, data: int = 2, model: int = 2) -> MeshTopology:
+    """Test-scale topology (8 fake CPU devices)."""
+    if pods > 1:
+        return MeshTopology({"pod": pods, "data": data, "model": model})
+    return MeshTopology({"data": data, "model": model})

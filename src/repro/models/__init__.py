@@ -1,0 +1,3 @@
+from repro.models.model_zoo import Model, ParallelCtx, build, build_by_name, make_batch
+
+__all__ = ["Model", "ParallelCtx", "build", "build_by_name", "make_batch"]

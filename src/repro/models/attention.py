@@ -1,0 +1,253 @@
+"""Attention: blocked online-softmax (flash-style, pure jnp) + parallel modes.
+
+Two sharded modes (chosen per arch by head divisibility):
+  * head_tp — q heads sharded over tp; x all-gathered, out reduce-scattered
+              (Megatron-SP).  Requires H % tp == 0; kv heads are
+              replicated-compute when kv % tp != 0 (GQA: kv tiny).
+  * cp      — context parallel: tokens stay sequence-sharded; full KV is
+              all-gathered (small for GQA); q-chunk attention is local.
+              Works for ANY head count — the universal fallback.
+
+Decode uses split-K: the KV cache is T-sharded over tp, each chip computes a
+partial softmax over its chunk, merged with a logsumexp psum (FlashDecoding).
+
+The KV-block scan body is counted once by HLO cost analysis; the roofline adds
+the analytic attention-FLOP correction (``attn_flops``).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm, rope
+from repro.models.parallel import ParallelCtx
+
+NEG = -1e30
+
+
+def _kv_head_map(nq_local: int, q_head_offset, H: int, kv: int,
+                 kv_head_offset=0):
+    """kv-head index (local to the kv shard) for each local q head."""
+    group = H // kv
+    return (q_head_offset + jnp.arange(nq_local)) // group - kv_head_offset
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset=0, q_head_offset=0, kv_head_offset=0,
+                    H: Optional[int] = None, kv_total: Optional[int] = None,
+                    block: int = 1024, bf16_probs: bool = False) -> jax.Array:
+    """q: (B, Tq, nq, hd); k, v: (B, Tkv, kv, hd) (full KV).
+
+    ``q_offset``: global position of q[.., 0, ..] (sequence-parallel chunk);
+    ``q_head_offset``: global head index of q head 0 (head-parallel shard).
+    Online softmax over KV blocks — memory O(Tq * block).
+    """
+    B, Tq, nq, hd = q.shape
+    Tkv, kv = k.shape[1], k.shape[2]
+    H = H if H is not None else nq
+    scale = 1.0 / math.sqrt(hd)
+    block = min(block, Tkv)
+    pad = (-Tkv) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    n_blocks = (Tkv + pad) // block
+
+    kvmap = _kv_head_map(nq, q_head_offset, H, kv_total or kv,
+                         kv_head_offset)                   # (nq,)
+    qpos = q_offset + jnp.arange(Tq)                       # (Tq,)
+
+    kb = k.reshape(B, n_blocks, block, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, n_blocks, block, kv, hd).transpose(1, 0, 2, 3, 4)
+    qf = (q * scale).astype(jnp.float32)
+
+    def body(carry, inp):
+        o, m, l = carry
+        bidx, kblk, vblk = inp
+        kpos = bidx * block + jnp.arange(block)            # (block,)
+        kq = jnp.take(kblk, kvmap, axis=2)                 # (B, block, nq, hd)
+        vq = jnp.take(vblk, kvmap, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kq.astype(jnp.float32))
+        mask = kpos[None, :] < Tkv                         # padding
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask[None, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        if bf16_probs:
+            # §Perf opt: the (bq, block)-sized probabilities move to the PV
+            # matmul in bf16 (fp32 row stats m/l keep the softmax exact).
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(q.dtype),
+                            vq.astype(q.dtype),
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bhqk,bkhd->bhqd", p, vq.astype(jnp.float32))
+        o_new = o * alpha[..., None] + pv
+        return (o_new, m_new, l_new), None
+
+    o0 = jnp.zeros((B, nq, Tq, hd), jnp.float32)
+    m0 = jnp.full((B, nq, Tq), NEG, jnp.float32)
+    l0 = jnp.zeros((B, nq, Tq), jnp.float32)
+    (o, m, l), _ = lax.scan(body, (o0, m0, l0),
+                            (jnp.arange(n_blocks), kb, vb))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)       # (B, Tq, nq, hd)
+
+
+def attn_flops(B: int, Tq: int, Tkv: int, H: int, hd: int, *,
+               causal: bool, window: Optional[int]) -> float:
+    """Analytic matmul FLOPs of one attention call (QK^T + PV), global."""
+    if window is not None:
+        eff = min(window, Tkv)
+        pairs = B * Tq * eff
+    elif causal and Tq == Tkv:
+        pairs = B * Tq * (Tq + 1) // 2
+    else:
+        pairs = B * Tq * Tkv
+    return 4.0 * pairs * H * hd
+
+
+# ---------------------------------------------------------------------------
+# Train/prefill block
+# ---------------------------------------------------------------------------
+
+def attn_block(x_sp: jax.Array, p: dict, meta: dict, ctx: ParallelCtx, cfg, *,
+               mode: str, window: Optional[int], t_offset: int = 0,
+               return_kv: bool = False):
+    """x_sp: (B, T/tp, d).  Returns new x_sp (and this layer's (k, v) local
+    T-chunk when ``return_kv`` — used by prefill to build the cache)."""
+    H, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    eps = cfg.norm_eps
+    B, T_loc, d = x_sp.shape
+    h = rms_norm(x_sp, ctx.gather_w(p["ln"], meta["ln"].fsdp_dim), eps)
+
+    wq = ctx.gather_w(p["wq"], meta["wq"].fsdp_dim)
+    wkv = ctx.gather_w(p["wkv"], meta["wkv"].fsdp_dim)
+    wo = ctx.gather_w(p["wo"], meta["wo"].fsdp_dim)
+
+    if mode == "head_tp":
+        hg = ctx.ag_tokens(h)                               # (B, T, d)
+        T = hg.shape[1]
+        q = (hg @ wq).reshape(B, T, H // ctx.tp, hd)
+        kvp = jnp.einsum("btd,dgk->btgk", hg, wkv)
+        kvp = kvp.reshape(B, T, 2, wkv.shape[-1] // hd, hd)
+        q_off, q_hoff = 0, ctx.tp_rank * (H // ctx.tp)
+    else:  # cp
+        q = (h @ wq).reshape(B, T_loc, H, hd)
+        kvp = jnp.einsum("btd,dgk->btgk", h, wkv)
+        kvp = kvp.reshape(B, T_loc, 2, kv, hd)
+        q_off, q_hoff = ctx.tp_rank * T_loc, 0
+    k, v = kvp[:, :, 0], kvp[:, :, 1]
+
+    if cfg.qk_norm:
+        q = rms_norm(q, ctx.gather_w(p["q_norm"], meta["q_norm"].fsdp_dim),
+                     eps)
+        k = rms_norm(k, ctx.gather_w(p["k_norm"], meta["k_norm"].fsdp_dim),
+                     eps)
+    if cfg.pos == "rope":
+        rdt = ctx.compute_dtype if ctx.has("bf16_rope") else None
+        tq = t_offset + q_off + jnp.arange(q.shape[1])
+        tk = t_offset + (jnp.arange(k.shape[1]) if mode == "head_tp"
+                         else q_off + jnp.arange(T_loc))
+        q = rope(q, tq, cfg.rope_theta, rdt)
+        k = rope(k, tk, cfg.rope_theta, rdt)
+
+    k_loc, v_loc = k, v  # this chip's T-chunk (cp) / full (head_tp)
+    if mode == "cp":
+        k = ctx.ag_tokens(k)                                # (B, T, kv, hd)
+        v = ctx.ag_tokens(v)
+        q_pos_off = t_offset + q_off
+    else:
+        q_pos_off = t_offset
+    kv_local = k.shape[2]
+    kv_hoff = ctx.tp_rank * kv_local if kv_local != kv else 0
+
+    import functools as _ft
+    attn_f = _ft.partial(flash_attention, causal=True, window=window,
+                         q_offset=q_pos_off, q_head_offset=q_hoff,
+                         kv_head_offset=kv_hoff, H=H, kv_total=kv,
+                         bf16_probs=ctx.has("bf16_probs"))
+    if ctx.has("remat_attn"):
+        # §Perf opt: recompute attention in the bwd instead of saving the
+        # per-block fp32 intermediates from the fwd residuals.
+        attn_f = jax.checkpoint(attn_f)
+    o = attn_f(q, k, v)
+    o = o.reshape(o.shape[0], o.shape[1], -1)
+    y = o @ wo
+    if mode == "head_tp":
+        out = x_sp + ctx.rs_tokens(y)
+        if return_kv:
+            # cache stores the T-sharded chunk: slice mine from full k, v
+            k_loc = lax.dynamic_slice_in_dim(k, ctx.tp_rank * T_loc, T_loc, 1)
+            v_loc = lax.dynamic_slice_in_dim(v, ctx.tp_rank * T_loc, T_loc, 1)
+    else:
+        out = x_sp + y
+    if return_kv:
+        return out, (k_loc, v_loc)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Decode (split-K over the T-sharded cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     ctx: ParallelCtx, *, pos, H: int,
+                     window: Optional[int] = None,
+                     ring: bool = False) -> jax.Array:
+    """q: (B, 1, H, hd) (all heads, replicated-compute);
+    k/v_cache: (B, S/tp, kv, hd) local chunk.  ``pos``: current global
+    position (scalar).  ``ring``: cache is a ring buffer of size ``window``
+    (global kv index = pos - window + 1 .. pos, stored mod window)."""
+    B, _, nH, hd = q.shape
+    S_loc, kv = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    base = ctx.tp_rank * S_loc
+    slot = base + jnp.arange(S_loc)                         # local slots
+    if ring:
+        W = window
+        # slot s holds global index: the largest g <= pos with g % W == s
+        gidx = pos - ((pos - slot) % W)
+        valid = (gidx >= 0) & (gidx <= pos) & (pos - gidx < W)
+    else:
+        gidx = slot
+        valid = gidx <= pos
+        if window is not None:
+            valid &= (pos - gidx) < window
+
+    kvmap = _kv_head_map(nH, 0, H, kv)
+    kq = jnp.take(k_cache, kvmap, axis=2).astype(jnp.float32)
+    vq = jnp.take(v_cache, kvmap, axis=2).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kq)
+    s = jnp.where(valid[None, None, None, :], s, NEG)
+    m = jnp.max(s, axis=-1)                                 # (B, H, 1)
+    M = ctx.pmax_tp(m)
+    p = jnp.exp(s - M[..., None])
+    l = ctx.psum_tp(jnp.sum(p, axis=-1))
+    o = ctx.psum_tp(jnp.einsum("bhqk,bkhd->bhqd", p, vq))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)        # (B, 1, H, hd)
+
+
+def cache_write(cache: jax.Array, new: jax.Array, ctx: ParallelCtx, *, pos,
+                window: Optional[int] = None) -> jax.Array:
+    """Write (B, 1, kv, hd) into the T-sharded (B, S/tp, kv, hd) cache at
+    global position ``pos`` (ring-buffer when ``window``).  Every chip
+    computes the same ``new``; only the owner's mask hits."""
+    S_loc = cache.shape[1]
+    gpos = pos % window if window is not None else pos
+    owner = gpos // S_loc
+    local = gpos - owner * S_loc
+    hit = (jnp.arange(S_loc) == local) & (ctx.tp_rank == owner) \
+        if ctx.tp_axis else (jnp.arange(S_loc) == local)
+    return jnp.where(hit[None, :, None, None], new.astype(cache.dtype), cache)

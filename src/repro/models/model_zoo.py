@@ -1,0 +1,44 @@
+"""Public model API: build a Model from a config name + parallel context."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.models.parallel import ParallelCtx
+from repro.models.transformer import Model, build
+
+__all__ = ["Model", "build", "build_by_name", "make_batch", "ParallelCtx"]
+
+
+def build_by_name(name: str, ctx: Optional[ParallelCtx] = None,
+                  data: int = 1, reduced: bool = False, **red_kw) -> Model:
+    cfg = get_config(name)
+    if reduced:
+        cfg = cfg.reduced(**red_kw)
+    return build(cfg, ctx or ParallelCtx.single(), data=data)
+
+
+def make_batch(cfg: ModelConfig, B: int, T: int, seed: int = 0,
+               np_module=np) -> dict:
+    """Host-side synthetic batch with the right structure for the family."""
+    rng = np.random.default_rng(seed)
+    if cfg.frontend == "encodec":
+        return {
+            "frames": jnp.asarray(rng.normal(
+                size=(B, T, cfg.d_frontend)).astype(np.float32)),
+            "labels": jnp.asarray(rng.integers(
+                0, cfg.vocab, size=(B, T)).astype(np.int32)),
+        }
+    out = {"tokens": jnp.asarray(rng.integers(
+        0, cfg.vocab, size=(B, T + 1)).astype(np.int32))}
+    if cfg.frontend == "vit":
+        out["patches"] = jnp.asarray(rng.normal(
+            size=(B, cfg.n_prefix, cfg.d_frontend)).astype(np.float32))
+    return out

@@ -1,0 +1,161 @@
+"""ParallelCtx: how model math maps onto the mesh, in both collective modes.
+
+Models in this framework are written as *local* shard_map bodies against a
+``ParallelCtx``.  With ``ctx = ParallelCtx.single()`` every collective helper
+is a no-op, so the exact same model code runs on one CPU device (smoke tests)
+and on the production mesh.
+
+Axis roles:
+  * ``tp_axis``   ("model") — tensor/expert parallelism + sequence-parallel
+                  residuals (Megatron-SP layout: activations between blocks
+                  are token-sharded over tp).
+  * ``fsdp_axes`` — where parameters are *stored*: in **hier** mode (the
+                  paper's MPI+MPI scheme) weights live once per pod, sharded
+                  over ``data`` (the MPI-3 shared window); in **naive** mode
+                  (pure-MPI analogue) they are replicated over data/pod.
+  * ``dp_axes``   — batch sharding (("pod","data") or ("data",)).
+  * ``pod_axis``  — the bridge (slow tier); gradient reductions cross it once
+                  per shard (multi-leader bridge exchange).
+
+Weight access goes through ``gather_w`` (the "load from the node's shared
+buffer": an intra-pod all-gather at use time in hier mode, identity in naive
+mode); gradient reduction goes through ``reduce_grads``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives as cc
+from repro.core import shared_buffer as sb
+
+
+@dataclasses.dataclass(frozen=True)
+class ParallelCtx:
+    tp_axis: Optional[str] = None          # "model"
+    fsdp_axes: tuple[str, ...] = ()        # ("data",) in hier mode
+    dp_axes: tuple[str, ...] = ()          # ("pod","data") / ("data",)
+    pod_axis: Optional[str] = None         # "pod" on the multi-pod mesh
+    tp: int = 1                            # size of tp_axis
+    mode: str = "hier"                     # hier | naive
+    compute_dtype: jnp.dtype = jnp.bfloat16
+    # beyond-paper perf options (EXPERIMENTS.md §Perf); () = paper-faithful
+    #   bf16_rope   — rotate q/k in compute dtype (fp32 angle tables only)
+    #   bf16_xent   — bf16 logits, fp32 reductions in the streamed loss
+    #   decode2d    — 2D (head-group x seq-group) decode attention: TP-
+    #                 stationary attn weights, no per-step FSDP gather
+    opts: frozenset = frozenset()
+
+    @staticmethod
+    def single(mode: str = "hier", opts=frozenset()) -> "ParallelCtx":
+        return ParallelCtx(mode=mode, compute_dtype=jnp.float32,
+                           opts=frozenset(opts))
+
+    def has(self, opt: str) -> bool:
+        return opt in self.opts
+
+    # ---- indices -----------------------------------------------------------
+    @property
+    def tp_rank(self):
+        return lax.axis_index(self.tp_axis) if self.tp_axis else 0
+
+    def tp_group_rank(self, group: int):
+        """(outer, inner) coords when the tp axis is factored as
+        (tp//group, group): outer = rank // group, inner = rank % group."""
+        r = self.tp_rank
+        return r // group, r % group
+
+    # ---- weight load/store (the shared-memory window) -----------------------
+    def gather_w(self, w: jax.Array, fsdp_dim: Optional[int]) -> jax.Array:
+        """Load a weight from the pod-shared store.  hier: intra-pod
+        all-gather of the FSDP shards (cast first so bf16 moves, not fp32);
+        naive: local private copy, no traffic."""
+        w = w.astype(self.compute_dtype)
+        if self.mode == "hier" and self.fsdp_axes and fsdp_dim is not None:
+            w = sb.fsdp_gather(w, fsdp_dim, self.fsdp_axes)
+        return w
+
+    def reduce_grads(self, grads):
+        """Bridge gradient reduction.  Gradients already match the param
+        layout w.r.t. data (AD transposes the hier gathers into intra-pod
+        reduce-scatters); what remains is the cross-pod (bridge) psum in hier
+        mode, or the flat (pod,data) psum in naive mode."""
+        if self.mode == "hier":
+            if self.pod_axis is None:
+                return grads
+            return jax.tree.map(lambda g: lax.psum(g, self.pod_axis), grads)
+        axes = self.dp_axes
+        if not axes:
+            return grads
+        return jax.tree.map(lambda g: lax.psum(g, axes), grads)
+
+    # ---- tp collectives ------------------------------------------------------
+    def ag_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:
+        """Sequence-parallel all-gather: (B, T/tp, d) -> (B, T, d).
+        Output is checkpoint-named so the save_ag remat policy can keep it
+        across the bwd instead of re-gathering (§Perf)."""
+        if not self.tp_axis:
+            return x
+        from jax.ad_checkpoint import checkpoint_name
+        out = lax.all_gather(x, self.tp_axis, axis=dim, tiled=True)
+        return checkpoint_name(out, "ag_out")
+
+    def rs_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:
+        """Sequence-parallel reduce-scatter: partial (B, T, d) -> (B, T/tp, d)."""
+        if not self.tp_axis:
+            return x
+        return lax.psum_scatter(x, self.tp_axis, scatter_dimension=dim,
+                                tiled=True)
+
+    def psum_tp(self, x: jax.Array) -> jax.Array:
+        if not self.tp_axis:
+            return x
+        return lax.psum(x, self.tp_axis)
+
+    def group_all_gather(self, x: jax.Array, *, group: int, dim: int
+                         ) -> jax.Array:
+        """All-gather within contiguous subgroups of the tp axis (the
+        axis_index_groups trick used for mLSTM head groups and split-K)."""
+        if not self.tp_axis or group == 1:
+            return x
+        n = self.tp
+        groups = [list(range(s, s + group)) for s in range(0, n, group)]
+        return lax.all_gather(x, self.tp_axis, axis=dim, tiled=True,
+                              axis_index_groups=groups)
+
+    def group_psum(self, x: jax.Array, *, group: int) -> jax.Array:
+        if not self.tp_axis or group == 1:
+            return x
+        n = self.tp
+        groups = [list(range(s, s + group)) for s in range(0, n, group)]
+        return lax.psum(x, self.tp_axis, axis_index_groups=groups)
+
+    def pmax_tp(self, x: jax.Array) -> jax.Array:
+        """Cross-shard max.  Implemented as all_gather+max rather than pmax:
+        pmax has no JVP rule, and this shows up inside differentiated loss
+        code (as a softmax stabilizer)."""
+        if not self.tp_axis:
+            return x
+        g = lax.all_gather(x, self.tp_axis)   # (tp, ...)
+        return jnp.max(g, axis=0)
+
+    # ---- sizes ---------------------------------------------------------------
+    def shard(self, n: int) -> int:
+        assert n % self.tp == 0, f"{n} not divisible by tp={self.tp}"
+        return n // self.tp
+
+
+def tp_slice(x: jax.Array, rank, tp: int, dim: int) -> jax.Array:
+    """Dynamic slice of the tp-local piece along ``dim`` (used where a weight
+    is stored unsharded but consumed shard-wise)."""
+    size = x.shape[dim] // tp
+    start = [0] * x.ndim
+    start[dim] = rank * size
+    sizes = list(x.shape)
+    sizes[dim] = size
+    return lax.dynamic_slice(x, start, sizes)

@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence is elementwise-diagonal, so it tensor-parallelizes perfectly:
+all d_rnn channels shard over tp, the temporal scan is a fully-parallel
+``lax.associative_scan`` per channel (counted exactly by HLO cost analysis),
+and the only collectives are the standard SP all-gather / reduce-scatter.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm
+from repro.models.parallel import ParallelCtx
+from repro.models.xlstm import causal_conv1d
+
+C_COEF = 8.0
+
+
+def rglru_scan(log_a: jax.Array, x: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + x_t, elementwise.  (B, T, C) inputs."""
+    def combine(p, q):
+        la1, x1 = p
+        la2, x2 = q
+        return la1 + la2, jnp.exp(la2) * x1 + x2
+
+    _, h = lax.associative_scan(combine, (log_a, x), axis=1)
+    return h
+
+
+def rglru_block(x_sp, p, meta, ctx: ParallelCtx, cfg, *,
+                state: dict | None = None, decode: bool = False,
+                return_state: bool = False):
+    """x_sp: (B, T/tp, d) or (B, 1, d) decode."""
+    eps = cfg.norm_eps
+    h_in = rms_norm(x_sp, ctx.gather_w(p["ln"], meta["ln"].fsdp_dim), eps)
+    hg = h_in if decode else ctx.ag_tokens(h_in)             # (B, T, d)
+    B, T, _ = hg.shape
+
+    w_x = ctx.gather_w(p["w_x"], meta["w_x"].fsdp_dim)       # (d, 2, dr/tp)
+    u = jnp.einsum("btd,dgf->btgf", hg, w_x)
+    y_gate = jax.nn.gelu(u[:, :, 0])                         # (B,T,dr/tp)
+    x_br = u[:, :, 1]
+
+    conv_w = ctx.gather_w(p["conv"], meta["conv"].fsdp_dim)  # (dr/tp, K)
+    if decode:
+        cx = state["conv"]
+        xin = jnp.concatenate([cx, x_br], axis=1)
+        xc = causal_conv1d(xin, conv_w)[:, -1:]
+        new_conv = xin[:, 1:]
+    else:
+        xc = causal_conv1d(x_br, conv_w)
+
+    w_rg = ctx.gather_w(p["w_rg"], meta["w_rg"].fsdp_dim)    # (d, 2, dr/tp)
+    g = jnp.einsum("btd,dgf->btgf", hg, w_rg).astype(jnp.float32)
+    r = jax.nn.sigmoid(g[:, :, 0])
+    i = jax.nn.sigmoid(g[:, :, 1])
+    lam = ctx.gather_w(p["lam"], meta["lam"].fsdp_dim).astype(jnp.float32)
+    log_a = -C_COEF * jax.nn.softplus(lam) * r               # (B,T,dr/tp)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    gx = (beta * i * xc.astype(jnp.float32))
+
+    if decode:
+        h_prev = state["h"]                                  # (B, dr/tp)
+        h_new = jnp.exp(log_a[:, 0]) * h_prev + gx[:, 0]
+        h_seq = h_new[:, None]
+        new_state = {"h": h_new, "conv": new_conv}
+    else:
+        h_seq = rglru_scan(log_a, gx)                        # (B,T,dr/tp)
+        new_state = None
+        if return_state:
+            K = cfg.conv_kernel
+            new_state = {"h": h_seq[:, -1],
+                         "conv": x_br[:, -(K - 1):].astype(x_br.dtype)}
+
+    o = (h_seq.astype(hg.dtype) * y_gate)
+    w_out = ctx.gather_w(p["w_out"], meta["w_out"].fsdp_dim)  # (dr/tp, d)
+    y = o @ w_out
+    if decode:
+        return x_sp + ctx.psum_tp(y), new_state
+    out = x_sp + ctx.rs_tokens(y)
+    return (out, new_state) if return_state else out
+
+
+def rglru_state_init(cfg, B: int, ctx: ParallelCtx, dtype=jnp.float32):
+    dr_loc = cfg.rnn_width // max(ctx.tp, 1)
+    return {"h": jnp.zeros((B, dr_loc), jnp.float32),
+            "conv": jnp.zeros((B, cfg.conv_kernel - 1, dr_loc), dtype)}

@@ -1,0 +1,56 @@
+"""AdamW on parameter shards.
+
+In hier mode the optimizer state inherits the paper's one-copy-per-pod
+layout for free: m/v are allocated exactly like the FSDP param shards, the
+update runs on the shard, and nothing is ever replicated (ZeRO-style, but
+derived from the paper's shared-window rule rather than bolted on).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def adamw_update(params, grads, m, v, step, *, lr, weight_decay=0.1,
+                 b1=0.9, b2=0.95, eps=1e-8):
+    stepf = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** stepf
+    c2 = 1.0 - b2 ** stepf
+
+    def upd(p, g, m_, v_):
+        g32 = g.astype(jnp.float32)
+        m_n = b1 * m_ + (1.0 - b1) * g32
+        v_n = b2 * v_ + (1.0 - b2) * g32 * g32
+        mhat = m_n / c1
+        vhat = v_n / c2
+        p32 = p.astype(jnp.float32)
+        p_n = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return p_n.astype(p.dtype), m_n, v_n
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(m)
+    flat_v = jax.tree.leaves(v)
+    out = [upd(p, g, m_, v_) for p, g, m_, v_ in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        stepf = jnp.asarray(step, jnp.float32)
+        warm = stepf / jnp.maximum(warmup, 1)
+        prog = jnp.clip((stepf - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(stepf < warmup, warm, 0.1 + 0.9 * cos)
+    return lr

@@ -1,0 +1,106 @@
+"""Fault tolerance & elasticity: restart manager, straggler watchdog,
+elastic mesh rebuild.
+
+What runs for real on this CPU container: checkpoint/restart (exercised in
+tests and examples), the straggler EWMA policy (driven with recorded step
+times), and elastic re-sharding between the (2,16,16) and (16,16) meshes
+(dry-run tested).  What a real fleet adds is only transport: heartbeats over
+DCN and a coordinator — the decision logic is all here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+
+# ---------------------------------------------------------------------------
+# Straggler detection (per-host step-time EWMA vs fleet median)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    """Flags hosts whose EWMA step time exceeds ``threshold`` x the fleet
+    median for ``patience`` consecutive steps.  On a synchronous-SPMD fleet
+    one slow host gates every step, so the mitigation is replacement
+    (re-pool a hot spare) or eviction + elastic shrink — both are surfaced
+    as actions for the launcher."""
+    alpha: float = 0.2
+    threshold: float = 1.5
+    patience: int = 5
+
+    def __post_init__(self):
+        self.ewma: dict[int, float] = {}
+        self.strikes: dict[int, int] = {}
+
+    def observe(self, step_times: dict[int, float]) -> list[int]:
+        """step_times: host_id -> wall seconds for this step.  Returns hosts
+        to evict/replace."""
+        for h, t in step_times.items():
+            prev = self.ewma.get(h, t)
+            self.ewma[h] = (1 - self.alpha) * prev + self.alpha * t
+        med = float(np.median(list(self.ewma.values())))
+        evict = []
+        for h, e in self.ewma.items():
+            if e > self.threshold * med:
+                self.strikes[h] = self.strikes.get(h, 0) + 1
+                if self.strikes[h] >= self.patience:
+                    evict.append(h)
+            else:
+                self.strikes[h] = 0
+        return evict
+
+
+# ---------------------------------------------------------------------------
+# Elastic topology: rebuild the mesh from surviving resources
+# ---------------------------------------------------------------------------
+
+def elastic_topology(n_chips: int, *, model: int = 16):
+    """Largest (pod, data, model) topology that fits ``n_chips``: model is
+    fixed (TP degree is a model property), pods shrink first, then data.
+    Returns a MeshTopology; raises if fewer than one model group survives."""
+    from repro.core.topology import MeshTopology
+    if n_chips < model:
+        raise ValueError(f"need >= {model} chips, have {n_chips}")
+    data = n_chips // model
+    pods = 1
+    # prefer 256-chip pods (16 data x 16 model), extras become pods
+    if data >= 32 and data % 16 == 0:
+        pods, data = data // 16, 16
+    if pods > 1:
+        return MeshTopology({"pod": pods, "data": data, "model": model})
+    return MeshTopology({"data": data, "model": model})
+
+
+# ---------------------------------------------------------------------------
+# Restart manager
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RestartManager:
+    """Drives the save/restore cycle: periodic async saves, resume from the
+    newest intact checkpoint after a crash, re-shard on a changed mesh."""
+    ckpt: Checkpointer
+    save_every: int = 100
+
+    def maybe_save(self, step: int, state) -> None:
+        if step % self.save_every == 0 and step > 0:
+            self.ckpt.save(step, state)
+
+    def resume_or_init(self, init_fn: Callable[[], object], *,
+                       shardings=None):
+        """Returns (state, start_step)."""
+        import jax
+        step = self.ckpt.latest_step()
+        if step is None:
+            return init_fn(), 0
+        template = jax.eval_shape(init_fn)
+        state, step = self.ckpt.restore(
+            jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), template),
+            shardings=shardings)
+        return state, step

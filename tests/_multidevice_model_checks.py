@@ -1,0 +1,215 @@
+"""Distributed model correctness: shard_map (hier + naive) vs single-device.
+
+8 fake CPU devices; meshes (2,2,2)=(pod,data,model) and (1,8)->(data=1,model=8)
+exercise head_tp, cp, MoE ep x tp_ff, mLSTM head groups, sLSTM batch groups.
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import make_mesh_from_topo, small_topo  # noqa: E402
+from repro.models import build_by_name, make_batch  # noqa: E402
+from repro.models.parallel import ParallelCtx  # noqa: E402
+from repro.models.transformer import build  # noqa: E402
+from repro.runtime.steps import make_train_step  # noqa: E402
+
+CHECKS = []
+
+
+def check(fn):
+    CHECKS.append(fn)
+    return fn
+
+
+def single_device_step(cfg, batch, seed=0, lr=1e-3):
+    """Reference: same math, ParallelCtx.single(), plain jax."""
+    from repro.runtime.steps import make_ctx
+    from repro.core.topology import MeshTopology
+    topo1 = MeshTopology({"data": 1, "model": 1}, slow_axes=())
+    mesh1 = make_mesh_from_topo(topo1)
+    bundle = make_train_step(cfg, topo1, mesh1, mode="naive", lr=lr,
+                             compute_dtype=jnp.float32)
+    state = bundle.init_state(seed)
+    new_state, metrics = jax.jit(bundle.fn)(state, batch)
+    return state, new_state, metrics
+
+
+def dist_step(cfg, batch, topo, mode, seed=0, lr=1e-3):
+    mesh = make_mesh_from_topo(topo)
+    bundle = make_train_step(cfg, topo, mesh, mode=mode, lr=lr,
+                             compute_dtype=jnp.float32)
+    state = bundle.init_state(seed)
+    new_state, metrics = jax.jit(bundle.fn)(state, batch)
+    return state, new_state, metrics
+
+
+def compare(cfg, batch, topo, rtol=2e-4, atol=2e-5):
+    _, ref_state, ref_metrics = single_device_step(cfg, batch)
+    for mode in ("hier", "naive"):
+        _, st, mt = dist_step(cfg, batch, topo, mode)
+        np.testing.assert_allclose(float(mt["loss"]),
+                                   float(ref_metrics["loss"]),
+                                   rtol=rtol, err_msg=f"{mode} loss")
+        np.testing.assert_allclose(float(mt["gnorm"]),
+                                   float(ref_metrics["gnorm"]),
+                                   rtol=5e-3, err_msg=f"{mode} gnorm")
+        # params after one update must match the single-device reference
+        ref_emb = np.asarray(ref_state["params"]["embed"])
+        got_emb = np.asarray(jax.device_get(st["params"]["embed"]))
+        np.testing.assert_allclose(got_emb, ref_emb, rtol=rtol, atol=atol,
+                                   err_msg=f"{mode} embed update")
+
+
+@check
+def dense_head_tp_multipod():
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2, d_model=64, n_heads=4)
+    batch = make_batch(cfg, B=4, T=32, seed=1)
+    compare(cfg, batch, small_topo(2, 2, 2))
+
+
+@check
+def dense_cp_mode():
+    # n_heads=3 % tp=2 != 0 -> context-parallel attention
+    cfg = get_config("starcoder2-7b").reduced(n_layers=2, d_model=48,
+                                              n_heads=3, d_ff=64)
+    batch = make_batch(cfg, B=4, T=32, seed=2)
+    compare(cfg, batch, small_topo(2, 2, 2))
+
+
+@check
+def moe_ep_tp():
+    cfg = get_config("granite-moe-3b-a800m").reduced(n_layers=2, d_model=64,
+                                                     n_heads=4)
+    # E=4 over tp=2 -> ep=2; widen capacity so no tokens drop (determinism)
+    import dataclasses
+    from repro.configs.base import MoESpec
+    cfg = dataclasses.replace(cfg, moe=MoESpec(4, 2, 32, capacity_factor=8.0))
+    batch = make_batch(cfg, B=4, T=32, seed=3)
+    compare(cfg, batch, small_topo(2, 2, 2))
+
+
+@check
+def xlstm_head_groups():
+    # tp=4 > nh=2 -> g=2 chips per head (group all-gather path) + sLSTM
+    cfg = get_config("xlstm-1.3b").reduced(n_layers=8, d_model=64, n_heads=2)
+    batch = make_batch(cfg, B=4, T=32, seed=4)
+    compare(cfg, batch, small_topo(2, 1, 4))
+
+
+@check
+def recurrentgemma_hybrid():
+    cfg = get_config("recurrentgemma-9b").reduced(n_layers=3, d_model=64,
+                                                  n_heads=4)
+    batch = make_batch(cfg, B=4, T=32, seed=5)
+    compare(cfg, batch, small_topo(2, 2, 2))
+
+
+@check
+def vlm_and_audio():
+    for name, seed in (("internvl2-1b", 6), ("musicgen-medium", 7)):
+        cfg = get_config(name).reduced(n_layers=2, d_model=64, n_heads=4)
+        batch = make_batch(cfg, B=4, T=32, seed=seed)
+        compare(cfg, batch, small_topo(2, 2, 2))
+
+
+def main():
+    failures = []
+    for fn in CHECKS:
+        try:
+            fn()
+            print(f"PASS {fn.__name__}")
+        except Exception as e:  # noqa: BLE001
+            failures.append(fn.__name__)
+            import traceback
+            print(f"FAIL {fn.__name__}:")
+            traceback.print_exc(limit=8)
+    if failures:
+        raise SystemExit(1)
+    print("ALL OK")
+
+
+
+
+def _register_decode2d():
+    """decode2d must match baseline decode logits exactly (qwen3-family
+    reduced arch: H=8, kv=4, tp=4 -> g_h=4? gcd(8,4,4)=4, g_s=1; use tp=8
+    for g_h=4,g_s=2... run on (1,1,8): gcd(8,4,8)=4 -> g_h=4, g_s=2)."""
+    import dataclasses as _dc
+    import numpy as _np
+    from repro.models import meta as _M
+    from repro.runtime.steps import make_serve_steps, make_ctx
+    from repro.launch.mesh import make_mesh_from_topo
+    from repro.core.topology import MeshTopology
+
+    def decode2d_matches_baseline():
+        cfg = get_config("qwen3-0.6b").reduced(n_layers=2, d_model=64,
+                                               n_heads=8, n_kv=4)
+        topo = MeshTopology({"data": 1, "model": 8}, slow_axes=())
+        mesh = make_mesh_from_topo(topo)
+        B, T0, smax = 2, 16, 32
+        batch = make_batch(cfg, B=B, T=T0, seed=9)
+        outs = {}
+        for opts in ((), ("decode2d",)):
+            sb = make_serve_steps(cfg, topo, mesh, mode="hier",
+                                  global_batch=B, s_max=smax, opts=opts,
+                                  compute_dtype=jnp.float32)
+            params = sb.model.init_params(0)
+            if opts:
+                # duplicate baseline attn weights into 2D layout so both
+                # runs share identical math
+                base = make_serve_steps(cfg, topo, mesh, mode="hier",
+                                        global_batch=B, s_max=smax,
+                                        compute_dtype=jnp.float32)
+                bp = base.model.init_params(0)
+                for i in range(len(cfg.pattern)):
+                    a = params["units"][f"b{i}"]["attn"]
+                    ab = bp["units"][f"b{i}"]["attn"]
+                    for kind in ("wq", "wkv", "wo"):
+                        stacked = _np.stack([
+                            _M.relayout_attn_decode2d(w_, cfg, 8, kind)
+                            for w_ in _np.asarray(ab[kind])])
+                        # (U, tp, ...) -> param layout (U, tp, ...)
+                        a[kind] = jnp.asarray(stacked)
+                params = dict(params, units=params["units"])
+                for k_ in ("embed", "unembed", "final_ln"):
+                    if k_ in bp:
+                        params[k_] = bp[k_]
+                for i in range(len(cfg.pattern)):
+                    pu = params["units"][f"b{i}"]
+                    bu = bp["units"][f"b{i}"]
+                    pu["attn"]["ln"] = bu["attn"]["ln"]
+                    if "q_norm" in bu["attn"]:
+                        pu["attn"]["q_norm"] = bu["attn"]["q_norm"]
+                        pu["attn"]["k_norm"] = bu["attn"]["k_norm"]
+                    if "ffn" in bu:
+                        pu["ffn"] = bu["ffn"]
+            tok = batch["tokens"][:, :1]
+            local_cache = jax.eval_shape(
+                lambda sb_=sb: sb_.model.cache_init(sb_.b_loc, smax))
+            cache = jax.tree.map(
+                lambda l: jnp.zeros((1, 8) + l.shape, l.dtype), local_cache)
+            logits = None
+            for t in range(4):
+                cache, logits = jax.jit(sb.decode)(
+                    params, cache, batch["tokens"][:, t:t + 1],
+                    jnp.int32(t))
+            outs[bool(opts)] = np.asarray(logits)
+        np.testing.assert_allclose(outs[True], outs[False], rtol=2e-4,
+                                   atol=2e-4)
+
+    CHECKS.append(decode2d_matches_baseline)
+
+
+_register_decode2d()
+
+
+if __name__ == "__main__":
+    main()

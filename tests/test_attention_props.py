@@ -1,0 +1,49 @@
+"""Property tests: the blocked online-softmax attention (models/attention)
+must equal exact softmax attention for any shape/mask regime, and the
+analytic FLOP formula must be consistent."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.ref import attention_ref
+from repro.models.attention import attn_flops, flash_attention
+
+
+@given(st.integers(1, 3),                    # B
+       st.sampled_from([(4, 4), (4, 2), (8, 1), (6, 3)]),  # (H, KV)
+       st.sampled_from([16, 32]),            # hd
+       st.sampled_from([17, 33, 64, 100]),   # Tq
+       st.integers(0, 2),                    # extra kv blocks
+       st.sampled_from([None, 8, 24]),       # window
+       st.integers(0, 5))                    # seed
+@settings(max_examples=60, deadline=None)
+def test_blocked_attention_equals_exact(B, heads, hd, Tq, extra, window,
+                                        seed):
+    H, KV = heads
+    Tkv = Tq + 16 * extra
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(B, Tq, H, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, Tkv, KV, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, Tkv, KV, hd)).astype(np.float32))
+    q_off = Tkv - Tq
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          q_offset=q_off, H=H, block=16)
+    # ref wants (B, H, T, hd)
+    want = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                         v.transpose(0, 2, 1, 3), causal=True, window=window,
+                         q_offset=q_off).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(st.integers(1, 8), st.integers(1, 512), st.integers(1, 16),
+       st.sampled_from([32, 64]))
+@settings(max_examples=50, deadline=None)
+def test_attn_flops_monotone_and_bounded(B, T, H, hd):
+    full = attn_flops(B, T, T, H, hd, causal=False, window=None)
+    causal = attn_flops(B, T, T, H, hd, causal=True, window=None)
+    windowed = attn_flops(B, T, T, H, hd, causal=True, window=max(T // 2, 1))
+    assert windowed <= full + 1e-6
+    assert causal <= full
+    assert causal >= full / 2 - 1e-6  # (T+1)/2T of the pairs

@@ -1,0 +1,28 @@
+"""Multi-device collective correctness (subprocess: 8 fake CPU devices).
+
+The main pytest process keeps 1 device (smoke tests must see 1 device); the
+hier/shared/naive collective equivalence checks run in a child process that
+sets XLA_FLAGS before importing jax.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_multidevice_collectives():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(REPO, "tests", "_multidevice_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert proc.returncode == 0, (
+        f"multidevice checks failed:\nSTDOUT:\n{proc.stdout}\n"
+        f"STDERR:\n{proc.stderr}")
+    assert "ALL OK" in proc.stdout

@@ -1,0 +1,28 @@
+"""Distributed (8 fake devices) model correctness — subprocess wrapper.
+
+hier (paper) and naive (pure-MPI analogue) training steps must match a
+single-device reference bit-for-bit-ish (fp32, rtol 2e-4) across all
+parallelism regimes; see tests/_multidevice_model_checks.py.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.slow
+def test_multidevice_model_correctness():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable,
+         os.path.join(REPO, "tests", "_multidevice_model_checks.py")],
+        capture_output=True, text=True, env=env, timeout=1800)
+    assert proc.returncode == 0, (
+        f"STDOUT:\n{proc.stdout[-4000:]}\nSTDERR:\n{proc.stderr[-4000:]}")
+    assert "ALL OK" in proc.stdout

@@ -1,0 +1,111 @@
+"""Integration tests: end-to-end training convergence, checkpoint-resume
+continuity, serving engine, and the SUMMA/BPMF application examples."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.topology import MeshTopology
+from repro.data.synthetic import DataConfig
+from repro.launch.mesh import make_mesh_from_topo
+from repro.runtime.steps import make_train_step
+from repro.runtime.train_loop import train
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bundle(vocab=512, lr=3e-3):
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2, d_model=128,
+                                           n_heads=4, vocab=vocab)
+    topo = MeshTopology({"data": 1, "model": 1}, slow_axes=())
+    mesh = make_mesh_from_topo(topo)
+    return cfg, make_train_step(cfg, topo, mesh, mode="hier", lr=lr,
+                                compute_dtype=jnp.float32)
+
+
+@pytest.mark.slow
+def test_training_learns_structure():
+    cfg, bundle = _bundle()
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8)
+    report = train(bundle, steps=40, data_cfg=data_cfg, log_every=0)
+    assert report.final_loss < np.log(cfg.vocab_padded) - 0.4
+    assert report.losses[-1] < report.losses[0]
+
+
+@pytest.mark.slow
+def test_checkpoint_resume_continues_loss_curve(tmp_path):
+    cfg, bundle = _bundle()
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=128, global_batch=8)
+    ck = str(tmp_path / "ck")
+    # uninterrupted run
+    full = train(bundle, steps=20, data_cfg=data_cfg, log_every=0)
+    # interrupted at step 10 (checkpoint), then resumed
+    r1 = train(bundle, steps=10, data_cfg=data_cfg, ckpt_dir=ck,
+               save_every=10, log_every=0)
+    r2 = train(bundle, steps=20, data_cfg=data_cfg, ckpt_dir=ck,
+               save_every=10, log_every=0)
+    assert r2.resumed_from == 10
+    # the resumed curve must continue the uninterrupted one exactly
+    np.testing.assert_allclose(r2.losses, full.losses[10:], rtol=1e-5)
+
+
+@pytest.mark.slow
+def test_serving_engine_greedy():
+    from repro.models import build_by_name
+    from repro.serving.engine import greedy_generate
+    model = build_by_name("qwen3-0.6b", reduced=True)
+    params = model.init_params(0)
+    prompts = np.random.default_rng(0).integers(
+        0, model.cfg.vocab, size=(2, 16)).astype(np.int32)
+    res = greedy_generate(model, params, prompts, max_new=4)
+    assert res.tokens.shape == (2, 4)
+    assert np.all(res.logprobs <= 0)
+
+
+def _run_example(name, *args, timeout=1200):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "examples", name), *args],
+        capture_output=True, text=True, env=env, timeout=timeout)
+
+
+@pytest.mark.slow
+def test_summa_example():
+    proc = _run_example("summa.py", "--n", "128")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "intra-node copy bytes/round=0" in proc.stdout  # paper C2
+
+
+@pytest.mark.slow
+def test_bpmf_example():
+    proc = _run_example("bpmf.py", "--iters", "6")
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert "time ratio" in proc.stdout  # schemes agree (asserted in-script)
+
+
+@pytest.mark.slow
+def test_grad_compression_trains_close_to_exact():
+    """int8+EF bridge compression must not derail training (tiny model)."""
+    from repro.optim.compression import int8_bridge_psum
+    cfg = get_config("qwen3-0.6b").reduced(n_layers=2, d_model=64,
+                                           n_heads=4, vocab=256)
+    topo = MeshTopology({"data": 1, "model": 1}, slow_axes=())
+    mesh = make_mesh_from_topo(topo)
+    data_cfg = DataConfig(vocab=cfg.vocab, seq_len=64, global_batch=8)
+
+    exact = make_train_step(cfg, topo, mesh, mode="hier", lr=3e-3,
+                            compute_dtype=jnp.float32)
+    comp = make_train_step(cfg, topo, mesh, mode="hier", lr=3e-3,
+                           compute_dtype=jnp.float32,
+                           compress=lambda g, axes: int8_bridge_psum(g, axes))
+    re_ = train(exact, steps=25, data_cfg=data_cfg, log_every=0)
+    rc = train(comp, steps=25, data_cfg=data_cfg, log_every=0)
+    assert abs(re_.final_loss - rc.final_loss) < 0.3

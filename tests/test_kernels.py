@@ -1,0 +1,121 @@
+"""Per-kernel allclose sweeps (interpret=True on CPU) vs the jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+F32_TOL = dict(rtol=2e-4, atol=2e-4)
+BF16_TOL = dict(rtol=2e-2, atol=2e-2)
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,Tq,Tkv,hd", [
+    (1, 4, 4, 128, 128, 64),       # MHA square
+    (2, 8, 2, 128, 128, 64),       # GQA 4:1
+    (1, 4, 1, 64, 256, 32),        # MQA, Tq != Tkv (q at the end)
+    (1, 3, 3, 96, 96, 16),         # non-128 shapes (padding path)
+    (2, 4, 2, 256, 256, 64),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(B, H, KV, Tq, Tkv, hd, dtype):
+    rng = np.random.default_rng(0)
+    q = _rand(rng, (B, H, Tq, hd), dtype)
+    k = _rand(rng, (B, KV, Tkv, hd), dtype)
+    v = _rand(rng, (B, KV, Tkv, hd), dtype)
+    q_off = Tkv - Tq
+    got = ops.flash_attention(q, k, v, causal=True, q_offset=q_off,
+                              block_q=64, block_kv=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, q_offset=q_off)
+    tol = F32_TOL if dtype == jnp.float32 else BF16_TOL
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+@pytest.mark.parametrize("window", [16, 64])
+def test_flash_attention_window(window):
+    rng = np.random.default_rng(1)
+    B, H, T, hd = 1, 2, 128, 32
+    q = _rand(rng, (B, H, T, hd), jnp.float32)
+    k = _rand(rng, (B, H, T, hd), jnp.float32)
+    v = _rand(rng, (B, H, T, hd), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=True, window=window,
+                              block_q=32, block_kv=32, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **F32_TOL)
+
+
+def test_flash_attention_noncausal():
+    rng = np.random.default_rng(2)
+    B, H, T, hd = 1, 2, 64, 32
+    q = _rand(rng, (B, H, T, hd), jnp.float32)
+    k = _rand(rng, (B, H, T, hd), jnp.float32)
+    v = _rand(rng, (B, H, T, hd), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=32, block_kv=32,
+                              interpret=True)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **F32_TOL)
+
+
+# ---------------------------------------------------------------------------
+# SUMMA panel matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [
+    (128, 128, 128), (256, 128, 384), (128, 512, 128), (96, 160, 224),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_matches_ref(M, K, N, dtype):
+    rng = np.random.default_rng(3)
+    a = _rand(rng, (M, K), dtype)
+    b = _rand(rng, (K, N), dtype)
+    got = ops.matmul(a, b, block_m=64, block_n=64, block_k=64,
+                     interpret=True)
+    want = ref.matmul_ref(a, b)
+    tol = F32_TOL if dtype == jnp.float32 else BF16_TOL
+    # bf16 long-K accumulation: compare in fp32 with K-scaled tolerance
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol["rtol"] * max(1, K // 256 + 1),
+                               atol=tol["atol"] * 8)
+
+
+# ---------------------------------------------------------------------------
+# LRU scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,T,C,bt,bc", [
+    (1, 256, 128, 64, 64), (2, 512, 64, 128, 64), (1, 100, 48, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lru_scan_matches_ref(B, T, C, bt, bc, dtype):
+    rng = np.random.default_rng(4)
+    # decays in (0, 1) — the RG-LRU regime
+    a = jnp.asarray(rng.uniform(0.5, 0.999,
+                                size=(B, T, C)).astype(np.float32))
+    x = _rand(rng, (B, T, C), jnp.float32)
+    got = ops.lru_scan(a.astype(dtype), x.astype(dtype), block_t=bt,
+                       block_c=bc, interpret=True)
+    want = ref.lru_scan_ref(a, x)
+    tol = F32_TOL if dtype == jnp.float32 else dict(rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_lru_scan_carry_across_blocks():
+    """State must flow across time-grid steps (the scratch carry)."""
+    B, T, C = 1, 128, 32
+    a = jnp.full((B, T, C), 1.0, jnp.float32)
+    x = jnp.ones((B, T, C), jnp.float32)
+    got = ops.lru_scan(a, x, block_t=32, block_c=32, interpret=True)
+    want = jnp.cumsum(x, axis=1)  # a=1 -> running sum
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)

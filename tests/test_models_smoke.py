@@ -1,0 +1,89 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, shape + finiteness asserts (the FULL configs are exercised only via the
+dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.models import build_by_name, make_batch
+
+ALL_ARCHS = ["qwen3-moe-235b-a22b", "granite-moe-3b-a800m", "xlstm-1.3b",
+             "qwen3-0.6b", "starcoder2-7b", "gemma-2b", "mistral-nemo-12b",
+             "internvl2-1b", "recurrentgemma-9b", "musicgen-medium"]
+
+
+def test_all_archs_registered():
+    assert sorted(ALL_ARCHS) == sorted(list_configs())
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_forward_and_grad(name):
+    m = build_by_name(name, reduced=True)
+    params = m.init_params(0)
+    batch = make_batch(m.cfg, B=2, T=32)
+
+    def lf(p):
+        l, c = m.loss_fn(p, batch)
+        return l / c
+
+    loss, grads = jax.jit(jax.value_and_grad(lf))(params)
+    assert np.isfinite(float(loss))
+    # random init, uniform softmax: loss ~ ln(vocab)
+    assert abs(float(loss) - np.log(m.cfg.vocab_padded)) < 1.0
+    for leaf in jax.tree.leaves(grads):
+        assert bool(jnp.all(jnp.isfinite(leaf))), name
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_param_count_close_to_spec(name):
+    cfg = get_config(name)
+    model_params = cfg.param_count()
+    assert model_params > 0
+    # stacked init shapes must reproduce the analytic count within 5%
+    m = build_by_name(name)
+    abstract = jax.eval_shape(lambda: m.init_params(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+    # moe physical layout pads nothing; vocab padding adds < 1%
+    assert abs(total - model_params) / model_params < 0.05, (total,
+                                                             model_params)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", ["qwen3-0.6b", "qwen3-moe-235b-a22b",
+                                  "xlstm-1.3b", "recurrentgemma-9b"])
+def test_decode_matches_prefill(name):
+    """Cache relayout / ring buffers / recurrent state continuation."""
+    T, T0 = 32, 16
+    m = build_by_name(name, reduced=True)
+    params = m.init_params(0)
+    batch = make_batch(m.cfg, B=2, T=T)
+    _, ref_logits = jax.jit(lambda p, b: m.prefill_fn(p, b, T))(params, batch)
+
+    if m.cfg.frontend == "encodec":
+        b0 = {"frames": batch["frames"][:, :T0],
+              "labels": batch["labels"][:, :T0]}
+        steps = [batch["frames"][:, t:t + 1] for t in range(T0, T)]
+    else:
+        b0 = dict(batch, tokens=batch["tokens"][:, :T0 + 1])
+        steps = [batch["tokens"][:, t:t + 1] for t in range(T0, T)]
+    cache, logits = jax.jit(lambda p, b: m.prefill_fn(p, b, T))(params, b0)
+    dec = jax.jit(m.decode_fn)
+    for i, tok in enumerate(steps):
+        cache, logits = dec(params, cache, tok, jnp.int32(T0 + i))
+    # MoE capacity drops differ between prefill and decode token counts
+    tol = 0.05 if m.cfg.moe else 1e-4
+    err = float(jnp.max(jnp.abs(logits - ref_logits)))
+    scale = float(jnp.max(jnp.abs(ref_logits))) + 1e-9
+    assert err / scale < tol, (name, err / scale)
+
+
+def test_reduced_configs_stay_in_family():
+    for name in ALL_ARCHS:
+        cfg = get_config(name)
+        red = cfg.reduced()
+        assert red.family == cfg.family
+        assert red.pattern == cfg.pattern
+        assert (red.moe is None) == (cfg.moe is None)

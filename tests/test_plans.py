@@ -1,0 +1,138 @@
+"""Property tests (hypothesis) for the decomposition algebra in core/plans.py.
+
+Invariants of the paper's scheme that must hold for ANY cluster shape:
+
+* the allgatherv plan tiles the result buffer exactly (no gaps/overlaps);
+* hybrid keeps exactly one result copy per node; naive keeps one per rank;
+* hybrid removes ALL intra-node copy traffic for gather/broadcast;
+* both schemes move identical per-payload bytes across the slow tier for the
+  bridge exchange (the paper: inter-node traffic is unchanged);
+* traffic is monotone in message size.
+"""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.plans import (GatherPlan, NodeMap, allgather_traffic,
+                              allreduce_traffic, broadcast_traffic,
+                              collective_time_model)
+
+nodes = st.integers(min_value=1, max_value=12)
+ppn = st.integers(min_value=1, max_value=32)
+msg = st.integers(min_value=1, max_value=1 << 20)
+
+
+@given(nodes, ppn, st.integers(min_value=1, max_value=4096))
+@settings(max_examples=200, deadline=None)
+def test_gather_plan_tiles_buffer(P, c, m):
+    plan = GatherPlan(NodeMap.smp(P, c), elem_per_rank=m)
+    plan.check()
+    assert sum(plan.counts()) == P * c * m
+    assert len(plan.displs()) == P
+
+
+@given(st.lists(st.integers(min_value=1, max_value=32), min_size=1,
+                max_size=12),
+       st.integers(min_value=1, max_value=4096))
+@settings(max_examples=200, deadline=None)
+def test_gather_plan_irregular_population(pops, m):
+    """Paper §5.1.3: irregularly populated nodes still tile the buffer."""
+    plan = GatherPlan(NodeMap.irregular(pops), elem_per_rank=m)
+    plan.check()
+    assert plan.counts() == tuple(p * m for p in pops)
+    # leaders are the first rank of each node
+    leaders = plan.node_map.leaders()
+    assert leaders[0] == 0
+    for a, b in zip(leaders, leaders[1:]):
+        assert b > a
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_allgather_memory_claim(P, c, m):
+    """Paper C1: hybrid keeps ONE copy per node; naive keeps one per rank."""
+    naive = allgather_traffic(scheme="naive", num_nodes=P, ranks_per_node=c,
+                              bytes_per_rank=m)
+    hier = allgather_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                             bytes_per_rank=m)
+    n = P * c * m
+    assert hier.result_bytes_per_node == n
+    assert naive.result_bytes_per_node == c * n
+    assert naive.result_bytes_per_node // hier.result_bytes_per_node == c
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_allgather_intra_node_copy_claim(P, c, m):
+    """Paper C2: hybrid removes all intra-node copies; bridge unchanged."""
+    naive = allgather_traffic(scheme="naive", num_nodes=P, ranks_per_node=c,
+                              bytes_per_rank=m)
+    hier = allgather_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                             bytes_per_rank=m)
+    assert hier.fast_bytes == 0
+    assert naive.fast_bytes >= 0
+    if c > 1:
+        assert naive.fast_bytes > 0
+    # C3: identical slow-tier bytes (the bridge exchanges node regions)
+    assert hier.slow_bytes == naive.slow_bytes
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_broadcast_claims(P, c, m):
+    naive = broadcast_traffic(scheme="naive", num_nodes=P, ranks_per_node=c,
+                              msg_bytes=m)
+    hier = broadcast_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                             msg_bytes=m)
+    assert hier.fast_bytes == 0
+    assert hier.slow_bytes == naive.slow_bytes == (P - 1) * m
+    assert naive.result_bytes_per_node == c * hier.result_bytes_per_node
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_allreduce_slow_tier_never_worse(P, c, m):
+    """The bridge reduction on shards crosses the slow tier at most as much
+    as the flat ring's node-boundary hops."""
+    naive = allreduce_traffic(scheme="naive", num_nodes=P, ranks_per_node=c,
+                              msg_bytes=m)
+    hier = allreduce_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                             msg_bytes=m)
+    assert hier.slow_bytes <= naive.slow_bytes + 1  # int rounding
+    assert hier.result_bytes_per_node <= naive.result_bytes_per_node
+
+
+@given(nodes, ppn, st.integers(min_value=1, max_value=1 << 18),
+       st.integers(min_value=2, max_value=8))
+@settings(max_examples=100, deadline=None)
+def test_traffic_monotone_in_message(P, c, m, k):
+    for fn, kw in ((allgather_traffic, "bytes_per_rank"),
+                   (broadcast_traffic, "msg_bytes"),
+                   (allreduce_traffic, "msg_bytes")):
+        small = fn(scheme="hier", num_nodes=P, ranks_per_node=c, **{kw: m})
+        big = fn(scheme="hier", num_nodes=P, ranks_per_node=c, **{kw: k * m})
+        assert big.slow_bytes >= small.slow_bytes
+        assert big.result_bytes_per_node >= small.result_bytes_per_node
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=50, deadline=None)
+def test_time_model_positive_finite(P, c, m):
+    t = collective_time_model(
+        allgather_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                          bytes_per_rank=m),
+        num_nodes=P, ranks_per_node=c)
+    assert t >= 0 and math.isfinite(t)
+
+
+def test_node_map_validation():
+    with pytest.raises(ValueError):
+        NodeMap((0, 2, 1))  # non-dense node ids
+    with pytest.raises(ValueError):
+        NodeMap.irregular([3, 0])
+    nm = NodeMap.smp(2, 3)
+    assert nm.leaders() == (0, 3)
+    assert nm.local_rank(4) == 1
+    assert nm.populations() == (3, 3)

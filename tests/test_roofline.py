@@ -1,0 +1,79 @@
+"""HLO collective parser + roofline math unit tests (real HLO line formats,
+including variadic tuples with /*index=N*/ comments and iota replica
+groups)."""
+
+import numpy as np
+
+from repro.analysis.roofline import (CollectiveBytes, _first_group,
+                                     _shape_bytes, extrapolate_cost,
+                                     parse_collectives, roofline)
+
+VARIADIC = ("  %all-reduce.2 = (f32[9496,64]{1,0}, f32[28,192,64]{2,1,0}, "
+            "/*index=5*/f32[64,9496]{1,0}) all-reduce(%a, %b, %c), "
+            "channel_id=1, replica_groups={{0,256},{1,257}}, "
+            "use_global_device_ids=true, to_apply=%add")
+
+SIMPLE_AG = ("  %all_gather.1 = bf16[16,4096,1024]{2,1,0} "
+             "all-gather(%x), channel_id=2, replica_groups="
+             "{{0,1,2,3,4,5,6,7,8,9,10,11,12,13,14,15}}, dimensions={1}")
+
+IOTA_RS = ("  %reduce-scatter.5 = f32[8,64]{1,0} reduce-scatter(%y), "
+           "channel_id=3, replica_groups=[256,2]<=[2,256]T(1,0), "
+           "dimensions={0}")
+
+
+def test_shape_bytes_tuple_with_comments():
+    got = _shape_bytes("(f32[9496,64]{1,0}, f32[28,192,64]{2,1,0}, "
+                       "/*index=5*/f32[64,9496]{1,0})")
+    want = 4 * (9496 * 64 + 28 * 192 * 64 + 64 * 9496)
+    assert got == want
+
+
+def test_first_group_brace_and_iota():
+    n, ids = _first_group(VARIADIC, 512)
+    assert n == 2 and ids == [0, 256]
+    n, ids = _first_group(IOTA_RS, 512)
+    assert n == 2 and ids == [0, 256]  # transpose(reshape) rows
+
+
+def test_parse_cross_pod_classification():
+    hlo = "\n".join([VARIADIC, SIMPLE_AG, IOTA_RS])
+    cb = parse_collectives(hlo, num_devices=512, pod_size=256)
+    # variadic AR crosses pods: 2*out*(n-1)/n with n=2 -> out bytes
+    var_bytes = 4 * (9496 * 64 + 28 * 192 * 64 + 64 * 9496)
+    np.testing.assert_allclose(cb.by_op["all-reduce/slow"], var_bytes)
+    # iota RS also crosses pods: out*(n-1) = out
+    np.testing.assert_allclose(cb.by_op["reduce-scatter/slow"], 8 * 64 * 4)
+    assert cb.slow == cb.by_op["all-reduce/slow"] \
+        + cb.by_op["reduce-scatter/slow"]
+    # the AG is intra-pod (model axis)
+    ag = 2 * 16 * 4096 * 1024 * 15 / 16
+    np.testing.assert_allclose(cb.by_op["all-gather"], ag)
+    assert cb.fast == cb.by_op["all-gather"]
+
+
+def test_extrapolation_algebra():
+    a = {"flops": 100.0, "bytes accessed": 60.0}
+    b = {"flops": 150.0, "bytes accessed": 80.0}
+    f, by = extrapolate_cost(a, b, n_units=10)
+    assert f == 50.0 + 10 * 50.0       # outside 2A-B=50, unit=50
+    assert by == 40.0 + 10 * 20.0
+
+    ca = CollectiveBytes(fast=10.0, slow=2.0, by_op={"all-gather": 10.0})
+    cb_ = CollectiveBytes(fast=14.0, slow=2.0, by_op={"all-gather": 14.0})
+    comb = CollectiveBytes.combine(ca, cb_, 10)
+    np.testing.assert_allclose(comb.fast, 6.0 + 10 * 4.0)
+    np.testing.assert_allclose(comb.slow, 2.0)  # outside-loop slow unchanged
+
+
+def test_roofline_terms_and_dominance():
+    coll = CollectiveBytes(fast=200e9, slow=25e9)
+    t = roofline(flops_per_dev=197e12, bytes_per_dev=819e9, coll=coll,
+                 chips=256, notes={"flops": 0.0, "bytes": 0.0},
+                 model_flops=197e12 * 256 * 0.5)
+    np.testing.assert_allclose(t.compute_s, 1.0)
+    np.testing.assert_allclose(t.memory_s, 1.0)
+    np.testing.assert_allclose(t.fast_coll_s, 1.0)
+    np.testing.assert_allclose(t.slow_coll_s, 1.0)
+    assert t.dominant == "collective"
+    np.testing.assert_allclose(t.useful_flops_ratio, 0.5)
