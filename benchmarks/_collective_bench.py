@@ -18,17 +18,20 @@ ap.add_argument("--fig", default="all")
 ap.add_argument("--reps", type=int, default=30)
 args = ap.parse_args()
 
+# appended: XLA honors the LAST duplicate flag, and --devices must win over
+# anything inherited from the environment
 os.environ["XLA_FLAGS"] = (
-    f"--xla_force_host_platform_device_count={args.devices} "
-    + os.environ.get("XLA_FLAGS", ""))
+    os.environ.get("XLA_FLAGS", "")
+    + f" --xla_force_host_platform_device_count={args.devices}")
 
 import time  # noqa: E402
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
-from jax import shard_map  # noqa: E402
 from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
+
+from repro.substrate.compat import shard_map  # noqa: E402
 
 from repro.core import collectives as cc  # noqa: E402
 from repro.core.plans import (GatherPlan, NodeMap,  # noqa: E402
@@ -38,7 +41,12 @@ REPS = args.reps
 
 
 def mesh_for(nodes: int, cores: int) -> Mesh:
-    devs = np.array(jax.devices()[:nodes * cores]).reshape(nodes, cores)
+    need = nodes * cores
+    if len(jax.devices()) < need:
+        raise SystemExit(f"this figure needs {need} devices; "
+                         f"rerun with --devices {need} (got "
+                         f"{len(jax.devices())})")
+    devs = np.array(jax.devices()[:need]).reshape(nodes, cores)
     return Mesh(devs, ("node", "core"))
 
 

@@ -17,8 +17,10 @@ Both produce identical samples (same RNG); RMSE on held-out entries falls.
 
 import os
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
-                           + os.environ.get("XLA_FLAGS", ""))
+# appended: XLA honors the LAST duplicate flag, and this script's device
+# count must win over anything inherited from the environment
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8")
 
 import argparse  # noqa: E402
 import time      # noqa: E402
@@ -26,11 +28,12 @@ import time      # noqa: E402
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
-from jax import lax, shard_map  # noqa: E402
+from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import collectives as cc          # noqa: E402
 from repro.core.plans import allgather_traffic    # noqa: E402
+from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
 NODES, CORES = 2, 4
 D = 16           # latent dim
@@ -117,8 +120,7 @@ def main():
     ap.add_argument("--items", type=int, default=128)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((NODES, CORES), ("node", "core"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((NODES, CORES), ("node", "core"))
     rng = np.random.default_rng(0)
     u_true = rng.normal(size=(args.users, D)) / np.sqrt(D)
     v_true = rng.normal(size=(args.items, D)) / np.sqrt(D)

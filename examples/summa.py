@@ -17,8 +17,10 @@ hybrid scheme deleting the intra-node copy bytes (paper Fig. 11's win).
 
 import os
 
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
-                           + os.environ.get("XLA_FLAGS", ""))
+# appended: XLA honors the LAST duplicate flag, and this script's device
+# count must win over anything inherited from the environment
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=16")
 
 import argparse  # noqa: E402
 import time      # noqa: E402
@@ -26,11 +28,12 @@ import time      # noqa: E402
 import jax                      # noqa: E402
 import jax.numpy as jnp         # noqa: E402
 import numpy as np              # noqa: E402
-from jax import lax, shard_map  # noqa: E402
+from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import collectives as cc    # noqa: E402
 from repro.core.plans import broadcast_traffic  # noqa: E402
+from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
 NODES, CORES = 4, 4   # grid rows = nodes (fast tier inside a row)
 
@@ -82,8 +85,7 @@ def main():
     ap.add_argument("--use-kernel", action="store_true")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((NODES, CORES), ("node", "core"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((NODES, CORES), ("node", "core"))
     rng = np.random.default_rng(0)
     a = rng.normal(size=(args.n, args.n)).astype(np.float32)
     b = rng.normal(size=(args.n, args.n)).astype(np.float32)

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.substrate.compat import axis_size as _axis_size_one
+
 
 def _axes(ax) -> tuple:
     return tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
@@ -39,7 +41,7 @@ def _axes(ax) -> tuple:
 def axis_size(ax) -> int:
     s = 1
     for a in _axes(ax):
-        s *= lax.axis_size(a)
+        s *= _axis_size_one(a)
     return s
 
 
@@ -48,7 +50,7 @@ def axis_index(ax) -> jax.Array:
     axes = _axes(ax)
     idx = lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * _axis_size_one(a) + lax.axis_index(a)
     return idx
 
 
@@ -109,12 +111,18 @@ def shared_to_rank_order(full: jax.Array, *, num_pods: int,
 
 
 def shared_all_gather_v(x_padded: jax.Array, valid: jax.Array, *,
-                        slow_axis, axis: int = 0
+                        slow_axis=None, axis: int = 0
                         ) -> tuple[jax.Array, jax.Array]:
     """Irregular variant (paper Figs 4/10): per-chip contributions of
     different true lengths, padded to a common max.  Returns the bridge-
     gathered padded blocks plus the gathered valid-counts; the compaction map
-    is ``plans.GatherPlan`` (a one-off, like the paper's counts/displs)."""
+    is ``plans.GatherPlan`` (a one-off, like the paper's counts/displs).
+
+    On a single node (``slow_axis=None``) there is no bridge: the local
+    partition is already in the shared window, so the "gathered" leading pod
+    dimension has extent 1."""
+    if slow_axis is None:
+        return jnp.expand_dims(x_padded, axis), valid[None]
     blocks = lax.all_gather(x_padded, _axes(slow_axis), axis=axis, tiled=False)
     counts = lax.all_gather(valid, _axes(slow_axis), tiled=False)
     return blocks, counts

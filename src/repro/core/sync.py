@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.substrate.compat import axis_size as _axis_size_one
+
 from .collectives import _axes, axis_index
 
 
@@ -30,7 +32,7 @@ def flag_chain(token: jax.Array, axis) -> jax.Array:
     axes = _axes(axis)
     out = token
     for a in axes:
-        n = lax.axis_size(a)
+        n = _axis_size_one(a)
         perm = [(i, (i + 1) % n) for i in range(n)]
         out = lax.ppermute(out, a, perm)
     return out

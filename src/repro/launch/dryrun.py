@@ -1,6 +1,8 @@
 import os
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
+# appended: XLA honors the LAST duplicate flag, and the dry-run's device
+# count must win over anything inherited from the environment
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
 
 """Multi-pod dry-run: lower + compile every (arch x shape) cell on the
 production meshes, dump memory/cost/collective artifacts for the roofline.

@@ -3,23 +3,20 @@ jax device state (the dry-run sets the fake-device flag first)."""
 
 from __future__ import annotations
 
-import jax
-
 from repro.core.topology import MeshTopology, multi_pod, single_pod
+from repro.substrate.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_from_topo(topo: MeshTopology):
     names = topo.axis_names()
     shape = tuple(topo.axis_sizes[a] for a in names)
-    return jax.make_mesh(shape, names,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    return make_mesh(shape, names)
 
 
 def topo_for(*, multi_pod_flag: bool) -> MeshTopology:

@@ -22,8 +22,10 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-from jax import lax, shard_map
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.substrate.compat import shard_map
 
 from repro.core.topology import MeshTopology
 from repro.models.meta import PMeta

@@ -1,0 +1,210 @@
+"""VirtualCluster: in-process multi-topology harness for the collectives.
+
+The paper's two-tier cluster (shared-memory nodes joined by a network) maps
+onto forced host CPU devices:
+
+* slow tier — ``pods`` (the network / MPI bridge communicator);
+* fast tier — ``chips`` per pod (the shared-memory node).
+
+A ``VirtualCluster`` builds the two-tier device mesh for one (pods, chips)
+shape and wraps collective *bodies* (functions of local shards, as in
+``repro.core.collectives``) with ``shard_map``, so the same equivalence
+check runs unchanged over a whole topology matrix — single-node, one chip
+per pod, square, and tuple-axis meshes — instead of only the one shape a
+subprocess script happened to hard-code.
+
+Axis handling mirrors ``collectives._axes``: ``fast_axis`` / ``slow_axis``
+may each be one name or a tuple of names (with per-name sizes given by
+``fast_shape`` / ``slow_shape``).  A single-pod cluster drops the slow tier
+entirely (``slow is None``), exercising the collectives' single-node code
+paths rather than hiding them behind a size-1 axis.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import os
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.substrate import compat
+
+Axis = Union[str, Sequence[str]]
+
+
+def ensure_host_device_count(n: int = 8) -> None:
+    """Force >= ``n`` fake host CPU devices for this process.
+
+    Must run before jax initializes its backends (i.e. before the first
+    ``jax.devices()`` / array op anywhere in the process) — the flag is a
+    no-op afterwards.  Respects an already-present force flag so callers
+    (CI, a parent test runner) can pin their own count.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = \
+        (f"--xla_force_host_platform_device_count={n} " + flags).strip()
+
+
+def _names(ax: Optional[Axis]) -> tuple[str, ...]:
+    if ax is None:
+        return ()
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_mesh(axis_shapes: tuple[int, ...], axis_names: tuple[str, ...]):
+    return compat.make_mesh(axis_shapes, axis_names)
+
+
+@dataclasses.dataclass(frozen=True)
+class VirtualCluster:
+    """One point of the topology matrix: ``pods`` nodes x ``chips`` per node.
+
+    ``fast_axis``/``slow_axis`` name the mesh axes of each tier; a tuple of
+    names splits that tier over several mesh axes whose sizes are given by
+    ``fast_shape``/``slow_shape`` (products must equal ``chips``/``pods``).
+    """
+
+    pods: int = 2
+    chips: int = 4
+    fast_axis: Axis = "data"
+    slow_axis: Optional[Axis] = "pod"
+    fast_shape: Optional[tuple[int, ...]] = None
+    slow_shape: Optional[tuple[int, ...]] = None
+
+    def __post_init__(self):
+        if self.pods < 1 or self.chips < 1:
+            raise ValueError(f"bad shape {self.pods}x{self.chips}")
+        fast = _names(self.fast_axis)
+        slow = _names(self.slow_axis)
+        if not fast:
+            raise ValueError("fast_axis is required")
+        if self.pods > 1 and not slow:
+            raise ValueError("multi-pod cluster needs a slow_axis")
+        fshape = self.fast_shape if self.fast_shape is not None \
+            else (self.chips,)
+        sshape = self.slow_shape if self.slow_shape is not None \
+            else (self.pods,)
+        if len(fshape) != len(fast) or math.prod(fshape) != self.chips:
+            raise ValueError(f"fast_shape {fshape} does not factor "
+                             f"chips={self.chips} over axes {fast}")
+        if len(sshape) != len(slow) or math.prod(sshape) != self.pods:
+            raise ValueError(f"slow_shape {sshape} does not factor "
+                             f"pods={self.pods} over axes {slow}")
+        if set(fast) & set(slow):
+            raise ValueError("fast and slow axis names must be disjoint")
+        object.__setattr__(self, "fast_axis", fast if len(fast) > 1
+                           else fast[0])
+        object.__setattr__(self, "slow_axis", (slow if len(slow) > 1
+                                               else slow[0]) if slow else None)
+        object.__setattr__(self, "fast_shape", tuple(fshape))
+        object.__setattr__(self, "slow_shape", tuple(sshape))
+
+    # -- shape ---------------------------------------------------------------
+    @property
+    def num_devices(self) -> int:
+        return self.pods * self.chips
+
+    @property
+    def fast(self) -> Axis:
+        """Fast-tier axis arg for the collectives (name or tuple of names)."""
+        return self.fast_axis
+
+    @property
+    def slow(self) -> Optional[Axis]:
+        """Slow-tier axis arg; ``None`` on a single node (pods == 1)."""
+        return self.slow_axis if self.pods > 1 else None
+
+    @property
+    def fast_names(self) -> tuple[str, ...]:
+        return _names(self.fast_axis)
+
+    @property
+    def slow_names(self) -> tuple[str, ...]:
+        return _names(self.slow) if self.pods > 1 else ()
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        """Mesh axis order: slow (outer) then fast (inner) — rank order is
+        (pod, chip), the SMP placement of the paper."""
+        return self.slow_names + self.fast_names
+
+    @property
+    def axis_shapes(self) -> tuple[int, ...]:
+        return (self.slow_shape if self.pods > 1 else ()) + self.fast_shape
+
+    @property
+    def label(self) -> str:
+        """Stable test id, e.g. ``2x4``, ``1x8``, ``2x(2x2)-pod.dp.tp``."""
+        def side(shape, names):
+            s = "x".join(str(d) for d in shape) if len(shape) > 1 else \
+                str(shape[0])
+            return f"({s})" if len(shape) > 1 else s
+        base = f"{side(self.slow_shape, self.slow_names)}" \
+               f"x{side(self.fast_shape, self.fast_names)}"
+        if len(self.fast_names) > 1 or len(self.slow_names) > 1:
+            base += "-" + ".".join(self.axis_names)
+        return base
+
+    # -- device state --------------------------------------------------------
+    def available(self) -> bool:
+        return jax.device_count() >= self.num_devices
+
+    @property
+    def mesh(self):
+        return _cached_mesh(self.axis_shapes, self.axis_names)
+
+    @property
+    def spec(self) -> P:
+        """Rank-sharded spec: dim 0 split over every mesh axis, (pod, chip)
+        rank-major — the layout of one contribution per global rank."""
+        return P(self.axis_names)
+
+    def smap(self, body, in_specs, out_specs):
+        """Wrap a local-shard body over this cluster's mesh (replication
+        checking off: the hier/shared bodies are deliberately 'unsound' in
+        the checker's eyes — they build replicated values from psums)."""
+        return compat.shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_vma=False)
+
+    def run(self, body, *args, in_specs=None, out_specs=None):
+        """One-shot: shard rank-major inputs, run the body, return outputs."""
+        if in_specs is None:
+            in_specs = (self.spec,) * len(args)
+        if out_specs is None:
+            out_specs = self.spec
+        return self.smap(body, in_specs, out_specs)(*args)
+
+    # -- data helpers --------------------------------------------------------
+    def rank_major_input(self, m: int = 6, extra: int = 3, seed: int = 0):
+        """(pods*chips*m, extra) float32 array, ``m`` rows per global rank."""
+        import jax.numpy as jnp
+        rng = np.random.default_rng(seed)
+        return jnp.asarray(rng.normal(
+            size=(self.num_devices * m, extra)).astype(np.float32))
+
+
+def default_matrix(max_devices: int = 8) -> tuple[VirtualCluster, ...]:
+    """The standard topology matrix swept by the test suite.
+
+    Covers: single node (no bridge at all), the seed 2x4 shape, its
+    transpose, one-chip-per-pod (bridge only — the paper's worst case), and
+    a tuple-axis mesh where the fast tier spans two named axes (the
+    production (dp, tp) layout).
+    """
+    matrix = (
+        VirtualCluster(pods=1, chips=8),
+        VirtualCluster(pods=2, chips=4),
+        VirtualCluster(pods=4, chips=2),
+        VirtualCluster(pods=8, chips=1),
+        VirtualCluster(pods=2, chips=4, fast_axis=("dp", "tp"),
+                       fast_shape=(2, 2), slow_axis="pod"),
+    )
+    return tuple(vc for vc in matrix if vc.num_devices <= max_devices)

@@ -1,0 +1,48 @@
+"""Suite-wide configuration.
+
+Two jobs, both of which must happen before any test module initializes jax
+backends:
+
+1. Force 8 fake host CPU devices so the VirtualCluster topology matrix
+   (``repro.substrate``) runs *in-process* — no subprocess round-trips per
+   topology.  An ``XLA_FLAGS`` already carrying a force flag wins (CI's
+   ``slow`` job pins its own count); genuinely-single-device behaviour is
+   covered by the subprocess isolation test in ``test_collectives.py``.
+
+2. Make ``hypothesis`` optional: the property-test modules are skipped at
+   collection when it is not installed (``pip install -r
+   requirements-dev.txt`` to get it).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+# Importing the substrate imports jax but does not initialize its backends;
+# the flag is still unset-able at this point.
+from repro.substrate import ensure_host_device_count  # noqa: E402
+
+ensure_host_device_count(8)
+
+try:
+    import hypothesis  # noqa: F401
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+_HYPOTHESIS_MODULES = ["test_attention_props.py", "test_moe_dispatch.py",
+                       "test_plans.py"]
+
+collect_ignore = [] if _HAVE_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
+
+
+def pytest_report_header(config):
+    import jax
+    lines = [f"jax {jax.__version__} | "
+             f"XLA_FLAGS: {os.environ.get('XLA_FLAGS', '')}"]
+    if not _HAVE_HYPOTHESIS:
+        lines.append("hypothesis not installed — skipping property-test "
+                     f"modules: {', '.join(_HYPOTHESIS_MODULES)}")
+    return lines
