@@ -1,11 +1,19 @@
-"""Subprocess collective microbenchmarks (paper Figs 7-10).
+"""Paper-figure collective microbenchmarks (Figs 7-10) — thin wrapper.
+
+All measurement machinery lives in ``repro.bench`` now: the calibrated
+timer (single warmup, blocks on every output leaf, median-of-reps), the
+VirtualCluster topologies, and the traffic-model/HLO cross-checks.  This
+script only maps the paper's figure configurations onto ``repro.bench``
+cases and prints the legacy ``name,us_per_call,derived`` CSV rows.
 
 Run with a device count set by the parent:
     python -m benchmarks._collective_bench --devices 24 --fig fig7
 
-Prints ``name,us_per_call,derived`` CSV rows.  Wall time on fake CPU devices
-is a scheduling proxy (no real ICI); the ``derived`` column carries the
-traffic-model bytes (plans.py) that the roofline validates on real HW.
+Wall time on fake CPU devices is a scheduling proxy (no real ICI); the
+``derived`` column carries the traffic-model bytes (``core.plans``) that
+the roofline validates on real HW.  ``copies_per_node`` counts copies of
+the FULL result a node holds (paper C1: naive = ranks_per_node, hybrid =
+1) — the seed version divided by per-rank bytes and printed rank counts.
 """
 
 import argparse
@@ -24,142 +32,61 @@ os.environ["XLA_FLAGS"] = (
     os.environ.get("XLA_FLAGS", "")
     + f" --xla_force_host_platform_device_count={args.devices}")
 
-import time  # noqa: E402
-
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
-from jax.sharding import Mesh, PartitionSpec as P  # noqa: E402
-
-from repro.substrate.compat import shard_map  # noqa: E402
-
-from repro.core import collectives as cc  # noqa: E402
-from repro.core.plans import (GatherPlan, NodeMap,  # noqa: E402
-                              allgather_traffic)
-
-REPS = args.reps
+from repro.bench import report, suites  # noqa: E402
+from repro.substrate import VirtualCluster  # noqa: E402
 
 
-def mesh_for(nodes: int, cores: int) -> Mesh:
-    need = nodes * cores
-    if len(jax.devices()) < need:
-        raise SystemExit(f"this figure needs {need} devices; "
-                         f"rerun with --devices {need} (got "
-                         f"{len(jax.devices())})")
-    devs = np.array(jax.devices()[:need]).reshape(nodes, cores)
-    return Mesh(devs, ("node", "core"))
-
-
-def timeit(fn, *xs) -> float:
-    fn(*xs)[0].block_until_ready() if isinstance(fn(*xs), tuple) else \
-        fn(*xs).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(REPS):
-        out = fn(*xs)
-    jax.tree.leaves(out)[0].block_until_ready()
-    return (time.perf_counter() - t0) / REPS * 1e6  # us
-
-
-def allgather_pair(nodes, cores, elems, scheme):
-    """Per-rank contribution of ``elems`` doubles; returns a timed callable
-    + its derived traffic."""
-    mesh = mesh_for(nodes, cores)
-    n_ranks = nodes * cores
-    x = jnp.arange(n_ranks * elems, dtype=jnp.float64).astype(jnp.float32)
-    spec = P(("node", "core"))
-
-    if scheme == "naive":
-        def body(v):
-            return cc.naive_all_gather(v, fast_axis="core",
-                                       slow_axis="node")
-        out_spec = P(None)
-    else:
-        def body(v):
-            return cc.shared_all_gather(v, fast_axis="core",
-                                        slow_axis="node")
-        out_spec = spec
-
-    f = jax.jit(shard_map(body, mesh=mesh, in_specs=(spec,),
-                          out_specs=out_spec, check_vma=False))
-    tr = allgather_traffic(scheme="hier" if scheme == "hybrid" else "naive",
-                           num_nodes=nodes, ranks_per_node=cores,
-                           bytes_per_rank=elems * 8)
-    return (lambda: f(x)), tr
-
-
-def bench_fig7():
+def fig7_cases():
     """One full node (8 cores): hybrid needs no exchange at all."""
-    for elems in (1, 64, 1024, 8192, 32768):
-        for scheme in ("naive", "hybrid"):
-            fn, tr = allgather_pair(1, 8, elems, scheme)
-            us = timeit(lambda _=0: fn())
-            print(f"fig7_allgather_1node_{scheme}_{elems},{us:.1f},"
-                  f"fast_bytes={tr.fast_bytes};copies_per_node="
-                  f"{tr.result_bytes_per_node // max(elems * 8, 1)}")
+    vc = VirtualCluster(pods=1, chips=8)
+    return [c for e in (1, 64, 1024, 8192, 32768)
+            for c in suites.allgather_cases(vc, e) if c.scheme != "hier"]
 
 
-def bench_fig8():
+def fig8_cases():
     """One rank per node (worst case: no shared-memory advantage)."""
-    for nodes in (4, 8):
-        for elems in (64, 8192):
-            for scheme in ("naive", "hybrid"):
-                fn, tr = allgather_pair(nodes, 1, elems, scheme)
-                us = timeit(lambda _=0: fn())
-                print(f"fig8_allgather_{nodes}n1p_{scheme}_{elems},{us:.1f},"
-                      f"slow_bytes={tr.slow_bytes}")
+    return [c for nodes in (4, 8) for e in (64, 8192)
+            for c in suites.allgather_cases(
+                VirtualCluster(pods=nodes, chips=1), e)
+            if c.scheme != "hier"]
 
 
-def bench_fig9():
+def fig9_cases():
     """Fixed nodes, growing ranks-per-node: the hybrid advantage grows."""
-    for ppn in (2, 4, 8, 12):
-        for elems in (512, 16384):
-            for scheme in ("naive", "hybrid"):
-                fn, tr = allgather_pair(2, ppn, elems, scheme)
-                us = timeit(lambda _=0: fn())
-                print(f"fig9_allgather_2n{ppn}p_{scheme}_{elems},{us:.1f},"
-                      f"fast_bytes={tr.fast_bytes}")
+    return [c for ppn in (2, 4, 8, 12) for e in (512, 16384)
+            for c in suites.allgather_cases(VirtualCluster(pods=2,
+                                                           chips=ppn), e)
+            if c.scheme != "hier"]
 
 
-def bench_fig10():
-    """Irregularly populated nodes (padded + GatherPlan compaction)."""
-    nodes, cores = 2, 8
-    pops = (8, 6)  # 24-core analogue of the paper's 24/16 split
-    mesh = mesh_for(nodes, cores)
-    elems = 4096
-    plan = GatherPlan(NodeMap.irregular(list(pops)), elem_per_rank=elems)
-    plan.check()
-    x = jnp.ones((nodes * cores * elems,), jnp.float32)
-    valid = jnp.asarray(
-        [[elems if c < p else 0 for c in range(cores)]
-         for p in pops], jnp.int32).reshape(nodes * cores, 1)
-    spec = P(("node", "core"))
-
-    def hybrid(v, val):
-        blocks, counts = cc.shared_all_gather_v(v, val, slow_axis="node")
-        return blocks
-
-    def naive(v, val):
-        del val
-        return cc.naive_all_gather(v, fast_axis="core", slow_axis="node")
-
-    fh = jax.jit(shard_map(hybrid, mesh=mesh, in_specs=(spec, spec),
-                           out_specs=P(None, "core"), check_vma=False))
-    fn_ = jax.jit(shard_map(naive, mesh=mesh, in_specs=(spec, spec),
-                            out_specs=P(None), check_vma=False))
-    for name, f in (("naive", fn_), ("hybrid", fh)):
-        us = timeit(lambda _=0: f(x, valid))
-        print(f"fig10_allgatherv_irregular_{name},{us:.1f},"
-              f"counts={'/'.join(str(c) for c in plan.counts())}")
+def fig10_cases():
+    """Irregularly populated nodes (padded + GatherPlan compaction): the
+    24-core analogue of the paper's 24/16 split."""
+    return list(suites.allgatherv_cases(VirtualCluster(pods=2, chips=8),
+                                        4096, populations=(8, 6)))
 
 
-FIGS = {"fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
-        "fig10": bench_fig10}
+FIGS = {"fig7": fig7_cases, "fig8": fig8_cases, "fig9": fig9_cases,
+        "fig10": fig10_cases}
 
 
 def main():
     figs = list(FIGS) if args.fig == "all" else [args.fig]
-    for f in figs:
-        FIGS[f]()
+    for fig in figs:
+        cases = []
+        for c in FIGS[fig]():
+            if c.cluster.available():
+                cases.append(c)
+            else:
+                print(f"SKIP {fig}/{c.name}: needs "
+                      f"{c.cluster.num_devices} devices", file=sys.stderr)
+        if not cases:
+            continue
+        suite = suites.run_suite(cases, reps=args.reps)
+        for row in report.csv_rows(suite):
+            # legacy naming: the paper calls the shared scheme "hybrid"
+            print(f"{fig}_{row}".replace("_shared_", "_hybrid_"),
+                  flush=True)
 
 
 if __name__ == "__main__":

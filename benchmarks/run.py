@@ -2,12 +2,14 @@
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
 
-Prints ``name,us_per_call,derived`` CSV.  Collective microbenches (Figs
-7-10) and the SUMMA/BPMF applications (Figs 11-12) run in subprocesses with
-fake multi-device CPU platforms; wall time there is a scheduling proxy — the
-``derived`` columns (traffic-model bytes, copies per node) carry the
-hardware-independent claim, and EXPERIMENTS.md §Roofline carries the
-TPU-calibrated numbers from the dry-run artifacts.
+Prints ``name,us_per_call,derived`` CSV.  The collective sweep
+(``repro.bench``: matrix topologies, traffic-validated, JSON artifact),
+the paper-figure configs (Figs 7-10) and the SUMMA/BPMF applications
+(Figs 11-12) run in subprocesses with fake multi-device CPU platforms;
+wall time there is a scheduling proxy — the ``derived`` columns
+(traffic-model bytes, copies per node) carry the hardware-independent
+claim, and EXPERIMENTS.md §Roofline carries the TPU-calibrated numbers
+from the dry-run artifacts.
 """
 
 from __future__ import annotations
@@ -44,6 +46,19 @@ def run_subprocess_csv(cmd: list[str]) -> None:
 
 
 def bench_collectives(quick: bool) -> None:
+    """Matrix-driven sweep (repro.bench): every row is traffic-model
+    cross-checked against the compiled HLO; the JSON artifact lands in
+    BENCH_collectives.json."""
+    reps = "5" if quick else "30"
+    cmd = [sys.executable, "-m", "repro.bench", "--csv", "--reps", reps,
+           "--out", os.path.join(REPO, "BENCH_collectives.json")]
+    if quick:
+        cmd.append("--quick")
+    run_subprocess_csv(cmd)
+
+
+def bench_figs(quick: bool) -> None:
+    """The paper-figure configurations (Figs 7-10, up to 24 devices)."""
     reps = "5" if quick else "30"
     run_subprocess_csv([sys.executable, "-m",
                         "benchmarks._collective_bench", "--devices", "24",
@@ -147,12 +162,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="collectives|summa|bpmf|kernels|roofline")
+                    help="collectives|figs|summa|bpmf|kernels|roofline")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
-    benches = {"collectives": bench_collectives, "summa": bench_summa,
-               "bpmf": bench_bpmf, "kernels": bench_kernels,
+    benches = {"collectives": bench_collectives, "figs": bench_figs,
+               "summa": bench_summa, "bpmf": bench_bpmf,
+               "kernels": bench_kernels,
                "roofline": bench_roofline_summary}
     todo = [args.only] if args.only else list(benches)
     for name in todo:

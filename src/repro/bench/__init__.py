@@ -1,0 +1,26 @@
+"""In-process collective benchmark subsystem (``python -m repro.bench``).
+
+Replaces the loose subprocess CSV scripts with a matrix-driven measurement
+backbone:
+
+* ``runner``   — calibrated microbenchmark timer: exactly one warmup call,
+  blocking on *every* output leaf, median-of-reps with dispersion;
+* ``suites``   — sweeps the naive/hier/shared allgather, broadcast, psum and
+  irregular allgatherv families over ``repro.substrate.default_matrix()``
+  (1x8, 2x4, 4x2, 8x1, tuple-axis) x message sizes;
+* ``validate`` — cross-checks every measured config's compiled-HLO collective
+  bytes (``analysis.roofline.parse_collectives``) against the ``core.plans``
+  traffic model; the paper's C1 one-copy-per-node claim is an asserted
+  invariant (naive/shared resident-result ratio == ranks_per_node) and any
+  mismatch fails the run;
+* ``report``   — schema-versioned ``BENCH_collectives.json`` + the legacy
+  ``name,us_per_call,derived`` CSV rows.
+
+This module deliberately imports nothing jax-heavy: ``python -m repro.bench``
+must be able to force the host device count (``XLA_FLAGS``) before any jax
+backend initializes, and ``-m`` imports the package ``__init__`` first.
+"""
+
+SCHEMA_VERSION = "repro.bench/v1"
+
+__all__ = ["SCHEMA_VERSION"]

@@ -1,0 +1,99 @@
+"""CLI: ``python -m repro.bench [--quick] [--out BENCH_collectives.json]``.
+
+Runs the matrix-driven collective sweep in-process on forced host CPU
+devices, cross-checks every measured config against the plans.py traffic
+model (any mismatch exits non-zero) and writes the schema-versioned JSON
+artifact.  ``--csv`` additionally prints the legacy
+``name,us_per_call,derived`` rows so ``benchmarks/run.py`` can consume the
+output unchanged.
+
+Device forcing happens HERE, before the jax backend initializes — which is
+why the heavy imports live inside ``main``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _force_devices(n: int | None) -> None:
+    """``--devices N`` overrides any inherited force flag (XLA honors the
+    last duplicate); the default defers to an already-present flag (CI
+    pins its own count)."""
+    if n is None:
+        from repro.substrate import ensure_host_device_count
+        ensure_host_device_count(8)
+    else:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}").strip()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.bench",
+        description="matrix-driven collective benchmarks with "
+                    "traffic-model cross-checks")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep: one message size, 5 reps")
+    ap.add_argument("--out", default="BENCH_collectives.json",
+                    help="JSON artifact path (default %(default)s)")
+    ap.add_argument("--csv", action="store_true",
+                    help="also print name,us_per_call,derived rows "
+                         "(no header: benchmarks/run.py prints its own)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force this many host devices (default: respect "
+                         "XLA_FLAGS, else 8)")
+    ap.add_argument("--max-devices", type=int, default=8,
+                    help="cap the topology matrix (default %(default)s)")
+    ap.add_argument("--families", default=None,
+                    help="comma list: allgather,broadcast,psum,allgatherv")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="timed reps per case (default 30, quick 5)")
+    ap.add_argument("--no-validate", action="store_true",
+                    help="skip the traffic-model cross-checks (timing "
+                         "only; the JSON then carries no checks)")
+    args = ap.parse_args(argv)
+
+    _force_devices(args.devices)
+
+    # jax backends initialize on first device query — after the flag above.
+    from repro.bench import report, suites
+    from repro.bench.validate import BenchValidationError
+
+    families = tuple(args.families.split(",")) if args.families \
+        else suites.FAMILIES
+    elems = suites.QUICK_ELEMS if args.quick else suites.FULL_ELEMS
+    reps = args.reps if args.reps is not None else (5 if args.quick else 30)
+
+    cases = suites.build_cases(families=families, elems=elems,
+                               max_devices=args.max_devices)
+    print(f"repro.bench: {len(cases)} cases over "
+          f"{len({c.topology for c in cases})} topologies x {elems} elems "
+          f"(reps={reps})", file=sys.stderr)
+    try:
+        suite = suites.run_suite(cases, reps=reps,
+                                 validate=not args.no_validate,
+                                 log=lambda s: print(s, file=sys.stderr))
+    except BenchValidationError as e:
+        print(f"repro.bench: {e}", file=sys.stderr)
+        return 1
+
+    rep = report.to_report(suite, quick=args.quick, reps=reps,
+                           families=families, elems=elems)
+    report.write_report(rep, args.out)
+    if args.csv:
+        for row in report.csv_rows(suite):
+            print(row)
+    ok = rep["validation"]["ok"]
+    print(f"repro.bench: wrote {args.out} "
+          f"({len(rep['cases'])} cases, validation "
+          f"{'OK' if ok else 'FAILED'}, "
+          f"{rep['validation']['num_checks']} checks)", file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

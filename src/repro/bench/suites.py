@@ -1,0 +1,340 @@
+"""Matrix-driven collective benchmark suites.
+
+Every case is one (family, scheme, topology, message size) cell:
+
+* families — ``allgather``, ``broadcast``, ``psum`` (paper §4.1/4.2 and the
+  gradient-reduction analogue) and ``allgatherv`` (irregularly populated
+  nodes, paper Figs 4/10);
+* schemes  — ``naive`` (pure-MPI analogue, private copy per rank), ``hier``
+  (two-phase schedule, still fully replicated) and ``shared`` (the paper's
+  one-copy-per-node shared-window scheme);
+* topologies — ``repro.substrate.default_matrix()``: 1x8, 2x4, 4x2, 8x1 and
+  the tuple-axis ``pod x (dp, tp)`` mesh.  Every case runs over the whole
+  matrix instead of the one shape the old subprocess script hard-coded.
+
+A case AOT-compiles once (``jit(...).lower(...).compile()``); the same
+executable is timed by ``runner.timeit`` *and* its HLO text is what
+``validate`` cross-checks against the ``core.plans`` traffic model.  Inputs
+are ``device_put`` onto the cluster mesh before timing, so host-to-device
+transfer never lands inside the timed region (another seed-bench flaw).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.bench import runner
+from repro.core import collectives as cc
+from repro.core.plans import (CollectiveTraffic, GatherPlan, NodeMap,
+                              allgather_traffic, allgatherv_traffic,
+                              allreduce_traffic, broadcast_traffic)
+from repro.substrate import VirtualCluster, default_matrix
+
+ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
+                # downcast warning of the seed bench came from f64 arange)
+
+FAMILIES = ("allgather", "broadcast", "psum", "allgatherv")
+FULL_ELEMS = (256, 4096, 65536)
+QUICK_ELEMS = (1024,)
+
+
+def slug(s: str) -> str:
+    """CSV-safe case name (``benchmarks/run.py`` matches ``^[a-z0-9_]+,``)."""
+    return re.sub(r"[^a-z0-9]+", "_", s.lower()).strip("_")
+
+
+@dataclasses.dataclass
+class BenchCase:
+    """One measurable config: a shard_map body bound to a cluster + inputs
+    + the plans.py traffic model it must agree with."""
+
+    family: str
+    scheme: str                      # naive | hier | shared
+    cluster: VirtualCluster
+    elems: int                       # per-rank (allgather[v]) / message elems
+    body: Callable
+    in_specs: tuple
+    out_specs: object
+    make_args: Callable[[], tuple]
+    traffic: CollectiveTraffic       # plans model for this scheme's class
+    plan: Optional[GatherPlan] = None        # allgatherv only
+    populations: Optional[tuple] = None      # allgatherv only
+
+    @property
+    def topology(self) -> str:
+        return self.cluster.label
+
+    @property
+    def name(self) -> str:
+        return f"{self.family}/{self.scheme}/{self.topology}/e{self.elems}"
+
+    @property
+    def csv_name(self) -> str:
+        return slug(f"{self.family}_{self.scheme}_{self.topology}"
+                    f"_{self.elems}")
+
+    def compile(self):
+        """AOT-compile on the cluster mesh.  Returns ``(compiled, args)``
+        with ``args`` already device_put to the in_specs shardings."""
+        mesh = self.cluster.mesh
+        f = jax.jit(self.cluster.smap(self.body, self.in_specs,
+                                      self.out_specs))
+        args = tuple(
+            jax.device_put(a, NamedSharding(mesh, s))
+            for a, s in zip(self.make_args(), self.in_specs))
+        return f.lower(*args).compile(), args
+
+
+def _ranked_f32(num: int) -> jax.Array:
+    return jnp.arange(num, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Family builders
+# ---------------------------------------------------------------------------
+
+def allgather_cases(vc: VirtualCluster, elems: int):
+    R = vc.num_devices
+    m_bytes = elems * ELEM_BYTES
+    tr_rep = allgather_traffic(scheme="naive", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips,
+                               bytes_per_rank=m_bytes)
+    tr_shr = allgather_traffic(scheme="hier", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips,
+                               bytes_per_rank=m_bytes)
+
+    def args():
+        return (_ranked_f32(R * elems),)
+
+    yield BenchCase(
+        "allgather", "naive", vc, elems,
+        body=lambda v: cc.naive_all_gather(v, fast_axis=vc.fast,
+                                           slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "allgather", "hier", vc, elems,
+        body=lambda v: cc.hier_all_gather(v, fast_axis=vc.fast,
+                                          slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "allgather", "shared", vc, elems,
+        body=lambda v: cc.shared_all_gather(v, fast_axis=vc.fast,
+                                            slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=vc.spec, make_args=args,
+        traffic=tr_shr)
+
+
+def _require_tiling(vc: VirtualCluster, elems: int, family: str) -> None:
+    """Scatter-based schemes shard the message over the fast tier."""
+    if elems % vc.chips:
+        raise ValueError(
+            f"{family}: elems={elems} must divide by ranks_per_node="
+            f"{vc.chips} (topology {vc.label}) for the shared shards "
+            "to tile")
+
+
+def broadcast_cases(vc: VirtualCluster, elems: int):
+    _require_tiling(vc, elems, "broadcast")
+    R = vc.num_devices
+    root = R // 2          # a non-zero, non-leader root: the flat-root API
+    n_bytes = elems * ELEM_BYTES
+    tr_rep = broadcast_traffic(scheme="naive", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
+    tr_shr = broadcast_traffic(scheme="hier", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
+
+    def args():
+        return (_ranked_f32(R * elems).reshape(R, elems),)
+
+    yield BenchCase(
+        "broadcast", "naive", vc, elems,
+        body=lambda v: cc.naive_broadcast(v[0], root=root, fast_axis=vc.fast,
+                                          slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "broadcast", "hier", vc, elems,
+        body=lambda v: cc.hier_broadcast(v[0], root=root, fast_axis=vc.fast,
+                                         slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "broadcast", "shared", vc, elems,
+        body=lambda v: cc.shared_broadcast(v[0], root=root, fast_axis=vc.fast,
+                                           slow_axis=vc.slow, axis=0),
+        in_specs=(vc.spec,), out_specs=P(vc.fast), make_args=args,
+        traffic=tr_shr)
+
+
+def psum_cases(vc: VirtualCluster, elems: int):
+    _require_tiling(vc, elems, "psum")
+    R = vc.num_devices
+    n_bytes = elems * ELEM_BYTES
+    tr_rep = allreduce_traffic(scheme="naive", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
+    tr_shr = allreduce_traffic(scheme="hier", num_nodes=vc.pods,
+                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
+
+    def args():
+        # scaled so the reduction stays well inside f32 range
+        return (_ranked_f32(R * elems).reshape(R, elems) / (R * elems),)
+
+    yield BenchCase(
+        "psum", "naive", vc, elems,
+        body=lambda v: cc.naive_psum(v[0], fast_axis=vc.fast,
+                                     slow_axis=vc.slow),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "psum", "hier", vc, elems,
+        body=lambda v: cc.hier_psum(v[0], fast_axis=vc.fast,
+                                    slow_axis=vc.slow, axis=0),
+        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
+        traffic=tr_rep)
+    yield BenchCase(
+        "psum", "shared", vc, elems,
+        body=lambda v: cc.shared_psum_scatter(v[0], fast_axis=vc.fast,
+                                              slow_axis=vc.slow, axis=0),
+        in_specs=(vc.spec,), out_specs=P(vc.fast), make_args=args,
+        traffic=tr_shr)
+
+
+def bench_populations(pods: int, chips: int) -> tuple[int, ...]:
+    """Deterministic irregular node populations: node k holds
+    ``chips - (k % chips)`` ranks (always >= 1, node 0 always full)."""
+    return tuple(chips - (k % chips) for k in range(pods))
+
+
+def allgatherv_cases(vc: VirtualCluster, max_elems: int,
+                     populations=None):
+    R = vc.num_devices
+    pops = tuple(populations) if populations is not None \
+        else bench_populations(vc.pods, vc.chips)
+    plan = GatherPlan(NodeMap.irregular(list(pops)), elem_per_rank=max_elems)
+    plan.check()
+    m_bytes = max_elems * ELEM_BYTES
+    tr_rep = allgatherv_traffic(scheme="naive", populations=pops,
+                                bytes_per_rank=m_bytes)
+    tr_shr = allgatherv_traffic(scheme="hier", populations=pops,
+                                bytes_per_rank=m_bytes)
+
+    def args():
+        data = np.arange(R * max_elems,
+                         dtype=np.float32).reshape(R, max_elems)
+        valid = np.zeros((R, 1), np.int32)
+        for p in range(vc.pods):
+            for i in range(vc.chips):
+                r = p * vc.chips + i
+                valid[r, 0] = max_elems if i < pops[p] else 0
+                if i >= pops[p]:
+                    data[r] = 0.0
+        return jnp.asarray(data), jnp.asarray(valid)
+
+    # naive gathers the padded blocks AND the counts flat (an MPI
+    # allgatherv still exchanges counts), so the two schemes move the same
+    # *kinds* of payload and C1 stays an exact shard-level ratio.
+    yield BenchCase(
+        "allgatherv", "naive", vc, max_elems,
+        body=lambda v, val: (cc.naive_all_gather(v, fast_axis=vc.fast,
+                                                 slow_axis=vc.slow),
+                             cc.naive_all_gather(val, fast_axis=vc.fast,
+                                                 slow_axis=vc.slow)),
+        in_specs=(vc.spec, vc.spec), out_specs=(P(None), P(None)),
+        make_args=args, traffic=tr_rep, plan=plan, populations=pops)
+    yield BenchCase(
+        "allgatherv", "shared", vc, max_elems,
+        body=lambda v, val: cc.shared_all_gather_v(v, val,
+                                                   slow_axis=vc.slow),
+        in_specs=(vc.spec, vc.spec),
+        out_specs=(P(None, vc.fast), P(None, vc.fast)),
+        make_args=args, traffic=tr_shr, plan=plan, populations=pops)
+
+
+_FAMILY_BUILDERS = {
+    "allgather": allgather_cases,
+    "broadcast": broadcast_cases,
+    "psum": psum_cases,
+    "allgatherv": allgatherv_cases,
+}
+
+
+def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
+                families: Sequence[str] = FAMILIES,
+                elems: Sequence[int] = FULL_ELEMS,
+                max_devices: int = 8) -> list[BenchCase]:
+    """The sweep: topology matrix x families x message sizes."""
+    if clusters is None:
+        clusters = default_matrix(max_devices)
+    unknown = set(families) - set(_FAMILY_BUILDERS)
+    if unknown:
+        raise ValueError(f"unknown families {sorted(unknown)}; "
+                         f"pick from {list(_FAMILY_BUILDERS)}")
+    cases: list[BenchCase] = []
+    for vc in clusters:
+        for e in elems:
+            for fam in families:
+                cases.extend(_FAMILY_BUILDERS[fam](vc, e))
+    return cases
+
+
+# ---------------------------------------------------------------------------
+# Suite execution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CaseResult:
+    case: BenchCase
+    timing: runner.TimingResult
+    hlo: dict                    # parsed link/result bytes (validate.py)
+    checks: list                 # per-case validate.Check list
+
+
+@dataclasses.dataclass
+class SuiteResult:
+    cases: list[CaseResult]
+    cross_checks: list           # cross-scheme C1 validate.Check list
+
+
+def run_suite(cases: Sequence[BenchCase], *, reps: int = 30,
+              min_rep_s: float = 0.0, validate: bool = True,
+              log=None) -> SuiteResult:
+    """Compile, measure and cross-check every case.
+
+    Per-case and cross-scheme (C1) validation failures are collected and
+    raised together as ``validate.BenchValidationError`` AFTER the whole
+    sweep ran, so one bad config reports alongside the full picture.
+    """
+    from repro.bench import validate as V
+
+    results: list[CaseResult] = []
+    for i, case in enumerate(cases):
+        if not case.cluster.available():
+            raise RuntimeError(
+                f"{case.name}: needs {case.cluster.num_devices} devices, "
+                f"have {jax.device_count()} — force more host devices "
+                "(see repro.substrate.ensure_host_device_count)")
+        compiled, args = case.compile()
+        # this one execution IS the timer's warmup (warmup=False below):
+        # its outputs feed the shard-level result-bytes measurement
+        outputs = runner.block_all(compiled(*args))
+        hlo_meas, checks = V.inspect_case(case, compiled.as_text(), outputs)
+        timing = runner.timeit(compiled, *args, reps=reps,
+                               min_rep_s=min_rep_s, warmup=False)
+        results.append(CaseResult(case, timing, hlo_meas,
+                                  checks if validate else []))
+        if log:
+            log(f"[{i + 1}/{len(cases)}] {case.name}: "
+                f"{timing.median_us:.1f}us (iqr {timing.iqr_us:.1f})")
+    cross = V.cross_scheme_checks(results) if validate else []
+    if validate:
+        V.raise_on_failure(results, cross)
+    return SuiteResult(results, cross)

@@ -141,43 +141,76 @@ def naive_broadcast(x: jax.Array, *, root: int, fast_axis, slow_axis=None
     return lax.psum(contrib, names)
 
 
-def hier_broadcast(x: jax.Array, *, root_pod: int = 0, fast_axis,
+def _flat_root(root, root_pod, fast_axis, slow_axis):
+    """Resolve the (root_pod, root_local) pair from a flat SMP rank.
+
+    ``root`` is a flat rank in (pod, chip) row-major order — the same
+    numbering as ``naive_broadcast``.  ``root_pod`` is the legacy pod-only
+    spelling (the pod's leader, chip 0); it is kept as an alias so existing
+    callers keep working, but new code should pass ``root``.
+    """
+    if root is not None and root_pod is not None:
+        raise TypeError("pass either root= or root_pod=, not both")
+    c = axis_size(fast_axis)
+    if root is None:
+        root = 0 if root_pod is None else root_pod * c
+    if isinstance(root, int) and isinstance(c, int):
+        total = c * (axis_size(slow_axis) if slow_axis is not None else 1)
+        if isinstance(total, int) and not 0 <= root < total:
+            raise ValueError(f"root={root} out of range for "
+                             f"{total} ranks")
+    return root // c, root % c
+
+
+def hier_broadcast(x: jax.Array, *, root: int | None = None,
+                   root_pod: int | None = None, fast_axis,
                    slow_axis=None) -> jax.Array:
     """Two-phase broadcast to full replication: bridge bcast between leaders,
-    then intra-pod bcast (leader -> children copies of the naive scheme)."""
+    then intra-pod bcast (leader -> children copies of the naive scheme).
+
+    ``root`` is the flat SMP rank of the source (same numbering as
+    ``naive_broadcast``); the chip holding it acts as its pod's leader."""
+    my_pod_root, my_local_root = _flat_root(root, root_pod, fast_axis,
+                                            slow_axis)
     fast = _axes(fast_axis)
     me_fast = axis_index(fast)
-    # intra-pod: chip 0 is the leader
     if slow_axis is not None:
         slow = _axes(slow_axis)
         my_pod = axis_index(slow)
-        lead = jnp.where((my_pod == root_pod) & (me_fast == 0), x,
-                         jnp.zeros_like(x))
+        lead = jnp.where((my_pod == my_pod_root) & (me_fast == my_local_root),
+                         x, jnp.zeros_like(x))
         lead = lax.psum(lead, slow)  # bridge bcast (only leaders nonzero)
     else:
-        lead = jnp.where(me_fast == 0, x, jnp.zeros_like(x))
-    return lax.psum(jnp.where(me_fast == 0, lead, jnp.zeros_like(lead)), fast)
+        lead = jnp.where(me_fast == my_local_root, x, jnp.zeros_like(x))
+    return lax.psum(jnp.where(me_fast == my_local_root, lead,
+                              jnp.zeros_like(lead)), fast)
 
 
-def shared_broadcast(x: jax.Array, *, root_pod: int = 0, fast_axis,
+def shared_broadcast(x: jax.Array, *, root: int | None = None,
+                     root_pod: int | None = None, fast_axis,
                      slow_axis=None, axis: int = 0) -> jax.Array:
     """Paper's scheme: ONE shared copy per pod, sharded over ``fast_axis``.
 
-    Phase 1 (intra-pod scatter at the root pod): the root leader's message is
+    Phase 1 (intra-pod scatter at the root pod): the root chip's message is
     reduce-scattered so chip *i* holds shard *i* — this is the write into the
     shared window.  Phase 2 (bridge): shard *i* crosses pods once (multi-
     leader bcast).  Children read via ``shared_read``.
+
+    ``root`` is the flat SMP rank of the source (same numbering as
+    ``naive_broadcast``); ``root_pod`` is the legacy pod-leader alias.
     """
+    my_pod_root, my_local_root = _flat_root(root, root_pod, fast_axis,
+                                            slow_axis)
     fast = _axes(fast_axis)
     me_fast = axis_index(fast)
-    contrib = jnp.where(me_fast == 0, x, jnp.zeros_like(x))
+    contrib = jnp.where(me_fast == my_local_root, x, jnp.zeros_like(x))
     shard = lax.psum_scatter(contrib, fast, scatter_dimension=axis,
                              tiled=True)
     if slow_axis is None:
         return shard
     slow = _axes(slow_axis)
     my_pod = axis_index(slow)
-    shard = jnp.where(my_pod == root_pod, shard, jnp.zeros_like(shard))
+    shard = jnp.where(my_pod == my_pod_root, shard, jnp.zeros_like(shard))
     return lax.psum(shard, slow)
 
 

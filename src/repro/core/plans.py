@@ -198,6 +198,34 @@ def allgather_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
     return CollectiveTraffic(slow, fast, result_per_node)
 
 
+def allgatherv_traffic(*, scheme: str, populations: Sequence[int],
+                       bytes_per_rank: int) -> CollectiveTraffic:
+    """Irregular-population allgather traffic (paper §5.1.3 / Fig. 10).
+
+    Every *present* rank contributes ``bytes_per_rank``; node ``k`` holds
+    ``populations[k]`` ranks.  Reduces exactly to ``allgather_traffic`` when
+    all populations are equal.  ``result_bytes_per_node`` reports the
+    worst-case (largest) node, so C1 reads: naive/hier ratio equals the
+    population of the fullest node.
+    """
+    pops = tuple(populations)
+    if not pops or any(p < 1 for p in pops):
+        raise ValueError(f"every node needs >=1 rank, got {pops}")
+    P, m = len(pops), bytes_per_rank
+    n = sum(pops) * m  # full (compact) result size
+    # bridge allgatherv among P leaders: node k's region goes to P-1 peers.
+    slow = sum(p * m * (P - 1) for p in pops)
+    if scheme == "naive":
+        fast = sum((p - 1) * m + (p - 1) * n for p in pops)
+        result_per_node = max(pops) * n
+    elif scheme == "hier":
+        fast = 0
+        result_per_node = n
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return CollectiveTraffic(slow, fast, result_per_node)
+
+
 def broadcast_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
                       msg_bytes: int) -> CollectiveTraffic:
     """Traffic for a broadcast of ``msg_bytes`` from a single root."""

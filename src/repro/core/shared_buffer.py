@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.collectives import _axes
+
 
 def choose_shard_dim(shape: tuple[int, ...], n: int,
                      skip_dims: tuple[int, ...] = ()) -> Optional[int]:
@@ -50,13 +52,12 @@ def fsdp_gather(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
     AD transpose is automatically the intra-pod reduce-scatter (the store)."""
     if dim is None:
         return x
-    axes = fast_axis if isinstance(fast_axis, tuple) else (fast_axis,)
-    return lax.all_gather(x, axes, axis=dim, tiled=True)
+    return lax.all_gather(x, _axes(fast_axis), axis=dim, tiled=True)
 
 
 def fsdp_scatter(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
     """Explicit store: reduce-scatter partial contributions back to shards."""
-    axes = fast_axis if isinstance(fast_axis, tuple) else (fast_axis,)
+    axes = _axes(fast_axis)
     if dim is None:
         return lax.psum(x, axes)
     return lax.psum_scatter(x, axes, scatter_dimension=dim, tiled=True)

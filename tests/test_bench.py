@@ -1,0 +1,199 @@
+"""repro.bench: timer regressions, report schema, validation teeth.
+
+The timer tests are regressions for the seed ``_collective_bench.timeit``
+bugs: warmup evaluated ``fn(*xs)`` up to three times, and only the FIRST
+output leaf was blocked on.  The validation tests prove the traffic
+cross-check actually fails on a mismatch (it must — the bench's whole
+value is that a number that disagrees with the model never gets written).
+"""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.bench import SCHEMA_VERSION, report, runner, suites
+from repro.bench.validate import BenchValidationError
+from repro.substrate import VirtualCluster
+
+
+# ---------------------------------------------------------------------------
+# runner.timeit regressions
+# ---------------------------------------------------------------------------
+
+class _Leaf:
+    """Pytree leaf that counts block_until_ready calls."""
+
+    def __init__(self):
+        self.blocked = 0
+
+    def block_until_ready(self):
+        self.blocked += 1
+        return self
+
+
+def test_timer_single_warmup_and_blocks_every_leaf():
+    a, b, c = _Leaf(), _Leaf(), _Leaf()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return {"x": a, "y": (b, [c])}
+
+    res = runner.timeit(fn, reps=4)
+    # seed bug 1: warmup called fn up to 3x.  Exactly 1 warmup + 4 reps:
+    assert len(calls) == 5
+    # seed bug 2: only leaves[0] was blocked.  Every leaf, every call:
+    assert a.blocked == b.blocked == c.blocked == 5
+    assert res.reps == 4 and res.inner == 1
+    assert res.min_us <= res.median_us <= res.max_us
+
+
+def test_timer_tuple_output_real_arrays():
+    x = jnp.arange(64.0)
+    res = runner.timeit(lambda: (x * 2.0, {"y": x + 1.0}), reps=2)
+    assert res.median_us > 0.0
+    assert res.iqr_us >= 0.0
+
+
+def test_timer_calibrates_inner_loop_for_tiny_fns():
+    res = runner.timeit(lambda: None, reps=2, min_rep_s=1e-3)
+    assert res.inner > 1
+
+
+def test_timer_rejects_bad_reps():
+    with pytest.raises(ValueError):
+        runner.timeit(lambda: None, reps=0)
+
+
+def test_timer_warmup_false_adds_no_extra_call():
+    """run_suite executes each compiled case once for shard inspection and
+    passes warmup=False: the sweep's per-case call count must be exactly
+    that one execution + reps."""
+    calls = []
+    runner.timeit(lambda: calls.append(1), reps=3, warmup=False)
+    assert len(calls) == 3
+    res = runner.timeit(lambda: None, reps=3, warmup=False, min_rep_s=1e-3)
+    assert res.inner > 1               # calibrated off the first timed rep
+
+
+# ---------------------------------------------------------------------------
+# Suite + report schema (golden)
+# ---------------------------------------------------------------------------
+
+_TOP_KEYS = {"schema", "generated_by", "jax_version", "backend",
+             "device_count", "sweep", "matrix", "cases", "cross_checks",
+             "validation"}
+_CASE_KEYS = {"name", "csv_name", "family", "scheme", "topology", "pods",
+              "chips", "elems", "bytes_per_rank", "populations", "timing",
+              "traffic", "hlo", "checks", "ok"}
+_TIMING_KEYS = {"median_us", "mean_us", "min_us", "max_us", "iqr_us",
+                "reps", "inner"}
+_TRAFFIC_KEYS = {"slow_bytes", "fast_bytes", "result_bytes_per_node"}
+_HLO_KEYS = {"fast_link_bytes_per_chip", "slow_link_bytes_per_chip",
+             "fast_link_bytes_total", "slow_link_bytes_total", "by_op",
+             "result_bytes_per_node"}
+_CHECK_KEYS = {"name", "expected", "measured", "ok", "note"}
+
+
+@pytest.fixture(scope="module")
+def small_suite():
+    vc = VirtualCluster(pods=2, chips=2)
+    cases = suites.build_cases(clusters=(vc,),
+                               families=("allgather", "allgatherv"),
+                               elems=(64,))
+    return suites.run_suite(cases, reps=2)
+
+
+def test_report_schema_golden(small_suite):
+    suite = small_suite
+    rep = report.to_report(suite, quick=True, reps=2,
+                           families=("allgather", "allgatherv"), elems=(64,))
+    assert rep["schema"] == SCHEMA_VERSION
+    assert set(rep) == _TOP_KEYS
+    assert rep["matrix"] == ["2x2"]
+    assert len(rep["cases"]) == 5      # 3 allgather + 2 allgatherv schemes
+    for case in rep["cases"]:
+        assert set(case) == _CASE_KEYS
+        assert set(case["timing"]) == _TIMING_KEYS
+        assert set(case["traffic"]) == _TRAFFIC_KEYS
+        assert set(case["hlo"]) == _HLO_KEYS
+        for ch in case["checks"]:
+            assert set(ch) == _CHECK_KEYS
+        assert case["ok"] is True
+    assert rep["validation"]["ok"] is True
+    assert rep["validation"]["num_checks"] > 0
+    assert {"C1", "C2", "bridge"} <= set(rep["validation"]["invariants"])
+    json.dumps(rep)                    # fully serializable
+
+
+def test_csv_rows_format_and_fixed_copies_column(small_suite):
+    suite = small_suite
+    rows = report.csv_rows(suite)
+    assert len(rows) == 5
+    by_name = {}
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        assert name == suites.slug(name)       # run.py-matchable
+        float(us)
+        by_name[name] = dict(kv.split("=") for kv in derived.split(";"))
+    # the fixed fig7 column: copies of the FULL result per node (C1),
+    # NOT rank-contribution counts
+    assert by_name["allgather_naive_2x2_64"]["copies_per_node"] == "2"
+    assert by_name["allgather_shared_2x2_64"]["copies_per_node"] == "1"
+
+
+# ---------------------------------------------------------------------------
+# Validation teeth: a mismatch must fail the run
+# ---------------------------------------------------------------------------
+
+def test_validation_catches_traffic_model_mismatch():
+    vc = VirtualCluster(pods=2, chips=2)
+    shared = [c for c in suites.allgather_cases(vc, 64)
+              if c.scheme == "shared"][0]
+    bad = dataclasses.replace(
+        shared, traffic=dataclasses.replace(
+            shared.traffic, slow_bytes=shared.traffic.slow_bytes + 4096))
+    with pytest.raises(BenchValidationError, match="model/bridge-bytes"):
+        suites.run_suite([bad], reps=1)
+
+
+def test_validation_catches_wrong_lowering():
+    """A case claiming to be 'shared' but lowering the naive flat gather
+    must trip both the link check and the measured C1 ratio."""
+    vc = VirtualCluster(pods=2, chips=2)
+    naive, _, shared = suites.allgather_cases(vc, 64)
+    impostor = dataclasses.replace(naive, scheme="shared",
+                                   traffic=shared.traffic)
+    with pytest.raises(BenchValidationError, match="C1/allgather"):
+        suites.run_suite([naive, impostor], reps=1)
+
+
+def test_no_validate_skips_checks():
+    vc = VirtualCluster(pods=2, chips=2)
+    cases = list(suites.allgather_cases(vc, 64))[:1]
+    suite = suites.run_suite(cases, reps=1, validate=False)
+    assert suite.cases[0].checks == []
+    assert suite.cross_checks == []
+
+
+# ---------------------------------------------------------------------------
+# End-to-end CLI (the CI bench-smoke path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_quick_cli_covers_full_matrix(tmp_path):
+    from repro.bench.__main__ import main
+    out = tmp_path / "BENCH_collectives.json"
+    rc = main(["--quick", "--reps", "1", "--out", str(out)])
+    assert rc == 0
+    rep = json.loads(out.read_text())
+    assert rep["schema"] == SCHEMA_VERSION
+    assert len(rep["matrix"]) == 5           # all five matrix topologies
+    assert rep["validation"]["ok"] is True
+    fams = {c["family"] for c in rep["cases"]}
+    assert fams == set(suites.FAMILIES)

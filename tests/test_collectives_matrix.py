@@ -100,6 +100,86 @@ def test_broadcast_matches_across_schemes(vc):
     np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
 
 
+def test_broadcast_nonzero_flat_root_all_schemes(vc):
+    """Non-zero roots must be expressible in all three schemes via the
+    unified flat ``root`` rank (pod, chip row-major — same numbering as
+    ``naive_broadcast``)."""
+    rng = np.random.default_rng(9)
+    msg = rng.normal(size=(vc.num_devices, 8, 2)).astype(np.float32)
+    x = jnp.asarray(msg)
+    root = vc.num_devices - 2     # non-zero; non-leader whenever chips > 1
+    want = np.broadcast_to(msg[root], msg.shape)
+
+    naive = vc.run(lambda v: cc.naive_broadcast(
+        v[0], root=root, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
+    hier = vc.run(lambda v: cc.hier_broadcast(
+        v[0], root=root, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
+    np.testing.assert_allclose(np.asarray(naive), want, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(hier), want, rtol=1e-6)
+
+    def sh(v):
+        shard = cc.shared_broadcast(v[0], root=root, fast_axis=vc.fast,
+                                    slow_axis=vc.slow, axis=0)
+        return cc.shared_read(shard, fast_axis=vc.fast)[None]
+
+    full = vc.run(sh, x)
+    np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
+
+
+def test_broadcast_root_pod_alias_matches_flat_root(vc):
+    """Legacy ``root_pod=p`` must equal flat ``root = p * chips`` (the
+    pod's leader), and passing both must be rejected."""
+    rng = np.random.default_rng(10)
+    msg = rng.normal(size=(vc.num_devices, 4)).astype(np.float32)
+    x = jnp.asarray(msg)
+    pod = vc.pods - 1
+
+    old = vc.run(lambda v: cc.hier_broadcast(
+        v[0], root_pod=pod, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
+    new = vc.run(lambda v: cc.hier_broadcast(
+        v[0], root=pod * vc.chips, fast_axis=vc.fast,
+        slow_axis=vc.slow)[None], x)
+    np.testing.assert_allclose(np.asarray(old), np.asarray(new))
+
+    with pytest.raises(TypeError):
+        cc.hier_broadcast(jnp.zeros(4), root=0, root_pod=0,
+                          fast_axis=vc.fast, slow_axis=vc.slow)
+
+
+def test_broadcast_out_of_range_root_rejected(vc):
+    """An out-of-range flat root must raise, not silently broadcast the
+    wrong rank (or zeros)."""
+    with pytest.raises(ValueError, match="out of range"):
+        vc.run(lambda v: cc.hier_broadcast(
+            v[0], root=vc.num_devices, fast_axis=vc.fast,
+            slow_axis=vc.slow)[None], jnp.zeros((vc.num_devices, 4)))
+    with pytest.raises(ValueError, match="out of range"):
+        vc.run(lambda v: cc.shared_broadcast(
+            v[0], root=-1, fast_axis=vc.fast,
+            slow_axis=vc.slow)[None], jnp.zeros((vc.num_devices, 8)))
+
+
+def test_fsdp_helpers_accept_list_axis(vc):
+    """Regression: ``fsdp_gather``/``fsdp_scatter`` normalized the axis
+    with ``isinstance(..., tuple)`` only, silently breaking the list
+    spelling that ``collectives._axes`` accepts everywhere else."""
+    from repro.core import shared_buffer as sb
+
+    x = vc.rank_major_input(m=2)
+    fast_list = list(vc.fast_names)          # a LIST, the broken path
+    out_spec = P(vc.slow) if vc.pods > 1 else P(None)
+    full = vc.run(lambda v: sb.fsdp_gather(v, 0, fast_list), x,
+                  out_specs=out_spec)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(x))
+
+    # gather -> scatter roundtrip: the reduce-scatter of chips identical
+    # replicas returns chips * the original shard
+    rt = vc.run(lambda v: sb.fsdp_scatter(
+        sb.fsdp_gather(v, 0, fast_list), 0, fast_list), x)
+    np.testing.assert_allclose(np.asarray(rt), vc.chips * np.asarray(x),
+                               rtol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # Allreduce / psum-scatter
 # ---------------------------------------------------------------------------

@@ -16,12 +16,14 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.plans import (GatherPlan, NodeMap, allgather_traffic,
-                              allreduce_traffic, broadcast_traffic,
-                              collective_time_model)
+                              allgatherv_traffic, allreduce_traffic,
+                              broadcast_traffic, collective_time_model)
 
 nodes = st.integers(min_value=1, max_value=12)
 ppn = st.integers(min_value=1, max_value=32)
 msg = st.integers(min_value=1, max_value=1 << 20)
+pops_st = st.lists(st.integers(min_value=1, max_value=32), min_size=1,
+                   max_size=12)
 
 
 @given(nodes, ppn, st.integers(min_value=1, max_value=4096))
@@ -77,6 +79,54 @@ def test_allgather_intra_node_copy_claim(P, c, m):
         assert naive.fast_bytes > 0
     # C3: identical slow-tier bytes (the bridge exchanges node regions)
     assert hier.slow_bytes == naive.slow_bytes
+
+
+@given(pops_st, st.integers(min_value=1, max_value=1 << 16))
+@settings(max_examples=200, deadline=None)
+def test_allgatherv_traffic_consistent_with_gather_plan(pops, m):
+    """The irregular traffic model and the GatherPlan displacement algebra
+    describe the SAME exchange: bridge bytes are exactly every node region
+    (the plan's counts) sent to the other P-1 leaders."""
+    plan = GatherPlan(NodeMap.irregular(pops), elem_per_rank=m)
+    plan.check()
+    P = len(pops)
+    hier = allgatherv_traffic(scheme="hier", populations=pops,
+                              bytes_per_rank=m)
+    naive = allgatherv_traffic(scheme="naive", populations=pops,
+                               bytes_per_rank=m)
+    assert hier.slow_bytes == sum(cnt * (P - 1) for cnt in plan.counts())
+    assert hier.slow_bytes == plan.total_elems * (P - 1)
+    # bridge bytes are scheme-independent (paper: inter-node unchanged)
+    assert naive.slow_bytes == hier.slow_bytes
+    # C2: the shared window removes ALL intra-node copies
+    assert hier.fast_bytes == 0
+    assert (naive.fast_bytes > 0) == any(p > 1 for p in pops)
+    # C1, irregular form: the fullest node's population is the ratio
+    assert hier.result_bytes_per_node == plan.total_elems
+    assert naive.result_bytes_per_node == max(pops) * plan.total_elems
+    assert naive.result_bytes_per_node // hier.result_bytes_per_node \
+        == max(pops)
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_allgatherv_reduces_to_allgather_on_regular_pops(P, c, m):
+    for scheme in ("naive", "hier"):
+        flat = allgather_traffic(scheme=scheme, num_nodes=P,
+                                 ranks_per_node=c, bytes_per_rank=m)
+        irr = allgatherv_traffic(scheme=scheme, populations=[c] * P,
+                                 bytes_per_rank=m)
+        assert flat == irr
+
+
+def test_allgatherv_traffic_rejects_bad_populations():
+    with pytest.raises(ValueError):
+        allgatherv_traffic(scheme="hier", populations=[], bytes_per_rank=1)
+    with pytest.raises(ValueError):
+        allgatherv_traffic(scheme="hier", populations=[2, 0],
+                           bytes_per_rank=1)
+    with pytest.raises(ValueError):
+        allgatherv_traffic(scheme="smp", populations=[2], bytes_per_rank=1)
 
 
 @given(nodes, ppn, msg)
