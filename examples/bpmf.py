@@ -31,11 +31,13 @@ import numpy as np              # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import collectives as cc          # noqa: E402
+from repro.comm import Communicator               # noqa: E402
 from repro.core.plans import allgather_traffic    # noqa: E402
 from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
 NODES, CORES = 2, 4
+COMM = Communicator(fast_axis="core", slow_axis="node", pods=NODES,
+                    chips=CORES)
 D = 16           # latent dim
 BETA = 100.0     # observation precision (matches noise sd 0.1)
 LAM = 16.0       # prior precision (= D, the BPMF default scale)
@@ -44,11 +46,9 @@ LAM = 16.0       # prior precision (= D, the BPMF default scale)
 def gather(x, scheme):
     """Allgather factor shards: (n_loc, D) -> (N, D)."""
     if scheme == "naive":
-        return cc.naive_all_gather(x, fast_axis="core", slow_axis="node")
-    shard = cc.shared_all_gather(x, fast_axis="core", slow_axis="node")
-    full = cc.shared_read(shard, fast_axis="core")
-    return cc.shared_to_rank_order(full, num_pods=NODES,
-                                   chips_per_pod=CORES)
+        return COMM.allgather(x, scheme="naive")
+    # hybrid: ONE shared copy per node (a SharedWindow), read at use
+    return COMM.allgather(x, scheme="shared").read_rank_order()
 
 
 def sample_factors(r_loc, mask_loc, other_full, key):

@@ -31,11 +31,14 @@ import numpy as np              # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import collectives as cc    # noqa: E402
+from repro.comm import Communicator         # noqa: E402
 from repro.core.plans import broadcast_traffic  # noqa: E402
 from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
 NODES, CORES = 4, 4   # grid rows = nodes (fast tier inside a row)
+# a grid row is one shared-memory node: cores exchange panels in-node
+ROW_COMM = Communicator(fast_axis="core", slow_axis=None, pods=1,
+                        chips=CORES)
 
 
 def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False):
@@ -57,10 +60,9 @@ def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False):
             a_src = jnp.where(j == k, a_blk, jnp.zeros_like(a_blk))
             if scheme == "naive":
                 a_panel = lax.psum(a_src, "core")
-            else:  # hybrid: one shared copy per node, read at use
-                shard = lax.psum_scatter(a_src, "core", scatter_dimension=0,
-                                         tiled=True)
-                a_panel = cc.shared_read(shard, fast_axis="core")
+            else:  # hybrid: one shared panel per node (a window), read at use
+                a_panel = ROW_COMM.reduce_scatter(a_src,
+                                                  scheme="shared").read()
             # column broadcast of B[k, :] (owner node k) — bridge tier
             b_src = jnp.where(i == k, b_blk, jnp.zeros_like(b_blk))
             b_panel = lax.psum(b_src, "node")

@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""API-surface check: collectives go through ``repro.comm``, nowhere else.
+
+Fails (exit 1) if any module outside ``src/repro/comm/`` and the deprecated
+shim ``src/repro/core/collectives.py`` passes raw ``fast_axis=`` /
+``slow_axis=`` keyword arguments — the old free-function calling convention
+the ``Communicator`` replaced.  A violation means a consumer bypassed the
+scheme registry and would silently miss future scheme/validation coverage.
+
+Allowed everywhere:
+  * ``VirtualCluster(...)`` construction (the substrate's topology spec is
+    where the axis names legitimately live);
+  * ``Communicator(...)`` construction (same: the tier spec, not a call);
+  * annotated attribute/field definitions (``fast_axis: Axis = "data"``)
+    never match the kwarg pattern.
+
+Grep-based by design (no imports, no AST): run it anywhere, instantly.
+
+    python scripts/check_api_surface.py [root]
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+KWARG_RE = re.compile(r"\b(?:fast_axis|slow_axis)\s*=(?!=)")
+ALLOWED_LINE_RE = re.compile(r"\b(?:VirtualCluster|Communicator)\s*\(")
+
+SCAN_ROOTS = ("src/repro", "benchmarks", "examples")
+ALLOWED_PATHS = (
+    "src/repro/comm/",               # the API itself
+    "src/repro/core/collectives.py",  # deprecated shim (one release)
+)
+
+
+def violations(repo: pathlib.Path) -> list[str]:
+    out: list[str] = []
+    for root in SCAN_ROOTS:
+        base = repo / root
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(repo).as_posix()
+            if any(rel.startswith(a) for a in ALLOWED_PATHS):
+                continue
+            depth = 0          # open-paren depth of an allowed call: its
+            for lineno, line in enumerate(  # continuation lines are allowed
+                    path.read_text().splitlines(), start=1):
+                code = line.split("#", 1)[0]
+                m = ALLOWED_LINE_RE.search(code)
+                if depth == 0 and m:
+                    # heuristic: text before the constructor and after its
+                    # same-line close is still checked; only the call's own
+                    # (possibly multi-line) argument list is exempt — a
+                    # violation nested INSIDE a constructor argument would
+                    # slip by, which AST-free grep accepts.
+                    if KWARG_RE.search(code[:m.start()]):
+                        out.append(f"{rel}:{lineno}: {line.strip()}")
+                    d, end = 0, None
+                    for idx in range(m.start(), len(code)):
+                        if code[idx] == "(":
+                            d += 1
+                        elif code[idx] == ")":
+                            d -= 1
+                            if d == 0:
+                                end = idx + 1
+                                break
+                    if end is None:          # call continues on next lines
+                        depth = d
+                        continue
+                    if KWARG_RE.search(code[end:]) and \
+                            not ALLOWED_LINE_RE.search(code[end:]):
+                        out.append(f"{rel}:{lineno}: {line.strip()}")
+                    continue
+                if depth > 0:
+                    depth = max(depth + code.count("(") - code.count(")"), 0)
+                    continue
+                if KWARG_RE.search(code):
+                    out.append(f"{rel}:{lineno}: {line.strip()}")
+    return out
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    repo = pathlib.Path(args[0]) if args else \
+        pathlib.Path(__file__).resolve().parent.parent
+    bad = violations(repo)
+    if bad:
+        print("api-surface check FAILED: raw fast_axis=/slow_axis= kwargs "
+              "outside repro/comm — route these call sites through "
+              "repro.comm.Communicator (README 'Communicator API'):",
+              file=sys.stderr)
+        for v in bad:
+            print(f"  {v}", file=sys.stderr)
+        return 1
+    print("api-surface check OK: all collective call sites go through "
+          "repro.comm")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -5,13 +5,16 @@ backbone:
 
 * ``runner``   — calibrated microbenchmark timer: exactly one warmup call,
   blocking on *every* output leaf, median-of-reps with dispersion;
-* ``suites``   — sweeps the naive/hier/shared allgather, broadcast, psum and
-  irregular allgatherv families over ``repro.substrate.default_matrix()``
-  (1x8, 2x4, 4x2, 8x1, tuple-axis) x message sizes;
+* ``suites``   — sweeps the allgather, broadcast, psum, irregular allgatherv
+  and alltoall families over ``repro.substrate.default_matrix()`` (1x8,
+  2x4, 4x2, 8x1, tuple-axis) x message sizes, with the scheme list per
+  family pulled from the ``repro.comm`` registry and every case dispatched
+  through a ``Communicator``;
 * ``validate`` — cross-checks every measured config's compiled-HLO collective
-  bytes (``analysis.roofline.parse_collectives``) against the ``core.plans``
-  traffic model; the paper's C1 one-copy-per-node claim is an asserted
-  invariant (naive/shared resident-result ratio == ranks_per_node) and any
+  bytes (``analysis.roofline.parse_collectives``) against the scheme's
+  self-described traffic model/lowering (``repro.comm.registry``); the
+  paper's C1 one-copy-per-node claim is an asserted invariant
+  (replicated/shared resident-result ratio == ranks_per_node) and any
   mismatch fails the run;
 * ``report``   — schema-versioned ``BENCH_collectives.json`` + the legacy
   ``name,us_per_call,derived`` CSV rows.

@@ -49,7 +49,8 @@ def main(argv=None) -> int:
     ap.add_argument("--max-devices", type=int, default=8,
                     help="cap the topology matrix (default %(default)s)")
     ap.add_argument("--families", default=None,
-                    help="comma list: allgather,broadcast,psum,allgatherv")
+                    help="comma list: allgather,broadcast,psum,allgatherv,"
+                         "alltoall")
     ap.add_argument("--reps", type=int, default=None,
                     help="timed reps per case (default 30, quick 5)")
     ap.add_argument("--no-validate", action="store_true",

@@ -53,7 +53,9 @@ def copies_per_node(r: CaseResult) -> int:
     a node holds (naive: one per rank; shared: one — paper C1).  The seed
     bench divided by per-rank bytes and printed rank counts instead."""
     c = r.case
-    if c.family == "allgather":
+    if c.family in ("allgather", "alltoall"):
+        # alltoall: the "full result" is one rank's R*m receive buffer —
+        # rank-private in every scheme, so copies_per_node == ranks_per_node
         full = c.cluster.num_devices * c.elems * 4
     elif c.family == "allgatherv":
         full = sum(c.populations) * c.elems * 4

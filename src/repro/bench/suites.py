@@ -3,20 +3,22 @@
 Every case is one (family, scheme, topology, message size) cell:
 
 * families — ``allgather``, ``broadcast``, ``psum`` (paper §4.1/4.2 and the
-  gradient-reduction analogue) and ``allgatherv`` (irregularly populated
-  nodes, paper Figs 4/10);
-* schemes  — ``naive`` (pure-MPI analogue, private copy per rank), ``hier``
-  (two-phase schedule, still fully replicated) and ``shared`` (the paper's
-  one-copy-per-node shared-window scheme);
+  gradient-reduction analogue), ``allgatherv`` (irregularly populated
+  nodes, paper Figs 4/10) and ``alltoall`` (personalized exchange: flat vs
+  node-aware two-phase schedule);
+* schemes  — whatever the ``repro.comm`` registry declares for the family
+  (today ``naive``/``hier``/``shared``): cases are built by sweeping
+  ``registry.schemes_for(family)`` and dispatching through a
+  ``Communicator``, so registering a new scheme adds it to the sweep with
+  no edits here;
 * topologies — ``repro.substrate.default_matrix()``: 1x8, 2x4, 4x2, 8x1 and
-  the tuple-axis ``pod x (dp, tp)`` mesh.  Every case runs over the whole
-  matrix instead of the one shape the old subprocess script hard-coded.
+  the tuple-axis ``pod x (dp, tp)`` mesh.
 
 A case AOT-compiles once (``jit(...).lower(...).compile()``); the same
 executable is timed by ``runner.timeit`` *and* its HLO text is what
-``validate`` cross-checks against the ``core.plans`` traffic model.  Inputs
-are ``device_put`` onto the cluster mesh before timing, so host-to-device
-transfer never lands inside the timed region (another seed-bench flaw).
+``validate`` cross-checks against the scheme's self-described traffic model.
+Inputs are ``device_put`` onto the cluster mesh before timing, so
+host-to-device transfer never lands inside the timed region.
 """
 
 from __future__ import annotations
@@ -31,16 +33,14 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.bench import runner
-from repro.core import collectives as cc
-from repro.core.plans import (CollectiveTraffic, GatherPlan, NodeMap,
-                              allgather_traffic, allgatherv_traffic,
-                              allreduce_traffic, broadcast_traffic)
+from repro.comm import Communicator, SharedWindow, registry
+from repro.core.plans import CollectiveTraffic, GatherPlan, NodeMap
 from repro.substrate import VirtualCluster, default_matrix
 
 ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
                 # downcast warning of the seed bench came from f64 arange)
 
-FAMILIES = ("allgather", "broadcast", "psum", "allgatherv")
+FAMILIES = ("allgather", "broadcast", "psum", "allgatherv", "alltoall")
 FULL_ELEMS = (256, 4096, 65536)
 QUICK_ELEMS = (1024,)
 
@@ -50,20 +50,25 @@ def slug(s: str) -> str:
     return re.sub(r"[^a-z0-9]+", "_", s.lower()).strip("_")
 
 
+def _raw(out):
+    """Bench bodies return arrays: unwrap shared-scheme windows."""
+    return out.shard if isinstance(out, SharedWindow) else out
+
+
 @dataclasses.dataclass
 class BenchCase:
     """One measurable config: a shard_map body bound to a cluster + inputs
-    + the plans.py traffic model it must agree with."""
+    + the registry-supplied traffic model it must agree with."""
 
     family: str
-    scheme: str                      # naive | hier | shared
+    scheme: str                      # a repro.comm registry entry name
     cluster: VirtualCluster
-    elems: int                       # per-rank (allgather[v]) / message elems
+    elems: int                       # per-rank / message / per-pair elems
     body: Callable
     in_specs: tuple
     out_specs: object
     make_args: Callable[[], tuple]
-    traffic: CollectiveTraffic       # plans model for this scheme's class
+    traffic: CollectiveTraffic       # scheme.traffic(...) for this config
     plan: Optional[GatherPlan] = None        # allgatherv only
     populations: Optional[tuple] = None      # allgatherv only
 
@@ -97,40 +102,24 @@ def _ranked_f32(num: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Family builders
+# Family builders (one BenchCase per registered scheme)
 # ---------------------------------------------------------------------------
 
 def allgather_cases(vc: VirtualCluster, elems: int):
+    comm = Communicator.from_cluster(vc)
     R = vc.num_devices
-    m_bytes = elems * ELEM_BYTES
-    tr_rep = allgather_traffic(scheme="naive", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips,
-                               bytes_per_rank=m_bytes)
-    tr_shr = allgather_traffic(scheme="hier", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips,
-                               bytes_per_rank=m_bytes)
 
     def args():
         return (_ranked_f32(R * elems),)
 
-    yield BenchCase(
-        "allgather", "naive", vc, elems,
-        body=lambda v: cc.naive_all_gather(v, fast_axis=vc.fast,
-                                           slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "allgather", "hier", vc, elems,
-        body=lambda v: cc.hier_all_gather(v, fast_axis=vc.fast,
-                                          slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "allgather", "shared", vc, elems,
-        body=lambda v: cc.shared_all_gather(v, fast_axis=vc.fast,
-                                            slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=vc.spec, make_args=args,
-        traffic=tr_shr)
+    for sch in registry.schemes_for("allgather"):
+        out_specs = P(None) if sch.result_class == "replicated" else vc.spec
+        yield BenchCase(
+            "allgather", sch.name, vc, elems,
+            body=lambda v, s=sch.name: _raw(comm.allgather(v, scheme=s)),
+            in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
+            traffic=sch.traffic("allgather", pods=vc.pods, chips=vc.chips,
+                                elems=elems, elem_bytes=ELEM_BYTES))
 
 
 def _require_tiling(vc: VirtualCluster, elems: int, family: str) -> None:
@@ -144,68 +133,61 @@ def _require_tiling(vc: VirtualCluster, elems: int, family: str) -> None:
 
 def broadcast_cases(vc: VirtualCluster, elems: int):
     _require_tiling(vc, elems, "broadcast")
+    comm = Communicator.from_cluster(vc)
     R = vc.num_devices
     root = R // 2          # a non-zero, non-leader root: the flat-root API
-    n_bytes = elems * ELEM_BYTES
-    tr_rep = broadcast_traffic(scheme="naive", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
-    tr_shr = broadcast_traffic(scheme="hier", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
 
     def args():
         return (_ranked_f32(R * elems).reshape(R, elems),)
 
-    yield BenchCase(
-        "broadcast", "naive", vc, elems,
-        body=lambda v: cc.naive_broadcast(v[0], root=root, fast_axis=vc.fast,
-                                          slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "broadcast", "hier", vc, elems,
-        body=lambda v: cc.hier_broadcast(v[0], root=root, fast_axis=vc.fast,
-                                         slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "broadcast", "shared", vc, elems,
-        body=lambda v: cc.shared_broadcast(v[0], root=root, fast_axis=vc.fast,
-                                           slow_axis=vc.slow, axis=0),
-        in_specs=(vc.spec,), out_specs=P(vc.fast), make_args=args,
-        traffic=tr_shr)
+    for sch in registry.schemes_for("broadcast"):
+        out_specs = P(None) if sch.result_class == "replicated" \
+            else P(vc.fast)
+        yield BenchCase(
+            "broadcast", sch.name, vc, elems,
+            body=lambda v, s=sch.name:
+                _raw(comm.broadcast(v[0], root=root, scheme=s)),
+            in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
+            traffic=sch.traffic("broadcast", pods=vc.pods, chips=vc.chips,
+                                elems=elems, elem_bytes=ELEM_BYTES))
 
 
 def psum_cases(vc: VirtualCluster, elems: int):
     _require_tiling(vc, elems, "psum")
+    comm = Communicator.from_cluster(vc)
     R = vc.num_devices
-    n_bytes = elems * ELEM_BYTES
-    tr_rep = allreduce_traffic(scheme="naive", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
-    tr_shr = allreduce_traffic(scheme="hier", num_nodes=vc.pods,
-                               ranks_per_node=vc.chips, msg_bytes=n_bytes)
 
     def args():
         # scaled so the reduction stays well inside f32 range
         return (_ranked_f32(R * elems).reshape(R, elems) / (R * elems),)
 
-    yield BenchCase(
-        "psum", "naive", vc, elems,
-        body=lambda v: cc.naive_psum(v[0], fast_axis=vc.fast,
-                                     slow_axis=vc.slow),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "psum", "hier", vc, elems,
-        body=lambda v: cc.hier_psum(v[0], fast_axis=vc.fast,
-                                    slow_axis=vc.slow, axis=0),
-        in_specs=(vc.spec,), out_specs=P(None), make_args=args,
-        traffic=tr_rep)
-    yield BenchCase(
-        "psum", "shared", vc, elems,
-        body=lambda v: cc.shared_psum_scatter(v[0], fast_axis=vc.fast,
-                                              slow_axis=vc.slow, axis=0),
-        in_specs=(vc.spec,), out_specs=P(vc.fast), make_args=args,
-        traffic=tr_shr)
+    for sch in registry.schemes_for("psum"):
+        out_specs = P(None) if sch.result_class == "replicated" \
+            else P(vc.fast)
+        yield BenchCase(
+            "psum", sch.name, vc, elems,
+            body=lambda v, s=sch.name: _raw(comm.allreduce(v[0], scheme=s)),
+            in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
+            traffic=sch.traffic("psum", pods=vc.pods, chips=vc.chips,
+                                elems=elems, elem_bytes=ELEM_BYTES))
+
+
+def alltoall_cases(vc: VirtualCluster, elems: int):
+    """Personalized exchange: every rank holds R rank-ordered chunks of
+    ``elems`` each; chunk *s* goes to rank *s* (flat vs node-aware)."""
+    comm = Communicator.from_cluster(vc)
+    R = vc.num_devices
+
+    def args():
+        return (_ranked_f32(R * R * elems),)
+
+    for sch in registry.schemes_for("alltoall"):
+        yield BenchCase(
+            "alltoall", sch.name, vc, elems,
+            body=lambda v, s=sch.name: comm.alltoall(v, scheme=s),
+            in_specs=(vc.spec,), out_specs=vc.spec, make_args=args,
+            traffic=sch.traffic("alltoall", pods=vc.pods, chips=vc.chips,
+                                elems=elems, elem_bytes=ELEM_BYTES))
 
 
 def bench_populations(pods: int, chips: int) -> tuple[int, ...]:
@@ -216,47 +198,41 @@ def bench_populations(pods: int, chips: int) -> tuple[int, ...]:
 
 def allgatherv_cases(vc: VirtualCluster, max_elems: int,
                      populations=None):
+    comm = Communicator.from_cluster(vc)
     R = vc.num_devices
     pops = tuple(populations) if populations is not None \
         else bench_populations(vc.pods, vc.chips)
     plan = GatherPlan(NodeMap.irregular(list(pops)), elem_per_rank=max_elems)
     plan.check()
-    m_bytes = max_elems * ELEM_BYTES
-    tr_rep = allgatherv_traffic(scheme="naive", populations=pops,
-                                bytes_per_rank=m_bytes)
-    tr_shr = allgatherv_traffic(scheme="hier", populations=pops,
-                                bytes_per_rank=m_bytes)
 
     def args():
         data = np.arange(R * max_elems,
                          dtype=np.float32).reshape(R, max_elems)
         valid = np.zeros((R, 1), np.int32)
-        for p in range(vc.pods):
+        for pd in range(vc.pods):
             for i in range(vc.chips):
-                r = p * vc.chips + i
-                valid[r, 0] = max_elems if i < pops[p] else 0
-                if i >= pops[p]:
+                r = pd * vc.chips + i
+                valid[r, 0] = max_elems if i < pops[pd] else 0
+                if i >= pops[pd]:
                     data[r] = 0.0
         return jnp.asarray(data), jnp.asarray(valid)
 
-    # naive gathers the padded blocks AND the counts flat (an MPI
+    # the naive scheme gathers the padded blocks AND the counts flat (an MPI
     # allgatherv still exchanges counts), so the two schemes move the same
     # *kinds* of payload and C1 stays an exact shard-level ratio.
-    yield BenchCase(
-        "allgatherv", "naive", vc, max_elems,
-        body=lambda v, val: (cc.naive_all_gather(v, fast_axis=vc.fast,
-                                                 slow_axis=vc.slow),
-                             cc.naive_all_gather(val, fast_axis=vc.fast,
-                                                 slow_axis=vc.slow)),
-        in_specs=(vc.spec, vc.spec), out_specs=(P(None), P(None)),
-        make_args=args, traffic=tr_rep, plan=plan, populations=pops)
-    yield BenchCase(
-        "allgatherv", "shared", vc, max_elems,
-        body=lambda v, val: cc.shared_all_gather_v(v, val,
-                                                   slow_axis=vc.slow),
-        in_specs=(vc.spec, vc.spec),
-        out_specs=(P(None, vc.fast), P(None, vc.fast)),
-        make_args=args, traffic=tr_shr, plan=plan, populations=pops)
+    for sch in registry.schemes_for("allgatherv"):
+        out_specs = (P(None), P(None)) if sch.result_class == "replicated" \
+            else (P(None, vc.fast), P(None, vc.fast))
+        yield BenchCase(
+            "allgatherv", sch.name, vc, max_elems,
+            body=lambda v, val, s=sch.name:
+                comm.allgatherv(v, val, scheme=s),
+            in_specs=(vc.spec, vc.spec), out_specs=out_specs,
+            make_args=args,
+            traffic=sch.traffic("allgatherv", pods=vc.pods, chips=vc.chips,
+                                elems=max_elems, elem_bytes=ELEM_BYTES,
+                                populations=pops),
+            plan=plan, populations=pops)
 
 
 _FAMILY_BUILDERS = {
@@ -264,6 +240,7 @@ _FAMILY_BUILDERS = {
     "broadcast": broadcast_cases,
     "psum": psum_cases,
     "allgatherv": allgatherv_cases,
+    "alltoall": alltoall_cases,
 }
 
 

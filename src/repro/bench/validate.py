@@ -1,4 +1,4 @@
-"""Traffic-model cross-checks: compiled HLO vs ``core.plans``.
+"""Traffic-model cross-checks: compiled HLO vs the scheme registry.
 
 Three layers run for every measured config; ANY mismatch fails the bench
 run (``BenchValidationError``):
@@ -6,42 +6,40 @@ run (``BenchValidationError``):
 1. **Lowering check** (``link/fast``, ``link/slow``) — the per-chip link
    bytes parsed out of the compiled HLO by
    ``analysis.roofline.parse_collectives`` (ring model) must equal the
-   closed-form expectation for the exact collective sequence each scheme
-   lowers to.  This pins the compiled artifact: an XLA rewrite, a wrong
-   replica group, or an accidental extra collective shows up here.
+   scheme's self-described closed form for the exact collective sequence it
+   lowers to (``repro.comm.registry.CollectiveScheme.links``).  This pins
+   the compiled artifact: an XLA rewrite, a wrong replica group, or an
+   accidental extra collective shows up here.
 
 2. **Model identities** (``model/*``) — documented exact mappings between
-   the parsed wire/resident bytes and the ``plans.py`` traffic model:
-
-   * shared allgather bridge bytes == model ``slow_bytes`` (and zero
-     intra-node bytes — paper C2);
-   * hier allgather bridge bytes == ranks_per_node x the shared bridge:
-     full replication pays C1 *on the wire*;
-   * the psum-emulated broadcast costs exactly 2x the model's one-way
-     bytes (a psum moves data up and back down the ring);
-   * the flat naive psum's total wire bytes == model ring total; the
-     shared/hier psum bridge == num_nodes x the model's per-node shard
-     ring, intra-node RS(+AG) == c/2 (c) x the model's per-node cycle;
-   * irregular allgatherv: padded wire bytes scaled by the compact
-     fraction == the model's compact bridge bytes (GatherPlan-consistent);
-   * resident result bytes per node (measured from the actual output
-     shards) == model ``result_bytes_per_node``.
+   the parsed wire/resident bytes and the ``core.plans`` traffic model,
+   declared by each scheme (``CollectiveScheme.identities``): e.g. the
+   shared allgather's bridge bytes == model ``slow_bytes`` with zero
+   intra-node bytes (paper C2); the hier allgather paying C1 *on the wire*;
+   the psum-emulated broadcast's exact factor 2; the irregular allgatherv's
+   padded-to-compact GatherPlan scaling; the node-aware alltoall's
+   superchunks crossing the bridge exactly once.
 
 3. **C1, the paper's memory claim** (``C1/*``) — within every (family,
-   topology, size) group, the measured naive/shared resident-result ratio
-   equals ranks_per_node, from the real shards on the real devices.
+   topology, size) group holding both result classes, the measured
+   replicated/shared resident-result ratio equals ranks_per_node, from the
+   real shards on the real devices; and every replicated-class scheme holds
+   identical resident bytes.
+
+Nothing here matches scheme *names*: expectations come from the registry
+entry, so a newly registered scheme is cross-checked automatically.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax
 
 from repro.analysis.roofline import parse_collectives
 from repro.bench.suites import ELEM_BYTES, BenchCase, CaseResult
-from repro.core.plans import allgather_traffic, allreduce_traffic
+from repro.comm import registry
 
 
 class BenchValidationError(AssertionError):
@@ -69,96 +67,25 @@ class Check:
 
 
 # ---------------------------------------------------------------------------
-# Ring-model closed forms for each scheme's known lowering (per-chip bytes,
-# matching parse_collectives' accounting exactly).
+# Registry-supplied expectations
 # ---------------------------------------------------------------------------
-
-def _ag(out_bytes: float, n: int) -> float:
-    return out_bytes * (n - 1) / n if n > 1 else 0.0
-
-
-def _rs(out_bytes: float, n: int) -> float:
-    return out_bytes * (n - 1) if n > 1 else 0.0
-
-
-def _ar(msg_bytes: float, n: int) -> float:
-    return 2.0 * msg_bytes * (n - 1) / n if n > 1 else 0.0
-
 
 def expected_links(case: BenchCase) -> tuple[float, float]:
     """Expected (fast, slow) per-chip link bytes of the case's lowering."""
-    Pn, c = case.cluster.pods, case.cluster.chips
-    R = Pn * c
-    m = case.elems * ELEM_BYTES        # per-rank / message bytes
-    fam, sch = case.family, case.scheme
-    fast = slow = 0.0
-    if fam == "allgather":
-        n = R * m
-        if sch == "naive":             # one flat all-gather over all ranks
-            if Pn > 1:
-                slow = _ag(n, R)
-            else:
-                fast = _ag(n, c)
-        elif sch == "hier":            # intra-pod AG, then bridge AG
-            fast = _ag(c * m, c)
-            slow = _ag(n, Pn)
-        else:                          # shared: bridge AG only
-            slow = _ag(Pn * m, Pn)
-    elif fam == "broadcast":
-        if sch == "naive":             # masked psum over all ranks
-            if Pn > 1:
-                slow = _ar(m, R)
-            else:
-                fast = _ar(m, c)
-        elif sch == "hier":            # bridge psum, then intra-pod psum
-            slow = _ar(m, Pn)
-            fast = _ar(m, c)
-        else:                          # shared: intra RS, bridge psum on shard
-            fast = _rs(m / c, c)
-            slow = _ar(m / c, Pn)
-    elif fam == "psum":
-        if sch == "naive":             # one flat all-reduce
-            if Pn > 1:
-                slow = _ar(m, R)
-            else:
-                fast = _ar(m, c)
-        elif sch == "hier":            # RS fast + AR bridge + AG fast
-            fast = _rs(m / c, c) + _ag(m, c)
-            slow = _ar(m / c, Pn)
-        else:                          # shared: RS fast + AR bridge
-            fast = _rs(m / c, c)
-            slow = _ar(m / c, Pn)
-    elif fam == "allgatherv":
-        cnt = 4                        # int32 valid-count payload per rank
-        if sch == "naive":             # flat AG of padded blocks + counts
-            if Pn > 1:
-                slow = _ag(R * m, R) + _ag(R * cnt, R)
-            else:
-                fast = _ag(R * m, c) + _ag(R * cnt, c)
-        else:                          # shared: bridge AG of padded + counts
-            slow = _ag(Pn * m, Pn) + _ag(Pn * cnt, Pn)
-    else:
-        raise ValueError(f"unknown family {fam!r}")
-    return fast, slow
+    vc = case.cluster
+    return registry.get_scheme(case.scheme).links(
+        case.family, pods=vc.pods, chips=vc.chips, fast_shape=vc.fast_shape,
+        elems=case.elems, elem_bytes=ELEM_BYTES)
 
 
 def expected_result_node(case: BenchCase) -> int:
-    """Expected resident result bytes on ONE node (pod), from the known
-    output layout: replicated schemes keep ranks_per_node copies, shared
-    keeps one."""
-    Pn, c = case.cluster.pods, case.cluster.chips
-    R = Pn * c
-    m = case.elems * ELEM_BYTES
-    fam, sch = case.family, case.scheme
-    if fam == "allgather":
-        n = R * m
-        return c * n if sch in ("naive", "hier") else n
-    if fam in ("broadcast", "psum"):
-        return c * m if sch in ("naive", "hier") else m
-    if fam == "allgatherv":
-        per_rank = m + 4               # padded block + its int32 count
-        return c * R * per_rank if sch == "naive" else c * Pn * per_rank
-    raise ValueError(f"unknown family {fam!r}")
+    """Expected resident result bytes on ONE node (pod), from the scheme's
+    known output layout: replicated schemes keep ranks_per_node copies,
+    shared keeps one."""
+    vc = case.cluster
+    return registry.get_scheme(case.scheme).result_node(
+        case.family, pods=vc.pods, chips=vc.chips, elems=case.elems,
+        elem_bytes=ELEM_BYTES)
 
 
 # ---------------------------------------------------------------------------
@@ -212,110 +139,15 @@ def inspect_case(case: BenchCase, hlo_text: str, outputs
               "resident result bytes on node 0, summed over real output "
               "shards"),
     ]
-    checks.extend(_model_checks(case, cb.fast * R, cb.slow * R, result_node))
+    sch = registry.get_scheme(case.scheme)
+    for name, expected, measured, note in sch.identities(
+            case.family, traffic=case.traffic, pods=vc.pods, chips=vc.chips,
+            elems=case.elems, elem_bytes=ELEM_BYTES,
+            fast_shape=vc.fast_shape, populations=case.populations,
+            fast_total=cb.fast * R, slow_total=cb.slow * R,
+            result_node=result_node):
+        checks.append(Check(name, expected, measured, note))
     return meas, checks
-
-
-def _model_checks(case: BenchCase, fast_total: float, slow_total: float,
-                  result_node: int) -> list[Check]:
-    """Documented exact identities between parsed bytes and plans.py."""
-    Pn, c = case.cluster.pods, case.cluster.chips
-    tr = case.traffic
-    fam, sch = case.family, case.scheme
-    out: list[Check] = []
-    if fam == "allgather":
-        m = case.elems * ELEM_BYTES
-        tr_shared = allgather_traffic(scheme="hier", num_nodes=Pn,
-                                      ranks_per_node=c, bytes_per_rank=m)
-        if sch == "shared":
-            out.append(Check("model/bridge-bytes", tr.slow_bytes, slow_total,
-                             "bridge wire bytes == model slow_bytes (node "
-                             "regions cross once)"))
-            out.append(Check("model/fast-bytes", tr.fast_bytes, fast_total,
-                             "zero intra-node copy bytes — paper C2"))
-        elif sch == "hier" and Pn > 1:
-            out.append(Check("model/bridge-bytes",
-                             c * tr_shared.slow_bytes, slow_total,
-                             "full replication pays C1 on the wire: "
-                             "ranks_per_node x the shared bridge bytes"))
-        if sch in ("naive", "shared"):
-            out.append(Check("model/result-node", tr.result_bytes_per_node,
-                             result_node,
-                             "resident result bytes == model "
-                             "result_bytes_per_node"))
-    elif fam == "broadcast":
-        # The psum emulation of a one-way broadcast moves data up AND back
-        # down the ring: every wire identity carries an exact factor 2.
-        if sch == "naive":
-            out.append(Check("model/total-bytes",
-                             2 * (tr.slow_bytes + tr.fast_bytes),
-                             fast_total + slow_total,
-                             "psum-emulated bcast costs exactly 2x the "
-                             "model's one-way bytes"))
-        elif sch == "hier":
-            # every chip of a pod participates in the emulated bridge psum:
-            # full replication pays C1 on the wire (x ranks_per_node).
-            out.append(Check("model/bridge-bytes", 2 * c * tr.slow_bytes,
-                             slow_total,
-                             "replicated bridge == 2 x ranks_per_node x "
-                             "model slow_bytes (C1 on the wire)"))
-            out.append(Check("model/fast-bytes", 2 * tr.fast_bytes,
-                             fast_total,
-                             "intra-pod psum == 2x the model's "
-                             "leader-to-children copy bytes"))
-        else:                          # shared
-            out.append(Check("model/bridge-bytes", 2 * tr.slow_bytes,
-                             slow_total,
-                             "shard bridge == 2x model slow_bytes (one "
-                             "shared copy crosses once, psum-doubled)"))
-        if sch in ("naive", "shared"):
-            out.append(Check("model/result-node", tr.result_bytes_per_node,
-                             result_node,
-                             "resident result bytes == model "
-                             "result_bytes_per_node"))
-    elif fam == "psum":
-        m = case.elems * ELEM_BYTES
-        trh = allreduce_traffic(scheme="hier", num_nodes=Pn,
-                                ranks_per_node=c, msg_bytes=m)
-        if sch == "naive":
-            out.append(Check("model/total-bytes",
-                             tr.slow_bytes + tr.fast_bytes,
-                             fast_total + slow_total,
-                             "flat ring allreduce total == model ring "
-                             "bytes"))
-        else:
-            out.append(Check("model/bridge-bytes", Pn * trh.slow_bytes,
-                             slow_total,
-                             "c parallel shard rings sum to num_nodes x "
-                             "the model's per-node bridge bytes"))
-            factor = c if sch == "hier" else c / 2
-            out.append(Check("model/fast-bytes", factor * trh.fast_bytes,
-                             fast_total,
-                             "intra-node RS(+AG) vs the model's per-node "
-                             "RS+AG cycle (shared skips the AG half)"))
-        if sch in ("naive", "shared"):
-            out.append(Check("model/result-node", tr.result_bytes_per_node,
-                             result_node,
-                             "resident result bytes == model "
-                             "result_bytes_per_node"))
-    elif fam == "allgatherv":
-        if sch == "shared" and Pn > 1:
-            R = Pn * c
-            S = sum(case.populations)      # present ranks
-            # subtract the (tiny, closed-form) int32 counts exchange from
-            # the MEASURED bridge bytes; what remains is the padded data
-            # exchange, which scaled by the compact fraction S/R must hit
-            # the model's GatherPlan-compact bridge bytes.  Unlike the
-            # link/slow check this anchors the model identity to the
-            # parsed HLO: a rewritten lowering moves slow_total and fails.
-            counts_slow_total = R * 4 * (Pn - 1)
-            data_slow_total = slow_total - counts_slow_total
-            out.append(Check("model/bridge-bytes", tr.slow_bytes,
-                             data_slow_total * S / R,
-                             "measured padded bridge bytes (minus the "
-                             "counts exchange) x compact fraction == model "
-                             "compact bridge bytes (GatherPlan)"))
-    return out
 
 
 # ---------------------------------------------------------------------------
@@ -324,30 +156,41 @@ def _model_checks(case: BenchCase, fast_total: float, slow_total: float,
 
 def cross_scheme_checks(results: Sequence[CaseResult]) -> list[Check]:
     """Paper C1 as a measured invariant: within every (family, topology,
-    size) group, naive resident-result bytes / shared resident-result bytes
-    == ranks_per_node — from the actual output shards."""
+    size) group holding both result classes, replicated resident-result
+    bytes / shared resident-result bytes == ranks_per_node — from the
+    actual output shards.  Every replicated-class scheme must also hold
+    identical resident bytes (the two-phase schedule does not change the
+    memory class)."""
     by_key: dict[tuple, dict] = {}
     for r in results:
         k = (r.case.family, r.case.topology, r.case.elems)
         by_key.setdefault(k, {})[r.case.scheme] = r
     checks = []
     for (fam, topo, elems), group in sorted(by_key.items()):
-        if "naive" not in group or "shared" not in group:
+        reps = [s for s in registry.scheme_names()
+                if s in group
+                and registry.get_scheme(s).result_class == "replicated"]
+        shared = [s for s in registry.scheme_names()
+                  if s in group
+                  and registry.get_scheme(s).result_class == "shared"]
+        if not reps or not shared:
             continue
-        c = group["naive"].case.cluster.chips
-        naive_b = group["naive"].hlo["result_bytes_per_node"]
-        shared_b = group["shared"].hlo["result_bytes_per_node"]
+        base, sh = reps[0], shared[0]
+        c = group[base].case.cluster.chips
+        rep_b = group[base].hlo["result_bytes_per_node"]
+        shared_b = group[sh].hlo["result_bytes_per_node"]
         checks.append(Check(
-            f"C1/{fam}/{topo}/e{elems}", c, naive_b / shared_b,
-            "naive/shared resident-result ratio == ranks_per_node "
-            f"(naive {naive_b} B, shared {shared_b} B per node)",
+            f"C1/{fam}/{topo}/e{elems}", c, rep_b / shared_b,
+            f"{base}/{sh} resident-result ratio == ranks_per_node "
+            f"({base} {rep_b} B, {sh} {shared_b} B per node)",
             tol=1e-9))
-        if "hier" in group:
-            hier_b = group["hier"].hlo["result_bytes_per_node"]
+        for other in reps[1:]:
+            other_b = group[other].hlo["result_bytes_per_node"]
             checks.append(Check(
-                f"C1/{fam}/{topo}/e{elems}/hier-replicates", naive_b, hier_b,
-                "the two-phase hier schedule is replication-class: same "
-                "resident bytes as naive", tol=0.0))
+                f"C1/{fam}/{topo}/e{elems}/{other}-replicates", rep_b,
+                other_b,
+                f"the {other} schedule is replication-class: same resident "
+                f"bytes as {base}", tol=0.0))
     return checks
 
 

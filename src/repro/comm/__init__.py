@@ -1,0 +1,28 @@
+"""repro.comm: communicator + shared-window collective API.
+
+The single entry point for collectives (replaces the free functions of
+``repro.core.collectives``, which remain as deprecated shims for one
+release):
+
+* ``Communicator``  — the two-tier (node + bridge) communicator; methods
+  ``allgather``/``allgatherv``/``broadcast``/``allreduce``/
+  ``reduce_scatter``/``alltoall`` dispatch through the scheme registry;
+* ``SharedWindow``  — the MPI-3 shared-window analogue with explicit
+  ``fence()``/epoch synchronization semantics;
+* ``registry``      — self-describing scheme entries (``naive``/``hier``/
+  ``shared``): bodies + traffic closed-forms + expected lowerings.  New
+  schemes register here and are immediately swept by ``repro.bench`` and
+  callable from every ``Communicator``.
+"""
+
+from repro.comm import primitives, registry, window
+from repro.comm.communicator import Communicator
+from repro.comm.registry import (CollectiveScheme, get_scheme,
+                                 register_scheme, scheme_names, schemes_for)
+from repro.comm.window import SharedWindow, WindowEpochError
+
+__all__ = [
+    "Communicator", "SharedWindow", "WindowEpochError",
+    "CollectiveScheme", "get_scheme", "register_scheme", "scheme_names",
+    "schemes_for", "primitives", "registry", "window",
+]

@@ -1,0 +1,229 @@
+"""Communicator: the two-tier communicator as a first-class object.
+
+The paper's setup is ``MPI_Comm_split_type(COMM_TYPE_SHARED)``: the world
+communicator splits into a *node* communicator (ranks sharing memory — the
+fast tier) and a *bridge* communicator (one leader per node — the slow
+tier).  ``Communicator`` carries exactly that structure for a jax mesh:
+
+* ``fast_axis`` — intra-pod tier (ICI / shared memory); one name or a tuple;
+* ``slow_axis`` — cross-pod tier (DCN / network), ``None`` on a single node;
+* static ``pods``/``chips`` counts when known (rank maps, plan algebra);
+* collective methods (``allgather``/``allgatherv``/``broadcast``/
+  ``allreduce``/``reduce_scatter``/``alltoall``) that dispatch through the
+  scheme registry — ``scheme="naive" | "hier" | "shared" | <future entry>``
+  replaces the old per-scheme free functions.
+
+Shared-scheme results come back as a ``SharedWindow`` (ONE copy per node,
+sharded over the fast tier) whose ``read()``/``fence()`` carry the paper's
+synchronization-epoch semantics; replicated schemes return plain arrays.
+Exception: ``allgatherv`` always returns raw ``(blocks, counts)`` — the
+irregular result is mediated by ``core.plans.GatherPlan`` compaction, not
+by a window.
+
+All methods are shard_map-body operations: call them on local shards inside
+a ``shard_map`` (e.g. via ``VirtualCluster.run``/``smap``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+
+from repro.comm import primitives as p
+from repro.comm import registry
+from repro.comm.window import SharedWindow
+from repro.core.plans import NodeMap
+
+Axis = Union[str, Sequence[str]]
+
+
+def _norm(ax: Optional[Axis]):
+    if ax is None:
+        return None
+    if isinstance(ax, (tuple, list)):
+        ax = tuple(ax)
+        if not ax:
+            return None
+        return ax if len(ax) > 1 else ax[0]
+    return ax
+
+
+@dataclasses.dataclass(frozen=True)
+class Communicator:
+    """Two-tier communicator over mesh axis names.
+
+    ``pods``/``chips`` are optional static counts: in-trace collectives work
+    without them, but rank maps (``node_map``) and rank-order reads need
+    them.  Construct via ``from_cluster`` (tests/bench) or
+    ``from_topology`` (production meshes) to get them filled in.
+    """
+
+    fast_axis: Axis
+    slow_axis: Optional[Axis] = None
+    pods: Optional[int] = None
+    chips: Optional[int] = None
+
+    def __post_init__(self):
+        fast = _norm(self.fast_axis)
+        if fast is None:
+            raise ValueError("Communicator needs a fast_axis (the node tier)")
+        object.__setattr__(self, "fast_axis", fast)
+        object.__setattr__(self, "slow_axis", _norm(self.slow_axis))
+
+    # -- constructors --------------------------------------------------------
+    @classmethod
+    def from_cluster(cls, vc) -> "Communicator":
+        """From a ``repro.substrate.VirtualCluster`` (its ``slow`` is already
+        ``None`` for single-node shapes)."""
+        return cls(fast_axis=vc.fast, slow_axis=vc.slow, pods=vc.pods,
+                   chips=vc.chips)
+
+    @classmethod
+    def from_topology(cls, topo) -> "Communicator":
+        """From a ``repro.core.topology.MeshTopology``: fast tier = every
+        non-slow axis, slow tier = the pod axes present."""
+        slow = tuple(a for a in topo.slow_axes if a in topo.axis_sizes)
+        return cls(fast_axis=topo.fast_axes, slow_axis=slow or None,
+                   pods=topo.num_pods, chips=topo.chips_per_pod)
+
+    # -- structure -----------------------------------------------------------
+    @property
+    def slow(self) -> Optional[Axis]:
+        return self.slow_axis
+
+    @property
+    def num_nodes(self) -> Optional[int]:
+        return self.pods
+
+    @property
+    def ranks_per_node(self) -> Optional[int]:
+        return self.chips
+
+    @property
+    def num_ranks(self) -> Optional[int]:
+        if self.pods is None or self.chips is None:
+            return None
+        return self.pods * self.chips
+
+    @property
+    def node_map(self) -> NodeMap:
+        """SMP rank->node assignment (``core.plans`` algebra)."""
+        if self.pods is None or self.chips is None:
+            raise ValueError("node_map needs static pods/chips counts")
+        return NodeMap.smp(self.pods, self.chips)
+
+    def split_type_shared(self) -> "Communicator":
+        """The node communicator of ``MPI_Comm_split_type(COMM_TYPE_SHARED)``:
+        same fast tier, no bridge."""
+        return Communicator(fast_axis=self.fast_axis, slow_axis=None,
+                            pods=1, chips=self.chips)
+
+    def bridge(self) -> "Communicator":
+        """The leaders' bridge communicator: the slow tier as a flat
+        single-tier communicator (multi-leader: every chip participates in
+        its own shard's bridge exchange)."""
+        if self.slow_axis is None:
+            raise ValueError("single-node communicator has no bridge tier")
+        return Communicator(fast_axis=self.slow_axis, slow_axis=None,
+                            pods=1, chips=self.pods)
+
+    # -- in-trace indices ----------------------------------------------------
+    def rank(self) -> jax.Array:
+        """Flat SMP rank, (pod, chip) row-major — the broadcast root
+        numbering."""
+        names = (p._axes(self.slow_axis) if self.slow_axis else ()) + \
+            p._axes(self.fast_axis)
+        return p.axis_index(names)
+
+    def local_rank(self) -> jax.Array:
+        return p.axis_index(self.fast_axis)
+
+    def node_rank(self) -> jax.Array:
+        if self.slow_axis is None:
+            import jax.numpy as jnp
+            return jnp.zeros((), jnp.int32)
+        return p.axis_index(self.slow_axis)
+
+    # -- dispatch ------------------------------------------------------------
+    def _call(self, family: str, scheme: str, *args, **kw):
+        sch = registry.get_scheme(scheme)
+        return sch, sch.op(family)(*args, fast=self.fast_axis,
+                                   slow=self.slow_axis, **kw)
+
+    def _wrap(self, sch, out, axis: int):
+        if sch.result_class == "shared":
+            return SharedWindow(self, out, axis=axis, epoch=1)
+        return out
+
+    def allgather(self, x: jax.Array, *, scheme: str = "shared",
+                  axis: int = 0):
+        """Gather every rank's contribution.  Replicated schemes return the
+        full rank-ordered buffer; ``shared`` returns the node's
+        ``SharedWindow`` (chip *i* holds shard *i*, (local, pod) order)."""
+        sch, out = self._call("allgather", scheme, x, axis=axis)
+        return self._wrap(sch, out, axis)
+
+    def allgatherv(self, x_padded: jax.Array, valid: jax.Array, *,
+                   scheme: str = "shared", axis: int = 0):
+        """Irregular allgather (padded blocks + valid counts).
+
+        The one family that returns raw ``(blocks, counts)`` for EVERY
+        scheme — never a ``SharedWindow``: the irregular result is
+        plan-mediated (compaction via ``core.plans.GatherPlan``), not
+        window-mediated, matching the paper's counts/displs one-off."""
+        _, out = self._call("allgatherv", scheme, x_padded, valid, axis=axis)
+        return out
+
+    def broadcast(self, x: jax.Array, *, root: int = 0,
+                  scheme: str = "shared", axis: int = 0):
+        """Broadcast from the flat SMP rank ``root`` (pod, chip row-major).
+        ``shared`` returns the node's ``SharedWindow`` of the message."""
+        sch, out = self._call("broadcast", scheme, x, root=root, axis=axis)
+        return self._wrap(sch, out, axis)
+
+    def allreduce(self, x: jax.Array, *, scheme: str = "shared",
+                  axis: int = 0):
+        """Global sum.  Replicated schemes return the full sum per rank;
+        ``shared`` returns it once per node as a ``SharedWindow``."""
+        sch, out = self._call("psum", scheme, x, axis=axis)
+        return self._wrap(sch, out, axis)
+
+    def reduce_scatter(self, x: jax.Array, *, scheme: str = "shared",
+                       axis: int = 0):
+        """Sum + scatter.  ``naive``: every rank gets its flat 1/R slice;
+        ``shared``: the node's window shards (1/c each, bridge-reduced)."""
+        sch, out = self._call("reduce_scatter", scheme, x, axis=axis)
+        return self._wrap(sch, out, axis)
+
+    def alltoall(self, x: jax.Array, *, scheme: str = "hier", axis: int = 0):
+        """Personalized exchange: the local buffer along ``axis`` is R rank-
+        ordered chunks; chunk *s* goes to rank *s*.  ``hier`` routes node
+        superchunks over the bridge once (P messages instead of P*c), with
+        identical results."""
+        _, out = self._call("alltoall", scheme, x, axis=axis)
+        return out
+
+    # -- windows & sync -------------------------------------------------------
+    def window(self, shard: jax.Array, *, axis: int = 0,
+               epoch: int = 0) -> SharedWindow:
+        """Wrap an existing node-sharded buffer as a ``SharedWindow``."""
+        return SharedWindow(self, shard, axis=axis, epoch=epoch)
+
+    def barrier(self, token: jax.Array) -> jax.Array:
+        """Heavy-weight world barrier (``core.sync.barrier`` over both
+        tiers)."""
+        from repro.core import sync
+        names = (p._axes(self.slow_axis) if self.slow_axis else ()) + \
+            p._axes(self.fast_axis)
+        return sync.barrier(token, names)
+
+    def bridge_psum(self, x):
+        """The multi-leader gradient bridge: psum over the slow tier only
+        (intra-node reduction already happened via the window transpose).
+        Identity on a single node."""
+        if self.slow_axis is None:
+            return x
+        from jax import lax
+        return lax.psum(x, p._axes(self.slow_axis))

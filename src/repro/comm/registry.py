@@ -1,0 +1,458 @@
+"""Collective scheme registry: every scheme is ONE self-describing entry.
+
+A ``CollectiveScheme`` bundles everything the rest of the repo needs to know
+about one collective strategy:
+
+* ``ops``          — the shard_map-body implementation per family
+                     (``repro.comm.primitives`` functions behind a uniform
+                     keyword signature);
+* ``result_class`` — ``"replicated"`` (a private full result per rank — the
+                     pure-MPI analogue and the two-phase hier schedule) or
+                     ``"shared"`` (ONE copy per node, sharded over the fast
+                     tier — the paper's MPI-3 shared window);
+* ``traffic``      — the closed-form ``core.plans`` traffic model for a
+                     measured config;
+* ``links``        — expected per-chip link bytes of the scheme's known
+                     lowering (ring model, matching
+                     ``analysis.roofline.parse_collectives`` exactly);
+* ``result_node``  — expected resident result bytes on one node;
+* ``identities``   — documented exact identities between parsed wire /
+                     resident bytes and the traffic model.
+
+``repro.bench.suites`` sweeps ``schemes_for(family)``, ``repro.bench.
+validate`` pulls every expectation from here, and ``Communicator`` methods
+dispatch through ``get_scheme``: registering a new scheme is the ONLY step
+needed to have it swept, cross-checked and callable — no string matching of
+scheme names anywhere else.
+"""
+
+from __future__ import annotations
+
+from types import MappingProxyType
+from typing import Callable, Mapping, Optional, Sequence
+
+from repro.comm import primitives as p
+from repro.core.plans import (CollectiveTraffic, allgather_traffic,
+                              allgatherv_traffic, allreduce_traffic,
+                              alltoall_traffic, broadcast_traffic)
+
+CNT_BYTES = 4  # int32 valid-count payload of the irregular allgatherv
+
+
+# ---------------------------------------------------------------------------
+# Ring-model per-chip link costs (parse_collectives' accounting exactly).
+# ---------------------------------------------------------------------------
+
+def _ag(out_bytes: float, n: int) -> float:
+    return out_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def _rs(out_bytes: float, n: int) -> float:
+    return out_bytes * (n - 1) if n > 1 else 0.0
+
+
+def _ar(msg_bytes: float, n: int) -> float:
+    return 2.0 * msg_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+def _a2a(buf_bytes: float, n: int) -> float:
+    return buf_bytes * (n - 1) / n if n > 1 else 0.0
+
+
+class CollectiveScheme:
+    """One registered collective strategy.  Subclass + ``register_scheme``
+    is the complete recipe for adding a scheme: shadow ``ops`` with the
+    family table (it is a read-only mapping on purpose — mutating the
+    inherited one would leak bodies into every other scheme)."""
+
+    name: str = ""
+    result_class: str = "replicated"        # "replicated" | "shared"
+    ops: Mapping[str, Callable] = MappingProxyType({})
+
+    # -- dispatch ------------------------------------------------------------
+    def supports(self, family: str) -> bool:
+        return family in self.ops
+
+    def op(self, family: str) -> Callable:
+        if family not in self.ops:
+            have = [s.name for s in schemes_for(family)]
+            raise NotImplementedError(
+                f"scheme {self.name!r} does not implement {family!r}; "
+                f"schemes supporting it: {have or 'none registered'}")
+        return self.ops[family]
+
+    # -- plans.py traffic model ----------------------------------------------
+    @property
+    def _plans_scheme(self) -> str:
+        # plans.py spells the two result classes "naive" (replicated) and
+        # "hier" (one shared copy per node).
+        return "naive" if self.result_class == "replicated" else "hier"
+
+    def traffic(self, family: str, *, pods: int, chips: int, elems: int,
+                elem_bytes: int = 4,
+                populations: Optional[Sequence[int]] = None
+                ) -> CollectiveTraffic:
+        m = elems * elem_bytes
+        if family == "allgather":
+            return allgather_traffic(scheme=self._plans_scheme,
+                                     num_nodes=pods, ranks_per_node=chips,
+                                     bytes_per_rank=m)
+        if family == "allgatherv":
+            return allgatherv_traffic(scheme=self._plans_scheme,
+                                      populations=populations,
+                                      bytes_per_rank=m)
+        if family == "broadcast":
+            return broadcast_traffic(scheme=self._plans_scheme,
+                                     num_nodes=pods, ranks_per_node=chips,
+                                     msg_bytes=m)
+        if family == "psum":
+            return allreduce_traffic(scheme=self._plans_scheme,
+                                     num_nodes=pods, ranks_per_node=chips,
+                                     msg_bytes=m)
+        if family == "alltoall":
+            return alltoall_traffic(scheme=self._alltoall_plans_scheme,
+                                    num_nodes=pods, ranks_per_node=chips,
+                                    bytes_per_pair=m)
+        raise ValueError(f"no traffic model for family {family!r}")
+
+    # All-to-all results are inherently rank-private, so the naive/hier
+    # distinction there is wire-schedule only (flat vs node-aware).
+    _alltoall_plans_scheme = "naive"
+
+    # -- expected lowering (overridden per scheme) ---------------------------
+    def links(self, family: str, *, pods: int, chips: int,
+              fast_shape: tuple[int, ...], elems: int, elem_bytes: int = 4
+              ) -> tuple[float, float]:
+        """Expected (fast, slow) per-chip link bytes of this scheme's known
+        collective sequence for one measured config."""
+        raise NotImplementedError
+
+    def result_node(self, family: str, *, pods: int, chips: int, elems: int,
+                    elem_bytes: int = 4) -> int:
+        """Expected resident result bytes on ONE node, from the known output
+        layout: replicated schemes keep ranks_per_node copies, shared one."""
+        R, m = pods * chips, elems * elem_bytes
+        if family == "allgather":
+            n = R * m
+            return chips * n if self.result_class == "replicated" else n
+        if family in ("broadcast", "psum"):
+            return chips * m if self.result_class == "replicated" else m
+        if family == "reduce_scatter":
+            # replicated class = the flat scheme: each rank keeps its 1/R
+            # slice, so a node holds c*m/R = m/num_nodes bytes; the shared
+            # window keeps the node's full m (c shards of m/c).
+            return m // pods if self.result_class == "replicated" else m
+        if family == "alltoall":
+            return chips * R * m          # rank-private in every scheme
+        if family == "allgatherv":
+            per_rank = m + CNT_BYTES      # padded block + its int32 count
+            blocks = R if self.result_class == "replicated" else pods
+            return chips * blocks * per_rank
+        raise ValueError(f"unknown family {family!r}")
+
+    def identities(self, family: str, *, traffic: CollectiveTraffic,
+                   pods: int, chips: int, elems: int,
+                   fast_total: float, slow_total: float, result_node: int,
+                   elem_bytes: int = 4, fast_shape: tuple[int, ...] = (),
+                   populations: Optional[Sequence[int]] = None
+                   ) -> list[tuple[str, float, float, str]]:
+        """Documented exact identities between parsed totals and the plans
+        model, as (name, expected, measured, note) rows."""
+        return []
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, CollectiveScheme] = {}
+
+
+def register_scheme(scheme: CollectiveScheme) -> CollectiveScheme:
+    if not scheme.name:
+        raise ValueError("scheme needs a name")
+    _REGISTRY[scheme.name] = scheme
+    return scheme
+
+
+def get_scheme(name: str) -> CollectiveScheme:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown collective scheme {name!r}; registered: "
+                       f"{sorted(_REGISTRY)}") from None
+
+
+def scheme_names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def schemes_for(family: str) -> tuple[CollectiveScheme, ...]:
+    return tuple(s for s in _REGISTRY.values() if s.supports(family))
+
+
+# ---------------------------------------------------------------------------
+# The three schemes of the paper's comparison
+# ---------------------------------------------------------------------------
+
+class NaiveScheme(CollectiveScheme):
+    """Pure-MPI analogue: one flat phase, private full result per rank."""
+
+    name = "naive"
+    result_class = "replicated"
+    ops = MappingProxyType({
+        "allgather": lambda x, *, fast, slow, axis=0, **_:
+            p.naive_all_gather(x, fast_axis=fast, slow_axis=slow, axis=axis),
+        "broadcast": lambda x, *, fast, slow, root=0, axis=0, **_:
+            p.naive_broadcast(x, root=root, fast_axis=fast, slow_axis=slow),
+        "psum": lambda x, *, fast, slow, axis=0, **_:
+            p.naive_psum(x, fast_axis=fast, slow_axis=slow),
+        "reduce_scatter": lambda x, *, fast, slow, axis=0, **_:
+            p.naive_reduce_scatter(x, fast_axis=fast, slow_axis=slow,
+                                   axis=axis),
+        "alltoall": lambda x, *, fast, slow, axis=0, **_:
+            p.naive_all_to_all(x, fast_axis=fast, slow_axis=slow, axis=axis),
+        "allgatherv": lambda x, valid, *, fast, slow, axis=0, **_:
+            (p.naive_all_gather(x, fast_axis=fast, slow_axis=slow, axis=axis),
+             p.naive_all_gather(valid, fast_axis=fast, slow_axis=slow,
+                                axis=axis)),
+    })
+
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+        Pn, c = pods, chips
+        R, m = Pn * c, elems * elem_bytes
+        fast = slow = 0.0
+        if family == "allgather":
+            link = _ag(R * m, R) if Pn > 1 else _ag(R * m, c)
+        elif family in ("broadcast", "psum"):
+            link = _ar(m, R) if Pn > 1 else _ar(m, c)
+        elif family == "reduce_scatter":
+            link = _rs(m / R, R) if Pn > 1 else _rs(m / c, c)
+        elif family == "alltoall":
+            link = _a2a(R * m, R) if Pn > 1 else _a2a(R * m, c)
+        elif family == "allgatherv":
+            link = (_ag(R * m, R) + _ag(R * CNT_BYTES, R)) if Pn > 1 \
+                else (_ag(R * m, c) + _ag(R * CNT_BYTES, c))
+        else:
+            raise ValueError(f"unknown family {family!r}")
+        if Pn > 1:
+            slow = link                  # flat group spans pods
+        else:
+            fast = link
+        return fast, slow
+
+    def identities(self, family, *, traffic, pods, chips, elems,
+                   fast_total, slow_total, result_node, elem_bytes=4,
+                   fast_shape=(), populations=None):
+        tr = traffic
+        out = []
+        if family == "allgather":
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node,
+                        "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "broadcast":
+            out.append(("model/total-bytes",
+                        2 * (tr.slow_bytes + tr.fast_bytes),
+                        fast_total + slow_total,
+                        "psum-emulated bcast costs exactly 2x the model's "
+                        "one-way bytes"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node, "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "psum":
+            out.append(("model/total-bytes", tr.slow_bytes + tr.fast_bytes,
+                        fast_total + slow_total,
+                        "flat ring allreduce total == model ring bytes"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node, "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "alltoall":
+            out.append(("model/total-bytes", tr.slow_bytes + tr.fast_bytes,
+                        fast_total + slow_total,
+                        "flat all-to-all wire total == model pairwise "
+                        "bytes m*R*(R-1)"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node,
+                        "rank-private all-to-all results: ranks_per_node x "
+                        "R*m resident per node"))
+        return out
+
+
+class HierScheme(CollectiveScheme):
+    """Two-phase (intra-pod, then bridge) schedule; result still fully
+    replicated — isolates the latency effect of the hierarchical schedule."""
+
+    name = "hier"
+    result_class = "replicated"
+    _alltoall_plans_scheme = "hier"     # node-aware wire schedule
+    ops = MappingProxyType({
+        "allgather": lambda x, *, fast, slow, axis=0, **_:
+            p.hier_all_gather(x, fast_axis=fast, slow_axis=slow, axis=axis),
+        "broadcast": lambda x, *, fast, slow, root=0, axis=0, **_:
+            p.hier_broadcast(x, root=root, fast_axis=fast, slow_axis=slow),
+        "psum": lambda x, *, fast, slow, axis=0, **_:
+            p.hier_psum(x, fast_axis=fast, slow_axis=slow, axis=axis),
+        "alltoall": lambda x, *, fast, slow, axis=0, **_:
+            p.hier_all_to_all(x, fast_axis=fast, slow_axis=slow, axis=axis),
+    })
+
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+        Pn, c = pods, chips
+        R, m = Pn * c, elems * elem_bytes
+        if family == "allgather":
+            return _ag(c * m, c), _ag(R * m, Pn)
+        if family == "broadcast":
+            return _ar(m, c), _ar(m, Pn)
+        if family == "psum":
+            return _rs(m / c, c) + _ag(m, c), _ar(m / c, Pn)
+        if family == "alltoall":
+            buf = R * m
+            fast = buf * sum((n - 1) / n for n in fast_shape if n > 1)
+            return fast, _a2a(buf, Pn)
+        raise ValueError(f"unknown family {family!r}")
+
+    def identities(self, family, *, traffic, pods, chips, elems,
+                   fast_total, slow_total, result_node, elem_bytes=4,
+                   fast_shape=(), populations=None):
+        Pn, c, m = pods, chips, elems * elem_bytes
+        tr = traffic
+        out = []
+        if family == "allgather" and Pn > 1:
+            shared_tr = allgather_traffic(scheme="hier", num_nodes=Pn,
+                                          ranks_per_node=c, bytes_per_rank=m)
+            out.append(("model/bridge-bytes", c * shared_tr.slow_bytes,
+                        slow_total,
+                        "full replication pays C1 on the wire: "
+                        "ranks_per_node x the shared bridge bytes"))
+        elif family == "broadcast":
+            # every chip of a pod participates in the emulated bridge psum:
+            # full replication pays C1 on the wire (x ranks_per_node).
+            out.append(("model/bridge-bytes", 2 * c * tr.slow_bytes,
+                        slow_total,
+                        "replicated bridge == 2 x ranks_per_node x model "
+                        "slow_bytes (C1 on the wire)"))
+            out.append(("model/fast-bytes", 2 * tr.fast_bytes, fast_total,
+                        "intra-pod psum == 2x the model's "
+                        "leader-to-children copy bytes"))
+        elif family == "psum":
+            trh = allreduce_traffic(scheme="hier", num_nodes=Pn,
+                                    ranks_per_node=c, msg_bytes=m)
+            out.append(("model/bridge-bytes", Pn * trh.slow_bytes,
+                        slow_total,
+                        "c parallel shard rings sum to num_nodes x the "
+                        "model's per-node bridge bytes"))
+            out.append(("model/fast-bytes", c * trh.fast_bytes, fast_total,
+                        "intra-node RS+AG == ranks_per_node x the model's "
+                        "per-node cycle"))
+        elif family == "alltoall":
+            if Pn > 1:
+                out.append(("model/bridge-bytes", tr.slow_bytes, slow_total,
+                            "node-aware bridge == model slow_bytes: node "
+                            "superchunks cross pods exactly once"))
+            naive_tr = alltoall_traffic(scheme="naive", num_nodes=Pn,
+                                        ranks_per_node=c, bytes_per_pair=m)
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node,
+                        "rank-private all-to-all results: same resident "
+                        "bytes as the flat scheme"))
+            if naive_tr.fast_bytes and len(fast_shape) == 1:
+                # single-fast-axis identity; a factored fast tier (tuple
+                # axes) moves the buffer once per sub-axis instead.
+                out.append(("model/fast-ratio",
+                            Pn * naive_tr.fast_bytes, fast_total,
+                            "intra-node redistribution == num_nodes x the "
+                            "flat scheme's intra-node pair bytes "
+                            "(single-axis fast tier only)"))
+        return out
+
+
+class SharedScheme(CollectiveScheme):
+    """The paper's memory-optimal scheme: ONE result copy per node, sharded
+    over the fast tier (the MPI-3 shared window); readers use
+    ``SharedWindow.read``."""
+
+    name = "shared"
+    result_class = "shared"
+    ops = MappingProxyType({
+        "allgather": lambda x, *, fast, slow, axis=0, **_:
+            p.shared_all_gather(x, fast_axis=fast, slow_axis=slow, axis=axis),
+        "broadcast": lambda x, *, fast, slow, root=0, axis=0, **_:
+            p.shared_broadcast(x, root=root, fast_axis=fast, slow_axis=slow,
+                               axis=axis),
+        "psum": lambda x, *, fast, slow, axis=0, **_:
+            p.shared_psum_scatter(x, fast_axis=fast, slow_axis=slow,
+                                  axis=axis),
+        "reduce_scatter": lambda x, *, fast, slow, axis=0, **_:
+            p.shared_psum_scatter(x, fast_axis=fast, slow_axis=slow,
+                                  axis=axis),
+        "allgatherv": lambda x, valid, *, fast, slow, axis=0, **_:
+            p.shared_all_gather_v(x, valid, slow_axis=slow, axis=axis),
+    })
+
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+        Pn, c = pods, chips
+        m = elems * elem_bytes
+        if family == "allgather":
+            return 0.0, _ag(Pn * m, Pn)
+        if family == "broadcast":
+            return _rs(m / c, c), _ar(m / c, Pn)
+        if family in ("psum", "reduce_scatter"):
+            return _rs(m / c, c), _ar(m / c, Pn)
+        if family == "allgatherv":
+            return 0.0, _ag(Pn * m, Pn) + _ag(Pn * CNT_BYTES, Pn)
+        raise ValueError(f"unknown family {family!r}")
+
+    def identities(self, family, *, traffic, pods, chips, elems,
+                   fast_total, slow_total, result_node, elem_bytes=4,
+                   fast_shape=(), populations=None):
+        Pn, c = pods, chips
+        tr = traffic
+        out = []
+        if family == "allgather":
+            out.append(("model/bridge-bytes", tr.slow_bytes, slow_total,
+                        "bridge wire bytes == model slow_bytes (node "
+                        "regions cross once)"))
+            out.append(("model/fast-bytes", tr.fast_bytes, fast_total,
+                        "zero intra-node copy bytes — paper C2"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node, "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "broadcast":
+            out.append(("model/bridge-bytes", 2 * tr.slow_bytes, slow_total,
+                        "shard bridge == 2x model slow_bytes (one shared "
+                        "copy crosses once, psum-doubled)"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node, "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "psum":
+            out.append(("model/bridge-bytes", Pn * tr.slow_bytes, slow_total,
+                        "c parallel shard rings sum to num_nodes x the "
+                        "model's per-node bridge bytes"))
+            out.append(("model/fast-bytes", (c / 2) * tr.fast_bytes,
+                        fast_total,
+                        "intra-node RS vs the model's per-node RS+AG cycle "
+                        "(shared skips the AG half)"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node, "resident result bytes == model "
+                        "result_bytes_per_node"))
+        elif family == "allgatherv" and Pn > 1:
+            R = Pn * c
+            S = sum(populations)          # present ranks
+            # subtract the (tiny, closed-form) int32 counts exchange from
+            # the MEASURED bridge bytes; what remains is the padded data
+            # exchange, which scaled by the compact fraction S/R must hit
+            # the model's GatherPlan-compact bridge bytes.
+            counts_slow_total = R * CNT_BYTES * (Pn - 1)
+            data_slow_total = slow_total - counts_slow_total
+            out.append(("model/bridge-bytes", tr.slow_bytes,
+                        data_slow_total * S / R,
+                        "measured padded bridge bytes (minus the counts "
+                        "exchange) x compact fraction == model compact "
+                        "bridge bytes (GatherPlan)"))
+        return out
+
+
+NAIVE = register_scheme(NaiveScheme())
+HIER = register_scheme(HierScheme())
+SHARED = register_scheme(SharedScheme())

@@ -269,6 +269,38 @@ def allreduce_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
     return CollectiveTraffic(int(slow), int(fast), result_per_node)
 
 
+def alltoall_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
+                     bytes_per_pair: int) -> CollectiveTraffic:
+    """Traffic for a personalized all-to-all: every rank sends a distinct
+    ``bytes_per_pair`` message to every rank (its own chunk stays local).
+
+    All-to-all results are inherently rank-private, so there is NO shared-
+    copy saving on the result (C1 does not apply): ``result_bytes_per_node``
+    is the same for both schemes.  The hybrid win is elsewhere — C2-style
+    zero intra-node copy bytes (on-node chunks are exchanged through the
+    shared segment in place) and node-aggregated bridge messages (P
+    superchunk messages per node pair instead of c*c rank pairs).
+
+    naive (pure MPI): every cross-node rank pair ships its chunk on the
+    network; intra-node pairs copy through per-rank private buffers.
+
+    hier (node-aware two-phase): node superchunks cross the bridge exactly
+    once per node pair — identical network bytes (the data is all distinct;
+    aggregation saves messages, not bytes) — and the intra-node
+    redistribution happens in the shared window with zero copy bytes.
+    """
+    P, c, m = num_nodes, ranks_per_node, bytes_per_pair
+    slow = P * (P - 1) * c * c * m       # cross-node rank pairs, counted once
+    if scheme == "naive":
+        fast = P * c * (c - 1) * m       # intra-node non-self pairs
+    elif scheme == "hier":
+        fast = 0                         # exchanged in the shared segment
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    result_per_node = c * (P * c) * m    # every rank keeps its private R*m
+    return CollectiveTraffic(slow, fast, result_per_node)
+
+
 def collective_time_model(traffic: CollectiveTraffic, *, num_nodes: int,
                           ranks_per_node: int, fast_bw: float = 100e9,
                           slow_bw: float = 25e9) -> float:

@@ -1,5 +1,11 @@
 """One-copy-per-pod parameter store (the MPI-3 shared window analogue).
 
+The window semantics live in ``repro.comm.window`` now (``SharedWindow`` +
+the FSDP-style ``window_gather``/``window_scatter`` access); this module
+keeps the host-side layout helpers (choosing shard dims, slicing for
+init/checkpoint) and delegates the device-side load/store to ``repro.comm``
+so every consumer reaches the shared window through one API.
+
 In the paper, replicated data lives once per node in an ``MPI_Win_allocate_
 shared`` segment; on-node ranks load/store it directly.  On TPU the analogue
 is: a tensor that is *logically replicated* across the pod is *physically
@@ -7,9 +13,6 @@ sharded* over the pod's ``data`` axis and gathered over ICI at use time
 (``fsdp_gather`` = the load), with gradient transpose writing back partitions
 (reduce-scatter = the store).  Across pods the tensor is replicated — one
 copy per pod, exactly Fig. 3b.
-
-These helpers are pure functions usable both inside shard_map bodies (gather/
-scatter) and on the host (choosing shard dims, slicing for init/checkpoint).
 """
 
 from __future__ import annotations
@@ -17,10 +20,8 @@ from __future__ import annotations
 from typing import Optional
 
 import jax
-import jax.numpy as jnp
-from jax import lax
 
-from repro.core.collectives import _axes
+from repro.comm.window import window_gather, window_scatter
 
 
 def choose_shard_dim(shape: tuple[int, ...], n: int,
@@ -48,16 +49,12 @@ def shard_slice(x, idx: int, n: int, dim: Optional[int]):
 
 
 def fsdp_gather(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
-    """Load from the pod-shared window: intra-pod all-gather at use time.
-    AD transpose is automatically the intra-pod reduce-scatter (the store)."""
-    if dim is None:
-        return x
-    return lax.all_gather(x, _axes(fast_axis), axis=dim, tiled=True)
+    """Load from the pod-shared window (``repro.comm.window.window_gather``):
+    intra-pod all-gather at use time; AD transpose is automatically the
+    intra-pod reduce-scatter (the store)."""
+    return window_gather(x, dim, fast_axis)
 
 
 def fsdp_scatter(x: jax.Array, dim: Optional[int], fast_axis) -> jax.Array:
     """Explicit store: reduce-scatter partial contributions back to shards."""
-    axes = _axes(fast_axis)
-    if dim is None:
-        return lax.psum(x, axes)
-    return lax.psum_scatter(x, axes, scatter_dimension=dim, tiled=True)
+    return window_scatter(x, dim, fast_axis)

@@ -15,7 +15,7 @@ from jax import lax
 
 from repro.substrate.compat import axis_size as _axis_size_one
 
-from .collectives import _axes, axis_index
+from repro.comm.primitives import _axes, axis_index
 
 
 def barrier(token: jax.Array, axis) -> jax.Array:

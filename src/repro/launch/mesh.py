@@ -3,8 +3,17 @@ jax device state (the dry-run sets the fake-device flag first)."""
 
 from __future__ import annotations
 
+from repro.comm import Communicator
 from repro.core.topology import MeshTopology, multi_pod, single_pod
 from repro.substrate.compat import make_mesh
+
+
+def communicator_for_topo(topo: MeshTopology) -> Communicator:
+    """The production two-tier communicator of a topology: fast tier =
+    intra-pod axes (ICI), slow tier = the pod axes (DCN).  Pair with
+    ``make_mesh_from_topo`` so mesh and communicator can never disagree on
+    the tier split."""
+    return Communicator.from_topology(topo)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

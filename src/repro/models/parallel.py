@@ -31,8 +31,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives as cc
-from repro.core import shared_buffer as sb
+from repro.comm import Communicator
 
 
 @dataclasses.dataclass(frozen=True)
@@ -70,29 +69,54 @@ class ParallelCtx:
         r = self.tp_rank
         return r // group, r % group
 
+    # ---- the data-tier communicator -----------------------------------------
+    @property
+    def comm(self) -> Optional[Communicator]:
+        """The two-tier communicator of the parameter/gradient data path:
+        fast tier = where parameters are stored (fsdp in hier mode, the
+        non-pod dp axes in naive mode), slow tier = the bridge.  ``None``
+        for a single-device ctx."""
+        fast = self.fsdp_axes or tuple(a for a in self.dp_axes
+                                       if a != self.pod_axis)
+        if not fast:
+            return None
+        return Communicator(fast_axis=fast, slow_axis=self.pod_axis)
+
     # ---- weight load/store (the shared-memory window) -----------------------
     def gather_w(self, w: jax.Array, fsdp_dim: Optional[int]) -> jax.Array:
-        """Load a weight from the pod-shared store.  hier: intra-pod
-        all-gather of the FSDP shards (cast first so bf16 moves, not fp32);
-        naive: local private copy, no traffic."""
+        """Load a weight from the pod-shared store.  hier: read through the
+        node's ``SharedWindow`` — intra-pod all-gather of the FSDP shards at
+        use time (cast first so bf16 moves, not fp32); AD transposes the
+        read into the reduce-scatter store.  naive: local private copy, no
+        traffic."""
         w = w.astype(self.compute_dtype)
         if self.mode == "hier" and self.fsdp_axes and fsdp_dim is not None:
-            w = sb.fsdp_gather(w, fsdp_dim, self.fsdp_axes)
+            w = self.comm.window(w, axis=fsdp_dim, epoch=1).read()
         return w
 
     def reduce_grads(self, grads):
         """Bridge gradient reduction.  Gradients already match the param
-        layout w.r.t. data (AD transposes the hier gathers into intra-pod
-        reduce-scatters); what remains is the cross-pod (bridge) psum in hier
-        mode, or the flat (pod,data) psum in naive mode."""
+        layout w.r.t. data (AD transposes the hier window reads into
+        intra-pod reduce-scatters); what remains is the cross-pod (bridge)
+        psum in hier mode, or the flat dp allreduce in naive mode."""
         if self.mode == "hier":
             if self.pod_axis is None:
                 return grads
-            return jax.tree.map(lambda g: lax.psum(g, self.pod_axis), grads)
+            comm = self.comm
+            if comm is None:     # no node tier: the bridge is the whole comm
+                comm = Communicator(fast_axis=self.pod_axis)
+                return jax.tree.map(
+                    lambda g: comm.allreduce(g, scheme="naive"), grads)
+            return jax.tree.map(comm.bridge_psum, grads)
         axes = self.dp_axes
         if not axes:
             return grads
-        return jax.tree.map(lambda g: lax.psum(g, axes), grads)
+        # the dp reduction's own communicator: reduce over EXACTLY dp_axes
+        fast = tuple(a for a in axes if a != self.pod_axis)
+        slow = self.pod_axis if (self.pod_axis in axes and fast) else None
+        dp_comm = Communicator(fast_axis=fast or axes, slow_axis=slow)
+        return jax.tree.map(
+            lambda g: dp_comm.allreduce(g, scheme="naive"), grads)
 
     # ---- tp collectives ------------------------------------------------------
     def ag_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:

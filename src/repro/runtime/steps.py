@@ -27,6 +27,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.substrate.compat import shard_map
 
+from repro.comm import Communicator
 from repro.core.topology import MeshTopology
 from repro.models.meta import PMeta
 from repro.models.parallel import ParallelCtx
@@ -125,7 +126,11 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
     state_specs = {"params": pspecs, "m": pspecs, "v": pspecs, "step": P()}
     meta_leaves = jax.tree.leaves(defs,
                                   is_leaf=lambda x: isinstance(x, PMeta))
-    all_axes = tuple(topo.axis_names())
+    # world communicator over the whole mesh: metric reductions cross both
+    # tiers; the grad-norm reduction is node-local (pods hold identical
+    # grads after the bridge), i.e. the split_type(SHARED) communicator.
+    world = Communicator.from_topology(topo)
+    node = world.split_type_shared()
 
     from repro.models.transformer import _loss  # local-body entry
 
@@ -137,8 +142,8 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
             return loss, cnt
 
         (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
-        loss_g = lax.psum(loss_sum, all_axes)
-        cnt_g = lax.psum(cnt, all_axes)
+        loss_g = world.allreduce(loss_sum, scheme="naive")
+        cnt_g = world.allreduce(cnt, scheme="naive")
 
         # gradient bridge (the paper's scheme vs the flat pure-MPI reduce)
         gl = jax.tree.leaves(grads)
@@ -159,9 +164,9 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
         grads = jax.tree.map(lambda g: g / cnt_g, grads)
 
         # global grad norm: each leaf is tiled over the axes it is sharded on
-        # and replicated over the rest of (data, model) — weight the square
-        # by 1/replication so the psum counts every element exactly once.
-        norm_axes = tuple(a for a in ("data", "model") if a in topo.axis_sizes)
+        # and replicated over the rest of the node tier — weight the square
+        # by 1/replication so the reduction counts every element exactly
+        # once.  Node-local: grads are pod-identical after the bridge.
         gsq = jnp.float32(0.0)
         for g, meta in zip(jax.tree.leaves(grads), meta_leaves):
             repl = 1.0
@@ -171,7 +176,7 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
             if not data_sharded and "data" in topo.axis_sizes:
                 repl *= topo.size("data")
             gsq += jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
-        gsq = lax.psum(gsq, norm_axes)
+        gsq = node.allreduce(gsq, scheme="naive")
         gnorm = jnp.sqrt(gsq)
         scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
         grads = jax.tree.map(lambda g: g * scale, grads)

@@ -14,6 +14,39 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import SharedWindow
+
+
+def materialize_params(params):
+    """Unwrap ``repro.comm.SharedWindow`` leaves into plain arrays.
+
+    Hier-mode training state hands weights around as node-shared windows;
+    the single-device engine needs full private copies.  A degenerate
+    window (one rank per node — the shard IS the whole buffer) unwraps for
+    free; anything wider must be read inside the sharded step that owns the
+    mesh (``window.read()``), and an *open* store epoch is rejected outright
+    rather than served stale (paper §6's integrity rule).
+    """
+    def unwrap(leaf):
+        if not isinstance(leaf, SharedWindow):
+            return leaf
+        if leaf.dirty:
+            raise ValueError(
+                "refusing to serve from a dirty SharedWindow: a store "
+                "opened an epoch that was never closed — fence() it first")
+        if leaf.comm.chips != 1:
+            # unknown width (chips=None) is just as unreadable here as a
+            # known multi-chip window: the shard may be a fraction of the
+            # weight, so refuse rather than serve it as if it were whole.
+            raise ValueError(
+                f"params contain a {leaf.comm.chips or 'unknown'}-way "
+                "SharedWindow; materialize it on the mesh (window.read() "
+                "inside the sharded step) before handing state to the "
+                "single-device engine")
+        return leaf.shard
+    return jax.tree.map(unwrap, params,
+                        is_leaf=lambda x: isinstance(x, SharedWindow))
+
 
 @dataclasses.dataclass
 class GenResult:
@@ -24,7 +57,10 @@ class GenResult:
 def greedy_generate(model, params, prompts: np.ndarray, *, max_new: int,
                     s_max: Optional[int] = None, temperature: float = 0.0,
                     seed: int = 0) -> GenResult:
-    """prompts: (B, T0) int32.  Single-device engine (ctx = single)."""
+    """prompts: (B, T0) int32.  Single-device engine (ctx = single).
+    ``params`` may carry ``SharedWindow`` leaves (hier-mode state) — they
+    are materialized (or rejected, if unreadable here) up front."""
+    params = materialize_params(params)
     B, T0 = prompts.shape
     s_max = s_max or (T0 + max_new)
     batch = {"tokens": jnp.asarray(

@@ -1,0 +1,64 @@
+"""The api-surface check (scripts/check_api_surface.py) as a tier-1 test:
+no module outside ``repro/comm`` (and the deprecated shim) may pass raw
+``fast_axis=``/``slow_axis=`` kwargs — collectives go through the
+``Communicator``.  CI runs the same script in the fast lane."""
+
+import os
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "scripts"))
+
+import check_api_surface  # noqa: E402
+
+
+def test_repo_api_surface_is_clean():
+    assert check_api_surface.violations(REPO) == []
+
+
+def test_check_catches_a_violation(tmp_path):
+    bad = tmp_path / "src" / "repro" / "runtime"
+    bad.mkdir(parents=True)
+    (bad / "rogue.py").write_text(
+        "from repro.comm import primitives as p\n"
+        "def f(x):\n"
+        "    return p.naive_all_gather(x, fast_axis='data', "
+        "slow_axis='pod')\n")
+    hits = check_api_surface.violations(tmp_path)
+    assert len(hits) == 1 and "rogue.py:3" in hits[0]
+    assert check_api_surface.main([str(tmp_path)]) == 1
+
+
+def test_check_catches_violation_before_constructor_same_line(tmp_path):
+    bad = tmp_path / "src" / "repro" / "runtime"
+    bad.mkdir(parents=True)
+    (bad / "mixed.py").write_text(
+        "y = p.naive_all_gather(x, fast_axis='d'); "
+        "c = Communicator(fast_axis='d')\n")
+    hits = check_api_surface.violations(tmp_path)
+    assert len(hits) == 1 and "mixed.py:1" in hits[0]
+
+
+def test_check_catches_violation_after_constructor_same_line(tmp_path):
+    bad = tmp_path / "src" / "repro" / "runtime"
+    bad.mkdir(parents=True)
+    (bad / "trailing.py").write_text(
+        "c = Communicator(fast_axis='d'); "
+        "y = p.naive_all_gather(x, fast_axis='d')\n")
+    hits = check_api_surface.violations(tmp_path)
+    assert len(hits) == 1 and "trailing.py:1" in hits[0]
+
+
+def test_check_allows_constructor_spellings(tmp_path):
+    ok = tmp_path / "src" / "repro" / "runtime"
+    ok.mkdir(parents=True)
+    (ok / "fine.py").write_text(
+        "from repro.comm import Communicator\n"
+        "from repro.substrate import VirtualCluster\n"
+        "vc = VirtualCluster(pods=2, chips=4, fast_axis=('dp', 'tp'),\n"
+        "                    fast_shape=(2, 2), slow_axis='pod')\n"
+        "comm = Communicator(fast_axis='data', slow_axis='pod')\n"
+        "fast_axis: str = 'data'   # annotated field, not a call kwarg\n")
+    assert check_api_surface.violations(tmp_path) == []
+    assert check_api_surface.main([str(tmp_path)]) == 0

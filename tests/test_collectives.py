@@ -21,26 +21,29 @@ from jax.sharding import PartitionSpec as P
 
 assert jax.device_count() == 1, f"expected 1 device, got {jax.device_count()}"
 
-from repro.core import collectives as cc
+from repro.comm import Communicator
 from repro.launch.mesh import make_mesh_from_topo
 from repro.core.topology import MeshTopology
 from repro.substrate import VirtualCluster
 
 vc = VirtualCluster(pods=1, chips=1, fast_axis="data")
+comm = Communicator.from_cluster(vc)
 x = vc.rank_major_input(m=4, extra=2)
 
-out = vc.run(lambda v: cc.hier_all_gather(v, fast_axis=vc.fast,
-                                          slow_axis=vc.slow),
+out = vc.run(lambda v: comm.allgather(v, scheme="hier"),
              x, out_specs=P(None))
 np.testing.assert_allclose(out, np.asarray(x))
 
-out = vc.run(lambda v: cc.shared_read(
-    cc.shared_all_gather(v, fast_axis=vc.fast, slow_axis=vc.slow),
-    fast_axis=vc.fast), x, out_specs=P(None))
+out = vc.run(lambda v: comm.allgather(v, scheme="shared").read(),
+             x, out_specs=P(None))
 np.testing.assert_allclose(out, np.asarray(x))
 
-out = vc.run(lambda v: cc.hier_psum(v, fast_axis=vc.fast, slow_axis=vc.slow),
+out = vc.run(lambda v: comm.allreduce(v, scheme="hier"),
              x, out_specs=P(None))
+np.testing.assert_allclose(out, np.asarray(x))
+
+out = vc.run(lambda v: comm.alltoall(v, scheme="hier"),
+             x, out_specs=vc.spec)
 np.testing.assert_allclose(out, np.asarray(x))
 
 # production mesh path builds on 1 device too

@@ -1,5 +1,5 @@
 """In-process hier/shared/naive collective equivalence over the topology
-matrix (port of the old subprocess ``_multidevice_checks.py``).
+matrix, driven through the ``repro.comm.Communicator`` scheme dispatch.
 
 Every check is parameterized over ``repro.substrate.default_matrix()``:
 single node (1x8), the seed shape (2x4), its transpose (4x2), one chip per
@@ -14,8 +14,7 @@ import pytest
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import collectives as cc
-from repro.core import sync
+from repro.comm import Communicator, primitives
 from repro.core.plans import GatherPlan, NodeMap
 from repro.substrate import VirtualCluster, default_matrix
 
@@ -30,27 +29,30 @@ def vc(request) -> VirtualCluster:
     return cluster
 
 
+@pytest.fixture
+def comm(vc) -> Communicator:
+    return Communicator.from_cluster(vc)
+
+
 # ---------------------------------------------------------------------------
 # Allgather (paper §4.1)
 # ---------------------------------------------------------------------------
 
-def test_allgather_full_replication_matches_input(vc):
+def test_allgather_full_replication_matches_input(vc, comm):
     x = vc.rank_major_input()
-    for scheme in (cc.naive_all_gather, cc.hier_all_gather):
-        out = vc.run(lambda v, f=scheme: f(v, fast_axis=vc.fast,
-                                           slow_axis=vc.slow),
+    for scheme in ("naive", "hier"):
+        out = vc.run(lambda v, s=scheme: comm.allgather(v, scheme=s),
                      x, out_specs=P(None))
         np.testing.assert_allclose(out, np.asarray(x))
 
 
-def test_shared_allgather_is_one_copy_per_pod(vc):
+def test_shared_allgather_is_one_copy_per_pod(vc, comm):
     x = vc.rank_major_input()
     m = x.shape[0] // vc.num_devices
 
     # chip (p, i) ends with shard i of the pod's single copy: contributions
     # of chip i of EVERY pod, pod-major.
-    shards = vc.run(lambda v: cc.shared_all_gather(v, fast_axis=vc.fast,
-                                                   slow_axis=vc.slow), x)
+    shards = vc.run(lambda v: comm.allgather(v, scheme="shared").shard, x)
     xs = np.asarray(x).reshape(vc.pods, vc.chips, m, -1)
     got = np.asarray(shards).reshape(vc.pods, vc.chips, vc.pods * m, -1)
     for p in range(vc.pods):
@@ -59,16 +61,11 @@ def test_shared_allgather_is_one_copy_per_pod(vc):
             np.testing.assert_allclose(got[p, i], want)
 
 
-def test_shared_read_and_rank_order_roundtrip(vc):
+def test_shared_window_read_rank_order_roundtrip(vc, comm):
     x = vc.rank_major_input()
-
-    def read(v):
-        shard = cc.shared_all_gather(v, fast_axis=vc.fast, slow_axis=vc.slow)
-        full = cc.shared_read(shard, fast_axis=vc.fast)
-        return cc.shared_to_rank_order(full, num_pods=vc.pods,
-                                       chips_per_pod=vc.chips)
-
-    full = vc.run(read, x, out_specs=P(None))
+    full = vc.run(
+        lambda v: comm.allgather(v, scheme="shared").read_rank_order(),
+        x, out_specs=P(None))
     np.testing.assert_allclose(full, np.asarray(x))
 
 
@@ -76,93 +73,67 @@ def test_shared_read_and_rank_order_roundtrip(vc):
 # Broadcast (paper §4.2)
 # ---------------------------------------------------------------------------
 
-def test_broadcast_matches_across_schemes(vc):
+@pytest.mark.parametrize("root_kind", ["leader", "nonzero"])
+def test_broadcast_matches_across_schemes(vc, comm, root_kind):
+    """Every scheme must deliver the root's message; non-leader roots
+    exercise the flat SMP-rank numbering on every scheme."""
     rng = np.random.default_rng(1)
     msg = rng.normal(size=(vc.num_devices, 8, 2)).astype(np.float32)
     x = jnp.asarray(msg)
-    root = 0
+    root = 0 if root_kind == "leader" else vc.num_devices - 2
     want = np.broadcast_to(msg[root], msg.shape)
 
-    naive = vc.run(lambda v: cc.naive_broadcast(
-        v[0], root=root, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
-    hier = vc.run(lambda v: cc.hier_broadcast(
-        v[0], root_pod=0, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
-    np.testing.assert_allclose(np.asarray(naive), want, rtol=1e-6)
-    np.testing.assert_allclose(np.asarray(hier), want, rtol=1e-6)
+    for scheme in ("naive", "hier"):
+        out = vc.run(lambda v, s=scheme: comm.broadcast(
+            v[0], root=root, scheme=s)[None], x)
+        np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
 
     # shared: each chip holds shard i of the root's message; reading gives it
-    def sh(v):
-        shard = cc.shared_broadcast(v[0], root_pod=0, fast_axis=vc.fast,
-                                    slow_axis=vc.slow, axis=0)
-        return cc.shared_read(shard, fast_axis=vc.fast)[None]
-
-    full = vc.run(sh, x)
+    full = vc.run(lambda v: comm.broadcast(
+        v[0], root=root, scheme="shared").read()[None], x)
     np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
 
 
-def test_broadcast_nonzero_flat_root_all_schemes(vc):
-    """Non-zero roots must be expressible in all three schemes via the
-    unified flat ``root`` rank (pod, chip row-major — same numbering as
-    ``naive_broadcast``)."""
-    rng = np.random.default_rng(9)
-    msg = rng.normal(size=(vc.num_devices, 8, 2)).astype(np.float32)
-    x = jnp.asarray(msg)
-    root = vc.num_devices - 2     # non-zero; non-leader whenever chips > 1
-    want = np.broadcast_to(msg[root], msg.shape)
-
-    naive = vc.run(lambda v: cc.naive_broadcast(
-        v[0], root=root, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
-    hier = vc.run(lambda v: cc.hier_broadcast(
-        v[0], root=root, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
-    np.testing.assert_allclose(np.asarray(naive), want, rtol=1e-6)
-    np.testing.assert_allclose(np.asarray(hier), want, rtol=1e-6)
-
-    def sh(v):
-        shard = cc.shared_broadcast(v[0], root=root, fast_axis=vc.fast,
-                                    slow_axis=vc.slow, axis=0)
-        return cc.shared_read(shard, fast_axis=vc.fast)[None]
-
-    full = vc.run(sh, x)
-    np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
-
-
-def test_broadcast_root_pod_alias_matches_flat_root(vc):
-    """Legacy ``root_pod=p`` must equal flat ``root = p * chips`` (the
-    pod's leader), and passing both must be rejected."""
+def test_broadcast_root_pod_alias_deprecated(vc):
+    """Legacy ``root_pod=p`` still equals flat ``root = p * chips`` (the
+    pod's leader) but now warns ``DeprecationWarning``; passing both is
+    rejected."""
     rng = np.random.default_rng(10)
     msg = rng.normal(size=(vc.num_devices, 4)).astype(np.float32)
     x = jnp.asarray(msg)
     pod = vc.pods - 1
 
-    old = vc.run(lambda v: cc.hier_broadcast(
-        v[0], root_pod=pod, fast_axis=vc.fast, slow_axis=vc.slow)[None], x)
-    new = vc.run(lambda v: cc.hier_broadcast(
-        v[0], root=pod * vc.chips, fast_axis=vc.fast,
-        slow_axis=vc.slow)[None], x)
+    with pytest.warns(DeprecationWarning, match="root_pod"):
+        old = vc.run(lambda v: primitives.hier_broadcast(
+            v[0], root_pod=pod, fast_axis=vc.fast,
+            slow_axis=vc.slow)[None], x)
+    comm = Communicator.from_cluster(vc)
+    new = vc.run(lambda v: comm.broadcast(
+        v[0], root=pod * vc.chips, scheme="hier")[None], x)
     np.testing.assert_allclose(np.asarray(old), np.asarray(new))
 
-    with pytest.raises(TypeError):
-        cc.hier_broadcast(jnp.zeros(4), root=0, root_pod=0,
-                          fast_axis=vc.fast, slow_axis=vc.slow)
+    with pytest.raises(TypeError, match="not both"):
+        primitives.hier_broadcast(jnp.zeros(4), root=0, root_pod=0,
+                                  fast_axis=vc.fast, slow_axis=vc.slow)
 
 
-def test_broadcast_out_of_range_root_rejected(vc):
+def test_broadcast_out_of_range_root_rejected(vc, comm):
     """An out-of-range flat root must raise, not silently broadcast the
     wrong rank (or zeros)."""
     with pytest.raises(ValueError, match="out of range"):
-        vc.run(lambda v: cc.hier_broadcast(
-            v[0], root=vc.num_devices, fast_axis=vc.fast,
-            slow_axis=vc.slow)[None], jnp.zeros((vc.num_devices, 4)))
+        vc.run(lambda v: comm.broadcast(
+            v[0], root=vc.num_devices, scheme="hier")[None],
+            jnp.zeros((vc.num_devices, 4)))
     with pytest.raises(ValueError, match="out of range"):
-        vc.run(lambda v: cc.shared_broadcast(
-            v[0], root=-1, fast_axis=vc.fast,
-            slow_axis=vc.slow)[None], jnp.zeros((vc.num_devices, 8)))
+        vc.run(lambda v: comm.broadcast(
+            v[0], root=-1, scheme="shared").shard[None],
+            jnp.zeros((vc.num_devices, 8)))
 
 
 def test_fsdp_helpers_accept_list_axis(vc):
     """Regression: ``fsdp_gather``/``fsdp_scatter`` normalized the axis
     with ``isinstance(..., tuple)`` only, silently breaking the list
-    spelling that ``collectives._axes`` accepts everywhere else."""
+    spelling that ``_axes`` accepts everywhere else."""
     from repro.core import shared_buffer as sb
 
     x = vc.rank_major_input(m=2)
@@ -181,31 +152,50 @@ def test_fsdp_helpers_accept_list_axis(vc):
 
 
 # ---------------------------------------------------------------------------
-# Allreduce / psum-scatter
+# Allreduce / reduce-scatter
 # ---------------------------------------------------------------------------
 
-def test_psum_schemes_agree(vc):
+def test_psum_schemes_agree(vc, comm):
     x = vc.rank_major_input(m=8, extra=4, seed=2)
     m = x.shape[0] // vc.num_devices
     want = np.asarray(x).reshape(vc.num_devices, m, -1).sum(0)
 
-    naive = vc.run(lambda v: cc.naive_psum(v, fast_axis=vc.fast,
-                                           slow_axis=vc.slow),
-                   x, out_specs=P(None))
-    np.testing.assert_allclose(np.asarray(naive)[:m], want, rtol=1e-5)
+    for scheme in ("naive", "hier"):
+        out = vc.run(lambda v, s=scheme: comm.allreduce(v, scheme=s),
+                     x, out_specs=P(None))
+        np.testing.assert_allclose(np.asarray(out)[:m], want, rtol=1e-5)
 
-    hier = vc.run(lambda v: cc.hier_psum(v, fast_axis=vc.fast,
-                                         slow_axis=vc.slow),
-                  x, out_specs=P(None))
-    np.testing.assert_allclose(np.asarray(hier)[:m], want, rtol=1e-5)
-
-    def sh(v):
-        shard = cc.shared_psum_scatter(v, fast_axis=vc.fast,
-                                       slow_axis=vc.slow)
-        return cc.shared_read(shard, fast_axis=vc.fast)
-
-    shared = vc.run(sh, x, out_specs=P(None))
+    shared = vc.run(lambda v: comm.allreduce(v, scheme="shared").read(),
+                    x, out_specs=P(None))
     np.testing.assert_allclose(np.asarray(shared)[:m], want, rtol=1e-5)
+
+
+def test_reduce_scatter_naive_flat_slices(vc, comm):
+    """naive reduce_scatter: rank r ends with the r-th flat slice of the
+    global sum (rank-major)."""
+    R = vc.num_devices
+    m = 4 * R
+    x = jnp.arange(R * m, dtype=jnp.float32).reshape(R, m) / (R * m)
+    want = np.asarray(x).sum(0)
+    out = vc.run(lambda v: comm.reduce_scatter(v[0], scheme="naive"), x,
+                 in_specs=(vc.spec,), out_specs=P(vc.axis_names))
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# All-to-all (flat vs node-aware two-phase)
+# ---------------------------------------------------------------------------
+
+def test_alltoall_schemes_agree(vc, comm):
+    """The node-aware two-phase all-to-all must equal the flat exchange:
+    rank r ends with chunk r of every rank, source-rank ordered."""
+    R, e = vc.num_devices, 3
+    x = jnp.arange(R * R * e, dtype=jnp.float32)
+    want = np.arange(R * R * e, dtype=np.float32) \
+        .reshape(R, R, e).transpose(1, 0, 2).reshape(R, -1)
+    for scheme in ("naive", "hier"):
+        out = vc.run(lambda v, s=scheme: comm.alltoall(v, scheme=s), x)
+        np.testing.assert_allclose(np.asarray(out).reshape(R, -1), want)
 
 
 # ---------------------------------------------------------------------------
@@ -223,13 +213,13 @@ def _irregular_case(vc, max_m=5, seed=3):
     return data, valid, max_m
 
 
-def test_shared_allgatherv_roundtrip(vc):
+def test_shared_allgatherv_roundtrip(vc, comm):
     data, valid, max_m = _irregular_case(vc)
     x = jnp.asarray(data.reshape(vc.num_devices, max_m))
     v = jnp.asarray(valid.reshape(vc.num_devices, 1))
 
     blocks, counts = vc.run(
-        lambda xv, vv: cc.shared_all_gather_v(xv, vv, slow_axis=vc.slow),
+        lambda xv, vv: comm.allgatherv(xv, vv, scheme="shared"),
         x, v, out_specs=(P(None, vc.fast), P(None, vc.fast)))
     b = np.asarray(blocks)      # (pods, chips, max_m)
     c = np.asarray(counts)      # (pods, chips, 1)
@@ -281,19 +271,47 @@ def test_gather_plan_matches_device_layout(pods, chips):
     nm = NodeMap.irregular([chips] * pods)
     assert nm.leaders() == tuple(range(0, pods * chips, chips))
 
+    # the communicator's rank map is the same algebra
+    comm = Communicator(fast_axis="data", slow_axis="pod", pods=pods,
+                        chips=chips)
+    assert comm.node_map == NodeMap.smp(pods, chips)
+
 
 # ---------------------------------------------------------------------------
-# Sync primitives
+# Deprecated free-function shims (one release of compatibility)
 # ---------------------------------------------------------------------------
 
-def test_sync_primitives_run(vc):
-    tok = jnp.ones((vc.num_devices,), jnp.float32)
-    out = vc.run(lambda t: sync.barrier(t, vc.axis_names), tok)
-    np.testing.assert_allclose(np.asarray(out), float(vc.num_devices))
-    out2 = vc.run(lambda t: sync.flag_chain(t, vc.axis_names), tok)
-    np.testing.assert_allclose(np.asarray(out2), 1.0)
-    out3 = vc.run(lambda t: sync.leader_flag(t, fast_axis=vc.fast), tok)
-    np.testing.assert_allclose(np.asarray(out3), float(vc.chips - 1))
+def test_core_collectives_shims_warn_but_work(vc):
+    import repro.core.collectives as cc
+
+    with pytest.warns(DeprecationWarning, match="repro.comm.Communicator"):
+        fn = cc.naive_all_gather
+    x = vc.rank_major_input(m=2)
+    out = vc.run(lambda v: fn(v, fast_axis=vc.fast, slow_axis=vc.slow),
+                 x, out_specs=P(None))
+    np.testing.assert_allclose(out, np.asarray(x))
+
+    with pytest.raises(AttributeError):
+        cc.not_a_collective
+
+
+def test_hier_all_to_all_shim_keeps_old_signature(vc):
+    """The deprecated shim must accept the OLD call shape
+    (fast_axis + split_axis/concat_axis, fast-tier-only exchange) — the
+    comm-era primitive changed both, so the shim adapts."""
+    import repro.core.collectives as cc
+
+    with pytest.warns(DeprecationWarning):
+        legacy = cc.hier_all_to_all
+    c, e = vc.chips, 2
+    x = jnp.arange(vc.num_devices * c * e, dtype=jnp.float32)
+    out = vc.run(lambda v: legacy(v, fast_axis=vc.fast, split_axis=0,
+                                  concat_axis=0), x)
+    # fast-tier-only personalized exchange, per pod
+    got = np.asarray(out).reshape(vc.pods, c, c, e)
+    want = np.arange(vc.num_devices * c * e, dtype=np.float32) \
+        .reshape(vc.pods, c, c, e).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(got, want)
 
 
 # ---------------------------------------------------------------------------
@@ -310,7 +328,7 @@ def test_shared_to_rank_order_inverts_shared_layout(pods, chips, chunk, axis):
     shared = ranked.reshape(pods, chips, chunk, 2).swapaxes(0, 1) \
                    .reshape(n, 2)
     shared = np.moveaxis(shared[..., None], 0, axis)  # exercise axis != 0 too
-    got = cc.shared_to_rank_order(jnp.asarray(shared), num_pods=pods,
-                                  chips_per_pod=chips, axis=axis)
+    got = primitives.shared_to_rank_order(jnp.asarray(shared), num_pods=pods,
+                                          chips_per_pod=chips, axis=axis)
     want = np.moveaxis(ranked[..., None], 0, axis)
     np.testing.assert_allclose(np.asarray(got), want)

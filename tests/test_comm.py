@@ -1,0 +1,316 @@
+"""repro.comm: Communicator structure, scheme registry, SharedWindow epoch
+semantics, and ``core.sync`` primitives over the full topology matrix.
+
+The sync primitives (``barrier``, ``flag_chain``, ``leader_flag``) had no
+dedicated coverage before this suite; every check here runs over
+``default_matrix()`` — single node, seed shape, transpose, bridge-only and
+the tuple-axis mesh.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import (Communicator, SharedWindow, WindowEpochError,
+                        get_scheme, registry, scheme_names, schemes_for)
+from repro.core import sync
+from repro.core.plans import NodeMap
+from repro.substrate import VirtualCluster, default_matrix
+
+MATRIX = default_matrix()
+
+
+@pytest.fixture(params=MATRIX, ids=[t.label for t in MATRIX])
+def vc(request) -> VirtualCluster:
+    cluster = request.param
+    if not cluster.available():
+        pytest.skip(f"needs {cluster.num_devices} devices")
+    return cluster
+
+
+@pytest.fixture
+def comm(vc) -> Communicator:
+    return Communicator.from_cluster(vc)
+
+
+# ---------------------------------------------------------------------------
+# Communicator structure (MPI_Comm_split_type analogy)
+# ---------------------------------------------------------------------------
+
+def test_communicator_structure(vc, comm):
+    assert comm.num_nodes == vc.pods
+    assert comm.ranks_per_node == vc.chips
+    assert comm.num_ranks == vc.num_devices
+    assert comm.node_map == NodeMap.smp(vc.pods, vc.chips)
+
+    node = comm.split_type_shared()
+    assert node.slow_axis is None and node.chips == vc.chips
+    if vc.pods > 1:
+        bridge = comm.bridge()
+        assert bridge.slow_axis is None and bridge.chips == vc.pods
+    else:
+        with pytest.raises(ValueError, match="no bridge"):
+            comm.bridge()
+
+
+def test_communicator_rank_indices(vc, comm):
+    """``rank()`` is the flat SMP (pod, chip) row-major rank — the broadcast
+    root numbering — and factors into (node_rank, local_rank)."""
+    def body(_):
+        r = comm.rank()
+        return jnp.stack([r, comm.node_rank() * vc.chips + comm.local_rank()]
+                         )[None]
+
+    out = np.asarray(vc.run(body, jnp.zeros((vc.num_devices, 1))))
+    assert out.shape == (vc.num_devices, 2)
+    np.testing.assert_array_equal(out[:, 0], np.arange(vc.num_devices))
+    np.testing.assert_array_equal(out[:, 1], np.arange(vc.num_devices))
+
+
+def test_from_topology_matches_tiers():
+    from repro.core.topology import multi_pod, single_pod
+    from repro.launch.mesh import communicator_for_topo
+
+    c = communicator_for_topo(multi_pod(pods=2, data=2, model=2))
+    assert c.slow_axis == "pod" and c.fast_axis == ("data", "model")
+    assert c.pods == 2 and c.chips == 4
+
+    s = Communicator.from_topology(single_pod(data=4, model=2))
+    assert s.slow_axis is None and s.pods == 1 and s.chips == 8
+
+
+# ---------------------------------------------------------------------------
+# Scheme registry
+# ---------------------------------------------------------------------------
+
+def test_registry_entries_and_errors():
+    assert set(scheme_names()) == {"naive", "hier", "shared"}
+    assert get_scheme("shared").result_class == "shared"
+    assert get_scheme("hier").result_class == "replicated"
+    with pytest.raises(KeyError, match="registered"):
+        get_scheme("quantum")
+    # unsupported (scheme, family) pairs fail loudly, naming alternatives
+    with pytest.raises(NotImplementedError, match="naive.*shared"):
+        get_scheme("hier").op("reduce_scatter")
+    assert [s.name for s in schemes_for("alltoall")] == ["naive", "hier"]
+    assert [s.name for s in schemes_for("allgatherv")] == ["naive", "shared"]
+
+
+def test_registry_traffic_is_plans_closed_form():
+    from repro.core import plans
+    sch = get_scheme("shared")
+    tr = sch.traffic("allgather", pods=2, chips=4, elems=16)
+    assert tr == plans.allgather_traffic(scheme="hier", num_nodes=2,
+                                         ranks_per_node=4, bytes_per_rank=64)
+    # the node-aware alltoall declares zero intra-node copy bytes (C2-style)
+    a2a = get_scheme("hier").traffic("alltoall", pods=2, chips=4, elems=8)
+    assert a2a.fast_bytes == 0
+    naive = get_scheme("naive").traffic("alltoall", pods=2, chips=4, elems=8)
+    assert naive.slow_bytes == a2a.slow_bytes        # distinct data: no
+    assert naive.result_bytes_per_node == a2a.result_bytes_per_node
+
+
+def test_communicator_rejects_unknown_scheme(vc, comm):
+    with pytest.raises(KeyError, match="registered"):
+        vc.run(lambda v: comm.allgather(v, scheme="nope"),
+               vc.rank_major_input(m=1))
+
+
+def test_alltoall_traffic_model_properties():
+    """Closed-form sanity: naive total == m*R*(R-1); hier deletes exactly
+    the intra-node pair bytes; single-node slow == 0."""
+    from repro.core.plans import alltoall_traffic
+    for P_, c, m in [(2, 4, 8), (4, 2, 4), (8, 1, 12), (1, 8, 4)]:
+        R = P_ * c
+        nv = alltoall_traffic(scheme="naive", num_nodes=P_,
+                              ranks_per_node=c, bytes_per_pair=m)
+        hi = alltoall_traffic(scheme="hier", num_nodes=P_,
+                              ranks_per_node=c, bytes_per_pair=m)
+        assert nv.slow_bytes + nv.fast_bytes == m * R * (R - 1)
+        assert hi.fast_bytes == 0
+        assert nv.slow_bytes == hi.slow_bytes == m * P_ * (P_ - 1) * c * c
+        assert nv.result_bytes_per_node == hi.result_bytes_per_node \
+            == c * R * m
+    with pytest.raises(ValueError, match="unknown scheme"):
+        alltoall_traffic(scheme="shared", num_nodes=2, ranks_per_node=2,
+                         bytes_per_pair=4)
+
+
+# ---------------------------------------------------------------------------
+# SharedWindow: fence()/epoch semantics (paper §6 integrity rules)
+# ---------------------------------------------------------------------------
+
+def test_window_fence_closes_epochs_and_orders_reads(vc, comm):
+    x = vc.rank_major_input(m=2)
+
+    def body(v):
+        w = comm.allgather(v, scheme="shared")
+        assert w.epoch == 1 and not w.dirty      # collective = closed epoch
+        w2 = w.store(w.shard * 2.0)
+        assert w2.dirty                          # store opened an epoch
+        w3 = w2.fence()
+        assert w3.epoch == 2 and not w3.dirty    # fence closed it
+        return w3.read_rank_order()
+
+    out = vc.run(body, x, out_specs=P(None))
+    np.testing.assert_allclose(np.asarray(out), 2.0 * np.asarray(x),
+                               rtol=1e-6)
+
+
+def test_window_dirty_read_raises(vc, comm):
+    x = vc.rank_major_input(m=1)
+    with pytest.raises(WindowEpochError, match="fence"):
+        vc.run(lambda v: comm.allgather(v, scheme="shared")
+               .store(v).read(), x, out_specs=P(None))
+
+
+def test_window_fence_value_preserving_all_dtypes(vc, comm):
+    """fence() must only add ordering, never change the buffer — including
+    integer windows, and including non-finite payloads (a near-overflow
+    gradient must not be corrupted by its own synchronization)."""
+    R = vc.num_devices
+    for dtype in (jnp.float32, jnp.int32):
+        x = jnp.arange(R * 4, dtype=dtype)
+        out = vc.run(
+            lambda v: comm.window(v, epoch=1).fence().shard, x)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(x))
+    # NaN/inf in element 0 used to poison the whole window via the
+    # arithmetic ordering token
+    bad = np.full((R * 2,), np.nan, np.float32)
+    bad[1::2] = np.inf
+    out = vc.run(lambda v: comm.window(v, epoch=1).fence().shard,
+                 jnp.asarray(bad))
+    np.testing.assert_array_equal(np.asarray(out), bad)
+
+
+def test_window_accumulate_is_reduce_scatter_store(vc, comm):
+    """accumulate(): every on-node rank contributes a partial sum; after a
+    fence the window holds the node-reduced buffer."""
+    R = vc.num_devices
+    m = 4 * vc.chips
+    x = jnp.ones((R, m), jnp.float32)
+
+    def body(v):
+        w = comm.window(jnp.zeros((m // vc.chips,), jnp.float32))
+        w = w.accumulate(v[0]).fence()
+        return w.read()[None]
+
+    out = vc.run(body, x, in_specs=(vc.spec,), out_specs=(
+        P(None) if vc.pods == 1 else P(vc.slow, None)))
+    got = np.asarray(out).reshape(-1, m)
+    np.testing.assert_allclose(got, float(vc.chips))
+
+
+def test_window_pytree_roundtrip():
+    import jax
+    comm = Communicator(fast_axis="data", pods=1, chips=4)
+    w = SharedWindow(comm, jnp.arange(4.0), axis=0, epoch=3, dirty=True)
+    leaves, treedef = jax.tree.flatten(w)
+    w2 = jax.tree.unflatten(treedef, leaves)
+    assert w2.epoch == 3 and w2.dirty and w2.comm == comm
+    np.testing.assert_array_equal(np.asarray(w2.shard), np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# core.sync primitives over the full matrix
+# ---------------------------------------------------------------------------
+
+def test_barrier_world_and_per_tier(vc, comm):
+    tok = jnp.ones((vc.num_devices,), jnp.float32)
+    out = vc.run(lambda t: sync.barrier(t, vc.axis_names), tok)
+    np.testing.assert_allclose(np.asarray(out), float(vc.num_devices))
+    # node-tier barrier: sums over ranks_per_node only
+    out_f = vc.run(lambda t: sync.barrier(t, vc.fast), tok)
+    np.testing.assert_allclose(np.asarray(out_f), float(vc.chips))
+    # communicator-level world barrier matches the raw one
+    out_c = vc.run(comm.barrier, tok)
+    np.testing.assert_allclose(np.asarray(out_c), float(vc.num_devices))
+
+
+def test_flag_chain_permutes_ring(vc):
+    """flag_chain is a ring send: rank r's token lands on its successor, so
+    distinct tokens must come back a cyclic shift — not a reduction."""
+    tok = jnp.arange(vc.num_devices, dtype=jnp.float32)
+    out = np.asarray(vc.run(lambda t: sync.flag_chain(t, vc.axis_names), tok))
+    assert sorted(out.tolist()) == sorted(range(vc.num_devices))
+    assert not np.array_equal(out, np.asarray(tok)) or vc.num_devices == 1
+
+
+def test_flag_chain_fast_tier_only(vc):
+    """A node-tier chain permutes within each pod: pods keep their own
+    token sets."""
+    tok = jnp.arange(vc.num_devices, dtype=jnp.float32)
+    out = np.asarray(vc.run(lambda t: sync.flag_chain(t, vc.fast), tok))
+    pods = out.reshape(vc.pods, vc.chips)
+    want = np.arange(vc.num_devices, dtype=np.float32) \
+        .reshape(vc.pods, vc.chips)
+    for p in range(vc.pods):
+        assert sorted(pods[p].tolist()) == sorted(want[p].tolist())
+
+
+def test_leader_flag_counts_children(vc):
+    tok = jnp.ones((vc.num_devices,), jnp.float32)
+    out = vc.run(lambda t: sync.leader_flag(t, fast_axis=vc.fast), tok)
+    np.testing.assert_allclose(np.asarray(out), float(vc.chips - 1))
+
+
+# ---------------------------------------------------------------------------
+# Serving-engine integration: window-wrapped params
+# ---------------------------------------------------------------------------
+
+def test_engine_materializes_degenerate_windows():
+    from repro.serving.engine import materialize_params
+
+    comm1 = Communicator(fast_axis="data", pods=4, chips=1)
+    params = {"w": SharedWindow(comm1, jnp.ones((2, 2)), epoch=1),
+              "b": jnp.zeros((2,))}
+    out = materialize_params(params)
+    assert isinstance(out["w"], jnp.ndarray)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+    comm4 = Communicator(fast_axis="data", pods=1, chips=4)
+    with pytest.raises(ValueError, match="SharedWindow"):
+        materialize_params({"w": SharedWindow(comm4, jnp.ones((2, 2)),
+                                              epoch=1)})
+    with pytest.raises(ValueError, match="dirty"):
+        materialize_params({"w": SharedWindow(comm1, jnp.ones((2, 2)),
+                                              epoch=1, dirty=True)})
+    # unknown width (no static chips count) is unreadable, not degenerate:
+    # the shard may be a fraction of the weight
+    comm_unk = Communicator(fast_axis="data")
+    with pytest.raises(ValueError, match="unknown"):
+        materialize_params({"w": SharedWindow(comm_unk, jnp.ones((2, 2)),
+                                              epoch=1)})
+
+
+# ---------------------------------------------------------------------------
+# ParallelCtx gradient reduction through the communicator
+# ---------------------------------------------------------------------------
+
+def test_reduce_grads_covers_every_dp_shape():
+    """The dp reduction must cover EXACTLY dp_axes for every constructible
+    ctx — including bridge-only dp (dp_axes == (pod,), no node-tier data
+    axis), which has no parameter-store communicator."""
+    from repro.models.parallel import ParallelCtx
+
+    vc = VirtualCluster(pods=4, chips=2)
+    if not vc.available():
+        pytest.skip("needs 8 devices")
+    x = jnp.ones((vc.num_devices, 3), jnp.float32)
+
+    cases = [
+        # (ctx, expected summed-over rank count)
+        (ParallelCtx(mode="naive", dp_axes=("pod", "data"),
+                     pod_axis="pod"), 8),
+        (ParallelCtx(mode="naive", dp_axes=("pod",), pod_axis="pod"), 4),
+        (ParallelCtx(mode="naive", dp_axes=("data",), pod_axis="pod"), 2),
+        (ParallelCtx(mode="hier", fsdp_axes=("data",), pod_axis="pod"), 4),
+        (ParallelCtx(mode="hier", dp_axes=("pod",), pod_axis="pod"), 4),
+    ]
+    for ctx, want in cases:
+        out = vc.run(lambda v, c=ctx: c.reduce_grads({"g": v})["g"], x)
+        np.testing.assert_allclose(np.asarray(out), float(want),
+                                   err_msg=f"{ctx.mode} dp={ctx.dp_axes} "
+                                           f"fsdp={ctx.fsdp_axes}")

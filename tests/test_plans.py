@@ -17,7 +17,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.plans import (GatherPlan, NodeMap, allgather_traffic,
                               allgatherv_traffic, allreduce_traffic,
-                              broadcast_traffic, collective_time_model)
+                              alltoall_traffic, broadcast_traffic,
+                              collective_time_model)
 
 nodes = st.integers(min_value=1, max_value=12)
 ppn = st.integers(min_value=1, max_value=32)
@@ -165,6 +166,30 @@ def test_traffic_monotone_in_message(P, c, m, k):
         big = fn(scheme="hier", num_nodes=P, ranks_per_node=c, **{kw: k * m})
         assert big.slow_bytes >= small.slow_bytes
         assert big.result_bytes_per_node >= small.result_bytes_per_node
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=200, deadline=None)
+def test_alltoall_pairwise_accounting(P, c, m):
+    """All-to-all invariants for ANY shape: total naive bytes == every
+    ordered non-self pair moving m once; the node-aware scheme deletes
+    exactly the intra-node pair bytes (C2-style) and cannot reduce the
+    bridge (all data distinct); results are rank-private in both schemes so
+    C1 does NOT apply (equal residency)."""
+    R = P * c
+    naive = alltoall_traffic(scheme="naive", num_nodes=P, ranks_per_node=c,
+                             bytes_per_pair=m)
+    hier = alltoall_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                            bytes_per_pair=m)
+    assert naive.slow_bytes + naive.fast_bytes == m * R * (R - 1)
+    assert naive.slow_bytes == hier.slow_bytes
+    assert hier.fast_bytes == 0
+    assert naive.fast_bytes == m * P * c * (c - 1)
+    assert naive.result_bytes_per_node == hier.result_bytes_per_node \
+        == c * R * m
+    # single node: everything is intra-node
+    if P == 1:
+        assert naive.slow_bytes == 0
 
 
 @given(nodes, ppn, msg)
