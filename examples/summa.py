@@ -7,12 +7,18 @@ the grid column:
 * naive  (pure MPI, Ori_SUMMA): every core ends with a private panel copy
   (``naive_broadcast``);
 * hybrid (paper, Hy_SUMMA): ONE shared panel copy per node, sharded over the
-  node's cores (``shared_broadcast``), read at use (``shared_read``).
+  node's cores (``shared_broadcast``), read at use (``shared_read``);
+* pipelined (Hy_SUMMA + compute overlap): same shared panel window, but the
+  read is FUSED into the panel product — ``Communicator.ag_matmul_rows``
+  gathers the A-panel chunk-wise behind the per-chunk matmuls
+  (``repro.comm.pipeline``), so the window load streams instead of
+  completing before the first MXU cycle.
 
-Both must produce C = A @ B exactly; the derived traffic model shows the
-hybrid scheme deleting the intra-node copy bytes (paper Fig. 11's win).
+All schemes must produce C = A @ B exactly; the derived traffic model shows
+the hybrid schemes deleting the intra-node copy bytes (paper Fig. 11's win).
 
     PYTHONPATH=src python examples/summa.py [--n 512] [--use-kernel]
+                                            [--chunks 2]
 """
 
 import os
@@ -41,7 +47,8 @@ ROW_COMM = Communicator(fast_axis="core", slow_axis=None, pods=1,
                         chips=CORES)
 
 
-def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False):
+def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False,
+          chunks: int = 2):
     """a, b: (N, N) host arrays; grid: rows over 'node', cols over 'core'."""
     N = a.shape[0]
     bs = N // NODES  # square block per device row/col
@@ -58,14 +65,23 @@ def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False):
         for k in range(CORES):  # SUMMA rounds over the inner grid dim
             # row broadcast of A[:, k] (owner core k) — intra-node tier
             a_src = jnp.where(j == k, a_blk, jnp.zeros_like(a_blk))
+            # column broadcast of B[k, :] (owner node k) — bridge tier
+            b_src = jnp.where(i == k, b_blk, jnp.zeros_like(b_blk))
+            b_panel = lax.psum(b_src, "node")
+            if scheme == "pipelined":
+                # Hy_SUMMA + overlap: the shared window's read is fused into
+                # the panel product — per-chunk row gathers stream behind
+                # the per-chunk matmuls (double-buffered)
+                win = ROW_COMM.reduce_scatter(a_src, scheme="shared")
+                cs = cs + ROW_COMM.ag_matmul_rows(
+                    win.shard, b_panel, n_chunks=chunks,
+                    use_kernel=use_kernel)
+                continue
             if scheme == "naive":
                 a_panel = lax.psum(a_src, "core")
             else:  # hybrid: one shared panel per node (a window), read at use
                 a_panel = ROW_COMM.reduce_scatter(a_src,
                                                   scheme="shared").read()
-            # column broadcast of B[k, :] (owner node k) — bridge tier
-            b_src = jnp.where(i == k, b_blk, jnp.zeros_like(b_blk))
-            b_panel = lax.psum(b_src, "node")
             if use_kernel:
                 from repro.kernels.ops import matmul as pallas_mm
                 cs = cs + pallas_mm(a_panel, b_panel)
@@ -85,6 +101,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=512)
     ap.add_argument("--use-kernel", action="store_true")
+    ap.add_argument("--chunks", type=int, default=2,
+                    help="overlap depth of the pipelined variant")
     args = ap.parse_args()
 
     mesh = make_mesh((NODES, CORES), ("node", "core"))
@@ -93,21 +111,22 @@ def main():
     b = rng.normal(size=(args.n, args.n)).astype(np.float32)
     want = a @ b
 
-    for scheme in ("naive", "hybrid"):
+    for scheme in ("naive", "hybrid", "pipelined"):
         t0 = time.time()
         got = summa(a, b, scheme=scheme, mesh=mesh,
-                    use_kernel=args.use_kernel)
+                    use_kernel=args.use_kernel, chunks=args.chunks)
         dt = time.time() - t0
         err = np.abs(got - want).max() / np.abs(want).max()
         panel = args.n * (args.n // CORES) * 4  # bytes per A panel
-        tr = broadcast_traffic(scheme="hier" if scheme == "hybrid"
-                               else "naive", num_nodes=NODES,
+        tr = broadcast_traffic(scheme="naive" if scheme == "naive"
+                               else "hier", num_nodes=NODES,
                                ranks_per_node=CORES, msg_bytes=panel)
-        print(f"{scheme:6s}: {dt*1e3:8.1f} ms  rel_err={err:.2e}  "
+        print(f"{scheme:9s}: {dt*1e3:8.1f} ms  rel_err={err:.2e}  "
               f"intra-node copy bytes/round={tr.fast_bytes:,}  "
               f"panel copies/node={tr.result_bytes_per_node // panel}")
-    print("paper claim C2: hybrid deletes all intra-node panel copies; "
-          "both schemes match A@B exactly.")
+    print("paper claim C2: the hybrid schemes delete all intra-node panel "
+          "copies (pipelined additionally streams the window read behind "
+          "the matmul); all schemes match A@B exactly.")
 
 
 if __name__ == "__main__":

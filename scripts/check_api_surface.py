@@ -1,11 +1,12 @@
 #!/usr/bin/env python3
 """API-surface check: collectives go through ``repro.comm``, nowhere else.
 
-Fails (exit 1) if any module outside ``src/repro/comm/`` and the deprecated
-shim ``src/repro/core/collectives.py`` passes raw ``fast_axis=`` /
-``slow_axis=`` keyword arguments — the old free-function calling convention
-the ``Communicator`` replaced.  A violation means a consumer bypassed the
-scheme registry and would silently miss future scheme/validation coverage.
+Fails (exit 1) if any module outside ``src/repro/comm/`` passes raw
+``fast_axis=`` / ``slow_axis=`` keyword arguments — the old free-function
+calling convention the ``Communicator`` replaced.  A violation means a
+consumer bypassed the scheme registry and would silently miss future
+scheme/validation coverage.  (The ``src/repro/core/collectives.py`` shim
+exemption was dropped when the shim itself was removed.)
 
 Allowed everywhere:
   * ``VirtualCluster(...)`` construction (the substrate's topology spec is
@@ -31,7 +32,6 @@ ALLOWED_LINE_RE = re.compile(r"\b(?:VirtualCluster|Communicator)\s*\(")
 SCAN_ROOTS = ("src/repro", "benchmarks", "examples")
 ALLOWED_PATHS = (
     "src/repro/comm/",               # the API itself
-    "src/repro/core/collectives.py",  # deprecated shim (one release)
 )
 
 

@@ -1,0 +1,153 @@
+#!/usr/bin/env python3
+"""Perf-regression gate: fresh bench medians vs the committed baseline.
+
+First consumer of the bench *trajectory*: ``BENCH_collectives.json`` is
+regenerated on every perf PR, and this gate compares a freshly generated
+report against the committed artifact, failing (exit 1) when a case got
+slower beyond the tolerance band.
+
+Raw microseconds are machine-dependent (a CI runner is not the laptop that
+produced the baseline), so the comparison is **normalized within each
+run**: every case's median is divided by its (family, topology, elems)
+group's reference-scheme median from the SAME file.  A case regresses when
+
+    fresh_norm > base_norm * tol
+
+The reference scheme per group is the first registered scheme present in
+BOTH files (deterministically ``naive`` today).  Because the reference's
+own normalized value is identically 1.0, a second **machine-factor** pass
+covers it: the global machine speed factor is estimated as the median of
+raw fresh/base ratios over every common cell, and a REFERENCE cell whose
+raw ratio exceeds ``factor * raw_tol`` fails — a regression confined to
+the reference scheme (which would shrink every OTHER scheme's normalized
+value and hide both) is caught here.  ``raw_tol`` defaults to ``2 * tol``:
+raw cross-run ratios carry the full per-cell tail noise that the
+normalized pass cancels, so the reference band is wider by design.  Only
+(family, scheme, topology, elems) cells present in both files are
+compared; zero overlap is an error (the gate would silently pass
+forever).
+
+    python scripts/check_bench_regression.py BASELINE FRESH [--tol 3.0]
+
+``--tol`` is deliberately wide: quick-sweep medians on shared CI runners
+are noisy, and the gate exists to catch structural regressions (a scheme
+suddenly 3x its old relative cost — e.g. a lost overlap, an extra
+collective), not single-digit-percent drift.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cells(report: dict) -> dict[tuple, float]:
+    """(family, scheme, topology, elems) -> median_us."""
+    out = {}
+    for case in report.get("cases", []):
+        key = (case["family"], case["scheme"], case["topology"],
+               case["elems"])
+        out[key] = float(case["timing"]["median_us"])
+    return out
+
+
+def _group_reference(cells: dict[tuple, float]) -> dict[tuple, str]:
+    """(family, topology, elems) -> reference scheme name (first scheme in
+    sorted order that appears in the group — 'naive' sorts after 'hier',
+    so pick explicitly: prefer 'naive', else lexicographic first)."""
+    groups: dict[tuple, list[str]] = {}
+    for (fam, sch, topo, elems) in cells:
+        groups.setdefault((fam, topo, elems), []).append(sch)
+    return {g: ("naive" if "naive" in ss else sorted(ss)[0])
+            for g, ss in groups.items()}
+
+
+def compare(base: dict, fresh: dict, tol: float) -> tuple[list[str],
+                                                          list[str]]:
+    """Returns (table_rows, failures)."""
+    import statistics
+
+    bc, fc = _cells(base), _cells(fresh)
+    common = sorted(set(bc) & set(fc))
+    if not common:
+        return [], ["no overlapping (family, scheme, topology, elems) "
+                    "cells between baseline and fresh report — regenerate "
+                    "the baseline with sizes the gate's sweep also runs"]
+    refs = _group_reference({k: bc[k] for k in common})
+    rows, failures = [], []
+    for key in common:
+        fam, sch, topo, elems = key
+        ref = refs[(fam, topo, elems)]
+        base_ref = bc.get((fam, ref, topo, elems))
+        fresh_ref = fc.get((fam, ref, topo, elems))
+        if not base_ref or not fresh_ref:
+            continue
+        base_norm = bc[key] / base_ref
+        fresh_norm = fc[key] / fresh_ref
+        ok = fresh_norm <= base_norm * tol
+        rows.append(f"  {fam}/{sch}/{topo}/e{elems}: base {base_norm:.2f}x "
+                    f"fresh {fresh_norm:.2f}x {ref} "
+                    f"{'ok' if ok else 'REGRESSED'}")
+        if not ok:
+            failures.append(
+                f"{fam}/{sch}/{topo}/e{elems}: {fresh_norm:.2f}x {ref} vs "
+                f"baseline {base_norm:.2f}x (tol {tol}x)")
+    # machine-factor pass over the REFERENCE cells only: their normalized
+    # value is 1.0 by construction, so they are the normalized pass's one
+    # blind spot.  Non-reference cells are already covered above; raw
+    # ratios carry full per-cell tail noise, hence the wider band.
+    raw_tol = 2.0 * tol
+    factor = statistics.median(fc[k] / bc[k] for k in common)
+    rows.append(f"  machine speed factor (median raw fresh/base): "
+                f"{factor:.2f}x")
+    for key in common:
+        fam, sch, topo, elems = key
+        if sch != refs[(fam, topo, elems)]:
+            continue
+        raw = fc[key] / bc[key]
+        if raw > factor * raw_tol:
+            failures.append(
+                f"{fam}/{sch}/{topo}/e{elems}: reference-scheme raw "
+                f"{raw:.2f}x vs machine factor {factor:.2f}x (raw tol "
+                f"{raw_tol}x) — regression not explained by host speed")
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare fresh bench medians against the committed "
+                    "baseline (normalized within each run)")
+    ap.add_argument("baseline", help="committed BENCH_collectives.json")
+    ap.add_argument("fresh", help="freshly generated report")
+    ap.add_argument("--tol", type=float, default=3.0,
+                    help="normalized-median tolerance factor "
+                         "(default %(default)s)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    for rep, name in ((base, args.baseline), (fresh, args.fresh)):
+        if not str(rep.get("schema", "")).startswith("repro.bench/"):
+            print(f"bench-regression: {name} is not a repro.bench report "
+                  f"(schema={rep.get('schema')!r})", file=sys.stderr)
+            return 1
+
+    rows, failures = compare(base, fresh, args.tol)
+    print(f"bench-regression: {len(rows)} compared cells "
+          f"(tol {args.tol}x, normalized within-run):")
+    for r in rows:
+        print(r)
+    if failures:
+        print("bench-regression FAILED:", file=sys.stderr)
+        for f_ in failures:
+            print(f"  {f_}", file=sys.stderr)
+        return 1
+    print("bench-regression OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -49,10 +49,20 @@ def main(argv=None) -> int:
     ap.add_argument("--max-devices", type=int, default=8,
                     help="cap the topology matrix (default %(default)s)")
     ap.add_argument("--families", default=None,
-                    help="comma list: allgather,broadcast,psum,allgatherv,"
-                         "alltoall")
+                    help="comma list: allgather,broadcast,psum,"
+                         "reduce_scatter,allgatherv,alltoall")
+    ap.add_argument("--schemes", default=None,
+                    help="comma list of registry scheme names (fast "
+                         "autotune iteration, e.g. pipelined,hier)")
+    ap.add_argument("--elems", default=None,
+                    help="comma list of message sizes in elems, overriding "
+                         "the quick/full defaults (e.g. 1024,65536)")
     ap.add_argument("--reps", type=int, default=None,
                     help="timed reps per case (default 30, quick 5)")
+    ap.add_argument("--min-rep-s", type=float, default=0.0,
+                    help="calibrate an inner loop so every timed rep lasts "
+                         "at least this many seconds (smooths per-call "
+                         "scheduling jitter on noisy hosts)")
     ap.add_argument("--no-validate", action="store_true",
                     help="skip the traffic-model cross-checks (timing "
                          "only; the JSON then carries no checks)")
@@ -66,16 +76,23 @@ def main(argv=None) -> int:
 
     families = tuple(args.families.split(",")) if args.families \
         else suites.FAMILIES
-    elems = suites.QUICK_ELEMS if args.quick else suites.FULL_ELEMS
+    schemes = tuple(args.schemes.split(",")) if args.schemes else None
+    if args.elems:
+        elems = tuple(int(e) for e in args.elems.split(","))
+    else:
+        elems = suites.QUICK_ELEMS if args.quick else suites.FULL_ELEMS
     reps = args.reps if args.reps is not None else (5 if args.quick else 30)
 
-    cases = suites.build_cases(families=families, elems=elems,
-                               max_devices=args.max_devices)
+    cases = suites.build_cases(
+        families=families, elems=elems, max_devices=args.max_devices,
+        schemes=schemes,
+        on_skip=lambda msg: print(f"repro.bench: {msg}", file=sys.stderr))
     print(f"repro.bench: {len(cases)} cases over "
           f"{len({c.topology for c in cases})} topologies x {elems} elems "
           f"(reps={reps})", file=sys.stderr)
     try:
         suite = suites.run_suite(cases, reps=reps,
+                                 min_rep_s=args.min_rep_s,
                                  validate=not args.no_validate,
                                  log=lambda s: print(s, file=sys.stderr))
     except BenchValidationError as e:

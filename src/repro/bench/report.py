@@ -44,6 +44,7 @@ def case_record(r: CaseResult) -> dict:
         "traffic": dataclasses.asdict(c.traffic),
         "hlo": r.hlo,
         "checks": [ch.to_dict() for ch in r.checks],
+        "autotune": r.autotune,
         "ok": all(ch.ok for ch in r.checks),
     }
 
@@ -59,6 +60,10 @@ def copies_per_node(r: CaseResult) -> int:
         full = c.cluster.num_devices * c.elems * 4
     elif c.family == "allgatherv":
         full = sum(c.populations) * c.elems * 4
+    elif c.family == "reduce_scatter":
+        # unit = the node's flat share of the scattered result; the shared
+        # window keeps the whole reduced message (num_nodes shares) once
+        full = c.elems * 4 // c.cluster.pods
     else:                       # broadcast / psum: the message itself
         full = c.elems * 4
     return c.traffic.result_bytes_per_node // full

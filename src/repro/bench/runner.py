@@ -49,6 +49,48 @@ class TimingResult:
         return dataclasses.asdict(self)
 
 
+def calibrate_inner(warm_s: float, min_rep_s: float,
+                    max_inner: int = 64) -> int:
+    """Inner-loop count so one timed rep lasts at least ``min_rep_s``,
+    given a ``warm_s``-second calibration call (1 = no batching).  The one
+    home of this formula — ``timeit`` and ``suites.run_suite`` both use
+    it."""
+    if min_rep_s <= 0.0 or warm_s >= min_rep_s:
+        return 1
+    return min(max_inner, max(1, math.ceil(min_rep_s / max(warm_s, 1e-9))))
+
+
+def summarize(times_us, inner: int = 1) -> TimingResult:
+    """Aggregate raw per-rep microsecond samples into a ``TimingResult``
+    (used by ``suites.run_suite``'s interleaved round-robin timing, where
+    the rep loop lives OUTSIDE the per-case timer so concurrent cases share
+    one drift profile)."""
+    times_us = list(times_us)
+    if not times_us:
+        raise ValueError("no samples")
+    if len(times_us) >= 2:
+        q1, _, q3 = statistics.quantiles(times_us, n=4)
+        iqr = q3 - q1
+    else:
+        iqr = 0.0
+    return TimingResult(
+        median_us=statistics.median(times_us),
+        mean_us=statistics.fmean(times_us),
+        min_us=min(times_us), max_us=max(times_us),
+        iqr_us=iqr, reps=len(times_us), inner=inner)
+
+
+def timed_call(fn, *args, inner: int = 1) -> float:
+    """One timed rep (``inner`` back-to-back calls, every output leaf
+    blocked) in microseconds-per-call."""
+    t0 = time.perf_counter()
+    out = fn(*args)
+    for _ in range(inner - 1):
+        out = fn(*args)
+    block_all(out)
+    return (time.perf_counter() - t0) / inner * 1e6
+
+
 def timeit(fn, *args, reps: int = 30, min_rep_s: float = 0.0,
            max_inner: int = 64, warmup: bool = True) -> TimingResult:
     """Time ``fn(*args)``: one warmup call, then ``reps`` timed reps.
@@ -70,9 +112,7 @@ def timeit(fn, *args, reps: int = 30, min_rep_s: float = 0.0,
         t0 = time.perf_counter()
         block_all(fn(*args))             # the single warmup call
         warm_s = time.perf_counter() - t0
-        if min_rep_s > 0.0 and warm_s < min_rep_s:
-            inner = min(max_inner, max(1, math.ceil(min_rep_s
-                                                    / max(warm_s, 1e-9))))
+        inner = calibrate_inner(warm_s, min_rep_s, max_inner)
     times_us = []
     for i in range(reps):
         t0 = time.perf_counter()
@@ -82,16 +122,6 @@ def timeit(fn, *args, reps: int = 30, min_rep_s: float = 0.0,
         block_all(out)
         dt = time.perf_counter() - t0
         times_us.append(dt / inner * 1e6)
-        if not warmup and i == 0 and min_rep_s > 0.0 and dt < min_rep_s:
-            inner = min(max_inner, max(1, math.ceil(min_rep_s
-                                                    / max(dt, 1e-9))))
-    if reps >= 2:
-        q1, _, q3 = statistics.quantiles(times_us, n=4)
-        iqr = q3 - q1
-    else:
-        iqr = 0.0
-    return TimingResult(
-        median_us=statistics.median(times_us),
-        mean_us=statistics.fmean(times_us),
-        min_us=min(times_us), max_us=max(times_us),
-        iqr_us=iqr, reps=reps, inner=inner)
+        if not warmup and i == 0:
+            inner = calibrate_inner(dt, min_rep_s, max_inner)
+    return summarize(times_us, inner=inner)

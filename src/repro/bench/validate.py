@@ -156,11 +156,14 @@ def inspect_case(case: BenchCase, hlo_text: str, outputs
 
 def cross_scheme_checks(results: Sequence[CaseResult]) -> list[Check]:
     """Paper C1 as a measured invariant: within every (family, topology,
-    size) group holding both result classes, replicated resident-result
-    bytes / shared resident-result bytes == ranks_per_node — from the
-    actual output shards.  Every replicated-class scheme must also hold
-    identical resident bytes (the two-phase schedule does not change the
-    memory class)."""
+    size) group holding both result classes, the replicated/shared
+    resident-result byte ratio — from the actual output shards — equals
+    the registry's closed-form ratio.  For full-result families that ratio
+    IS ranks_per_node (the paper's claim); for ``reduce_scatter`` the flat
+    scheme keeps only its node's 1/num_nodes share while the window keeps
+    the whole reduced message, so the closed-form ratio is 1/num_nodes.
+    Every replicated-class scheme must also hold identical resident bytes
+    (the two-phase/pipelined schedule does not change the memory class)."""
     by_key: dict[tuple, dict] = {}
     for r in results:
         k = (r.case.family, r.case.topology, r.case.elems)
@@ -176,12 +179,20 @@ def cross_scheme_checks(results: Sequence[CaseResult]) -> list[Check]:
         if not reps or not shared:
             continue
         base, sh = reps[0], shared[0]
-        c = group[base].case.cluster.chips
+        vc = group[base].case.cluster
+        c = vc.chips
+        exp_rep = registry.get_scheme(base).result_node(
+            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=ELEM_BYTES)
+        exp_sh = registry.get_scheme(sh).result_node(
+            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=ELEM_BYTES)
+        expected = exp_rep / exp_sh
         rep_b = group[base].hlo["result_bytes_per_node"]
         shared_b = group[sh].hlo["result_bytes_per_node"]
+        what = "ranks_per_node" if expected == c \
+            else "the registry closed-form ratio"
         checks.append(Check(
-            f"C1/{fam}/{topo}/e{elems}", c, rep_b / shared_b,
-            f"{base}/{sh} resident-result ratio == ranks_per_node "
+            f"C1/{fam}/{topo}/e{elems}", expected, rep_b / shared_b,
+            f"{base}/{sh} resident-result ratio == {what} "
             f"({base} {rep_b} B, {sh} {shared_b} B per node)",
             tol=1e-9))
         for other in reps[1:]:

@@ -1,8 +1,7 @@
 """repro.comm: communicator + shared-window collective API.
 
-The single entry point for collectives (replaces the free functions of
-``repro.core.collectives``, which remain as deprecated shims for one
-release):
+The single entry point for collectives (the old ``repro.core.collectives``
+free functions were removed after their deprecation release):
 
 * ``Communicator``  — the two-tier (node + bridge) communicator; methods
   ``allgather``/``allgatherv``/``broadcast``/``allreduce``/
@@ -10,12 +9,16 @@ release):
 * ``SharedWindow``  — the MPI-3 shared-window analogue with explicit
   ``fence()``/epoch synchronization semantics;
 * ``registry``      — self-describing scheme entries (``naive``/``hier``/
-  ``shared``): bodies + traffic closed-forms + expected lowerings.  New
-  schemes register here and are immediately swept by ``repro.bench`` and
-  callable from every ``Communicator``.
+  ``shared``/``pipelined``): bodies + traffic closed-forms + expected
+  lowerings + tunable grids.  New schemes register here and are
+  immediately swept by ``repro.bench`` and callable from every
+  ``Communicator``;
+* ``pipeline``      — the chunked two-phase primitives behind the
+  ``pipelined`` scheme, plus the fused collective-matmul compute-overlap
+  primitives (``ag_matmul``/``matmul_rs``).
 """
 
-from repro.comm import primitives, registry, window
+from repro.comm import pipeline, primitives, registry, window
 from repro.comm.communicator import Communicator
 from repro.comm.registry import (CollectiveScheme, get_scheme,
                                  register_scheme, scheme_names, schemes_for)
@@ -24,5 +27,5 @@ from repro.comm.window import SharedWindow, WindowEpochError
 __all__ = [
     "Communicator", "SharedWindow", "WindowEpochError",
     "CollectiveScheme", "get_scheme", "register_scheme", "scheme_names",
-    "schemes_for", "primitives", "registry", "window",
+    "schemes_for", "pipeline", "primitives", "registry", "window",
 ]

@@ -158,52 +158,86 @@ class Communicator:
         return out
 
     def allgather(self, x: jax.Array, *, scheme: str = "shared",
-                  axis: int = 0):
+                  axis: int = 0, **opts):
         """Gather every rank's contribution.  Replicated schemes return the
         full rank-ordered buffer; ``shared`` returns the node's
-        ``SharedWindow`` (chip *i* holds shard *i*, (local, pod) order)."""
-        sch, out = self._call("allgather", scheme, x, axis=axis)
+        ``SharedWindow`` (chip *i* holds shard *i*, (local, pod) order).
+        ``**opts`` are scheme tunables (e.g. ``pipelined``'s
+        ``n_chunks=``)."""
+        sch, out = self._call("allgather", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def allgatherv(self, x_padded: jax.Array, valid: jax.Array, *,
-                   scheme: str = "shared", axis: int = 0):
+                   scheme: str = "shared", axis: int = 0, **opts):
         """Irregular allgather (padded blocks + valid counts).
 
         The one family that returns raw ``(blocks, counts)`` for EVERY
         scheme — never a ``SharedWindow``: the irregular result is
         plan-mediated (compaction via ``core.plans.GatherPlan``), not
         window-mediated, matching the paper's counts/displs one-off."""
-        _, out = self._call("allgatherv", scheme, x_padded, valid, axis=axis)
+        _, out = self._call("allgatherv", scheme, x_padded, valid, axis=axis,
+                            **opts)
         return out
 
     def broadcast(self, x: jax.Array, *, root: int = 0,
-                  scheme: str = "shared", axis: int = 0):
+                  scheme: str = "shared", axis: int = 0, **opts):
         """Broadcast from the flat SMP rank ``root`` (pod, chip row-major).
         ``shared`` returns the node's ``SharedWindow`` of the message."""
-        sch, out = self._call("broadcast", scheme, x, root=root, axis=axis)
+        sch, out = self._call("broadcast", scheme, x, root=root, axis=axis,
+                              **opts)
         return self._wrap(sch, out, axis)
 
     def allreduce(self, x: jax.Array, *, scheme: str = "shared",
-                  axis: int = 0):
+                  axis: int = 0, **opts):
         """Global sum.  Replicated schemes return the full sum per rank;
         ``shared`` returns it once per node as a ``SharedWindow``."""
-        sch, out = self._call("psum", scheme, x, axis=axis)
+        sch, out = self._call("psum", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def reduce_scatter(self, x: jax.Array, *, scheme: str = "shared",
-                       axis: int = 0):
-        """Sum + scatter.  ``naive``: every rank gets its flat 1/R slice;
-        ``shared``: the node's window shards (1/c each, bridge-reduced)."""
-        sch, out = self._call("reduce_scatter", scheme, x, axis=axis)
+                       axis: int = 0, **opts):
+        """Sum + scatter.  ``naive``/``pipelined``: every rank gets its flat
+        1/R slice; ``shared``: the node's window shards (1/c each,
+        bridge-reduced)."""
+        sch, out = self._call("reduce_scatter", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
-    def alltoall(self, x: jax.Array, *, scheme: str = "hier", axis: int = 0):
+    def alltoall(self, x: jax.Array, *, scheme: str = "hier", axis: int = 0,
+                 **opts):
         """Personalized exchange: the local buffer along ``axis`` is R rank-
         ordered chunks; chunk *s* goes to rank *s*.  ``hier`` routes node
         superchunks over the bridge once (P messages instead of P*c), with
         identical results."""
-        _, out = self._call("alltoall", scheme, x, axis=axis)
+        _, out = self._call("alltoall", scheme, x, axis=axis, **opts)
         return out
+
+    # -- fused collective-matmul (compute overlap) ----------------------------
+    def ag_matmul(self, x: jax.Array, w_shard: jax.Array, *,
+                  n_chunks: int = 2, use_kernel: bool = False):
+        """``x @ read(window)`` fused: the node-tier gather of the
+        contraction-sharded weight streams behind the panel matmuls
+        (``repro.comm.pipeline.ag_matmul``)."""
+        from repro.comm import pipeline
+        return pipeline.ag_matmul(x, w_shard, fast_axis=self.fast_axis,
+                                  n_chunks=n_chunks, use_kernel=use_kernel)
+
+    def ag_matmul_rows(self, a_shard: jax.Array, b: jax.Array, *,
+                       n_chunks: int = 2, use_kernel: bool = False):
+        """``read(window) @ b`` fused, window sharded along OUTPUT rows
+        (e.g. the SUMMA A-panel): per-chunk row panels, no accumulation."""
+        from repro.comm import pipeline
+        return pipeline.ag_matmul_rows(a_shard, b, fast_axis=self.fast_axis,
+                                       n_chunks=n_chunks,
+                                       use_kernel=use_kernel)
+
+    def matmul_rs(self, x: jax.Array, w: jax.Array, *, axis: int = 0,
+                  n_chunks: int = 2, use_kernel: bool = False):
+        """``reduce_scatter(x @ w)`` over the fast tier fused: the scatter
+        of panel *k* overlaps the matmul of panel *k+1*."""
+        from repro.comm import pipeline
+        return pipeline.matmul_rs(x, w, axis_name=self.fast_axis,
+                                  scatter_dim=axis, n_chunks=n_chunks,
+                                  use_kernel=use_kernel)
 
     # -- windows & sync -------------------------------------------------------
     def window(self, shard: jax.Array, *, axis: int = 0,

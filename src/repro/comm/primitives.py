@@ -8,10 +8,11 @@ single name or a tuple of names.
 
 Callers should not use these free functions directly: construct a
 ``repro.comm.Communicator`` and dispatch through the scheme registry
-(``repro.comm.registry``).  ``repro.core.collectives`` re-exports these names
-as deprecated shims for one release.
+(``repro.comm.registry``).  (The ``repro.core.collectives`` shims were
+removed after their one-release deprecation window.)
 
-Three families, mirroring the paper's comparison:
+Three families, mirroring the paper's comparison (the chunked ``pipelined``
+family lives in ``repro.comm.pipeline``):
 
 * ``naive_*``   — pure-MPI analogue: single flat phase, result fully
                   replicated on every chip (one private copy per rank).
@@ -29,8 +30,6 @@ chips instead of serialized through one.
 """
 
 from __future__ import annotations
-
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -146,25 +145,17 @@ def naive_broadcast(x: jax.Array, *, root: int, fast_axis, slow_axis=None
     return lax.psum(contrib, names)
 
 
-def _flat_root(root, root_pod, fast_axis, slow_axis):
+def _flat_root(root, fast_axis, slow_axis):
     """Resolve the (root_pod, root_local) pair from a flat SMP rank.
 
     ``root`` is a flat rank in (pod, chip) row-major order — the same
-    numbering as ``naive_broadcast``.  ``root_pod`` is the legacy pod-only
-    spelling (the pod's leader, chip 0); it warns ``DeprecationWarning`` and
-    will be removed next release — pass ``root=root_pod * ranks_per_node``.
+    numbering as ``naive_broadcast``.  (The legacy ``root_pod=`` pod-only
+    spelling was removed after its deprecation release; pass
+    ``root=pod * ranks_per_node`` for a pod's leader.)
     """
-    if root is not None and root_pod is not None:
-        raise TypeError("pass either root= or root_pod=, not both")
-    if root_pod is not None:
-        warnings.warn(
-            "root_pod= is deprecated and will be removed next release; "
-            "pass the flat SMP rank root=root_pod * ranks_per_node instead "
-            "(repro.comm.Communicator.broadcast only accepts root=)",
-            DeprecationWarning, stacklevel=3)
-    c = axis_size(fast_axis)
     if root is None:
-        root = 0 if root_pod is None else root_pod * c
+        root = 0
+    c = axis_size(fast_axis)
     if isinstance(root, int) and isinstance(c, int):
         total = c * (axis_size(slow_axis) if slow_axis is not None else 1)
         if isinstance(total, int) and not 0 <= root < total:
@@ -173,16 +164,14 @@ def _flat_root(root, root_pod, fast_axis, slow_axis):
     return root // c, root % c
 
 
-def hier_broadcast(x: jax.Array, *, root: int | None = None,
-                   root_pod: int | None = None, fast_axis,
+def hier_broadcast(x: jax.Array, *, root: int | None = None, fast_axis,
                    slow_axis=None) -> jax.Array:
     """Two-phase broadcast to full replication: bridge bcast between leaders,
     then intra-pod bcast (leader -> children copies of the naive scheme).
 
     ``root`` is the flat SMP rank of the source (same numbering as
     ``naive_broadcast``); the chip holding it acts as its pod's leader."""
-    my_pod_root, my_local_root = _flat_root(root, root_pod, fast_axis,
-                                            slow_axis)
+    my_pod_root, my_local_root = _flat_root(root, fast_axis, slow_axis)
     fast = _axes(fast_axis)
     me_fast = axis_index(fast)
     if slow_axis is not None:
@@ -197,8 +186,7 @@ def hier_broadcast(x: jax.Array, *, root: int | None = None,
                               jnp.zeros_like(lead)), fast)
 
 
-def shared_broadcast(x: jax.Array, *, root: int | None = None,
-                     root_pod: int | None = None, fast_axis,
+def shared_broadcast(x: jax.Array, *, root: int | None = None, fast_axis,
                      slow_axis=None, axis: int = 0) -> jax.Array:
     """Paper's scheme: ONE shared copy per pod, sharded over ``fast_axis``.
 
@@ -208,10 +196,9 @@ def shared_broadcast(x: jax.Array, *, root: int | None = None,
     leader bcast).  Children read via ``shared_read``.
 
     ``root`` is the flat SMP rank of the source (same numbering as
-    ``naive_broadcast``); ``root_pod`` is the deprecated pod-leader alias.
+    ``naive_broadcast``).
     """
-    my_pod_root, my_local_root = _flat_root(root, root_pod, fast_axis,
-                                            slow_axis)
+    my_pod_root, my_local_root = _flat_root(root, fast_axis, slow_axis)
     fast = _axes(fast_axis)
     me_fast = axis_index(fast)
     contrib = jnp.where(me_fast == my_local_root, x, jnp.zeros_like(x))

@@ -31,10 +31,12 @@ from __future__ import annotations
 from types import MappingProxyType
 from typing import Callable, Mapping, Optional, Sequence
 
+from repro.comm import pipeline as pipe
 from repro.comm import primitives as p
 from repro.core.plans import (CollectiveTraffic, allgather_traffic,
                               allgatherv_traffic, allreduce_traffic,
-                              alltoall_traffic, broadcast_traffic)
+                              alltoall_traffic, broadcast_traffic,
+                              reduce_scatter_traffic)
 
 CNT_BYTES = 4  # int32 valid-count payload of the irregular allgatherv
 
@@ -109,6 +111,10 @@ class CollectiveScheme:
             return allreduce_traffic(scheme=self._plans_scheme,
                                      num_nodes=pods, ranks_per_node=chips,
                                      msg_bytes=m)
+        if family == "reduce_scatter":
+            return reduce_scatter_traffic(scheme=self._plans_scheme,
+                                          num_nodes=pods,
+                                          ranks_per_node=chips, msg_bytes=m)
         if family == "alltoall":
             return alltoall_traffic(scheme=self._alltoall_plans_scheme,
                                     num_nodes=pods, ranks_per_node=chips,
@@ -159,6 +165,26 @@ class CollectiveScheme:
         """Documented exact identities between parsed totals and the plans
         model, as (name, expected, measured, note) rows."""
         return []
+
+    # -- tunables (autotuned by repro.bench) ---------------------------------
+    def candidates(self, family: str, *, pods: int, chips: int, elems: int
+                   ) -> tuple[dict, ...]:
+        """Tunable-kwarg grid for one measured config.  The bench autotune
+        compiles/times every candidate and records the best; an EMPTY grid
+        means the scheme cannot run this (family, topology, size) cell at
+        all (the cell is skipped-and-logged, not raised).  Default: one
+        untunable candidate when the family tiles, else empty."""
+        if not self.supports(family):
+            return ()
+        if elems % self.tiling(family, pods=pods, chips=chips):
+            return ()
+        return ({},)
+
+    def tiling(self, family: str, *, pods: int, chips: int) -> int:
+        """Divisor ``elems`` must tile by for this scheme to lower (e.g.
+        scatter-based schemes shard the message over the fast tier).
+        Overridden per scheme; 1 = any size fits."""
+        return 1
 
 
 # ---------------------------------------------------------------------------
@@ -218,6 +244,9 @@ class NaiveScheme(CollectiveScheme):
                                 axis=axis)),
     })
 
+    def tiling(self, family, *, pods, chips):
+        return pods * chips if family == "reduce_scatter" else 1
+
     def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
         Pn, c = pods, chips
         R, m = Pn * c, elems * elem_bytes
@@ -246,6 +275,15 @@ class NaiveScheme(CollectiveScheme):
                    fast_shape=(), populations=None):
         tr = traffic
         out = []
+        if family == "reduce_scatter":
+            out.append(("model/total-bytes", tr.slow_bytes + tr.fast_bytes,
+                        fast_total + slow_total,
+                        "flat reduce-scatter ring total == model ring "
+                        "bytes m*(R-1)"))
+            out.append(("model/result-node", tr.result_bytes_per_node,
+                        result_node,
+                        "flat 1/R slices: a node retains msg/num_nodes "
+                        "bytes"))
         if family == "allgather":
             out.append(("model/result-node", tr.result_bytes_per_node,
                         result_node,
@@ -296,6 +334,9 @@ class HierScheme(CollectiveScheme):
         "alltoall": lambda x, *, fast, slow, axis=0, **_:
             p.hier_all_to_all(x, fast_axis=fast, slow_axis=slow, axis=axis),
     })
+
+    def tiling(self, family, *, pods, chips):
+        return chips if family == "psum" else 1   # intra-pod psum_scatter
 
     def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
         Pn, c = pods, chips
@@ -390,6 +431,11 @@ class SharedScheme(CollectiveScheme):
             p.shared_all_gather_v(x, valid, slow_axis=slow, axis=axis),
     })
 
+    def tiling(self, family, *, pods, chips):
+        if family in ("broadcast", "psum", "reduce_scatter"):
+            return chips                  # window shards: 1/c of the message
+        return 1
+
     def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
         Pn, c = pods, chips
         m = elems * elem_bytes
@@ -453,6 +499,72 @@ class SharedScheme(CollectiveScheme):
         return out
 
 
+class PipelinedScheme(HierScheme):
+    """Chunked two-phase schedule (``repro.comm.pipeline``): the message is
+    split into ``n_chunks`` segments and the bridge stage of segment *k*
+    overlaps the on-node stage of segment *k+1* through double-buffered
+    window epochs.
+
+    Results are bit-identical to ``hier`` (``reduce_scatter``: the flat
+    ``naive`` slices, numerically equivalent — the two-phase sum
+    reassociates the flat ring's adds) and the total link bytes are
+    EXACTLY the unchunked
+    closed forms — chunking is linear in the message, so every ``links``/
+    ``identities`` expectation is inherited unchanged and must hold for
+    every ``n_chunks``.  What changes is latency:
+    ``core.plans.pipelined_time_model`` adds the overlap term, and the
+    bench autotunes ``n_chunks`` per (topology, size) cell.
+    """
+
+    name = "pipelined"
+    result_class = "replicated"
+    n_chunk_candidates = (1, 2, 4, 8)
+    ops = MappingProxyType({
+        "allgather": lambda x, *, fast, slow, axis=0, n_chunks=2, **_:
+            pipe.pipelined_all_gather(x, fast_axis=fast, slow_axis=slow,
+                                      axis=axis, n_chunks=n_chunks),
+        "broadcast": lambda x, *, fast, slow, root=0, axis=0, n_chunks=2,
+                            **_:
+            pipe.pipelined_broadcast(x, root=root, fast_axis=fast,
+                                     slow_axis=slow, axis=axis,
+                                     n_chunks=n_chunks),
+        "psum": lambda x, *, fast, slow, axis=0, n_chunks=2, **_:
+            pipe.pipelined_psum(x, fast_axis=fast, slow_axis=slow,
+                                axis=axis, n_chunks=n_chunks),
+        "reduce_scatter": lambda x, *, fast, slow, axis=0, n_chunks=2, **_:
+            pipe.pipelined_reduce_scatter(x, fast_axis=fast, slow_axis=slow,
+                                          axis=axis, n_chunks=n_chunks),
+    })
+
+    def tiling(self, family, *, pods, chips):
+        if family == "psum":
+            return chips                  # per-chunk intra-pod psum_scatter
+        if family == "reduce_scatter":
+            return pods * chips           # per-chunk flat 1/R slices
+        return 1
+
+    def candidates(self, family, *, pods, chips, elems):
+        if not self.supports(family):
+            return ()
+        need = self.tiling(family, pods=pods, chips=chips)
+        return tuple({"n_chunks": nc} for nc in self.n_chunk_candidates
+                     if elems % (nc * need) == 0)
+
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+        if family == "reduce_scatter":
+            # two-phase: bridge RS over pods, then intra-pod RS of the pod
+            # slice (linear in the chunk size, so nc-invariant).
+            Pn, c = pods, chips
+            m = elems * elem_bytes
+            if Pn > 1:
+                return _rs(m / (Pn * c), c), _rs(m / Pn, Pn)
+            return _rs(m / c, c), 0.0
+        return super().links(family, pods=pods, chips=chips,
+                             fast_shape=fast_shape, elems=elems,
+                             elem_bytes=elem_bytes)
+
+
 NAIVE = register_scheme(NaiveScheme())
 HIER = register_scheme(HierScheme())
 SHARED = register_scheme(SharedScheme())
+PIPELINED = register_scheme(PipelinedScheme())

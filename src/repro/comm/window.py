@@ -96,6 +96,22 @@ class SharedWindow:
         return dataclasses.replace(self, shard=shard, dirty=False,
                                    epoch=self.epoch + 1)
 
+    def fence_local(self, token: jax.Array) -> "SharedWindow":
+        """Close the epoch with *local* ordering only: the fenced shard
+        becomes data-dependent on ``token`` via ``optimization_barrier`` —
+        zero wire bytes, value bit-preserving.
+
+        Valid when the epoch's writers and readers live inside ONE jitted
+        dataflow (the double-buffered pipeline of ``repro.comm.pipeline``):
+        there XLA already orders every store before its data-dependent
+        consumers, and the token carries the only extra constraint — buffer
+        reuse (a chunk may not reoccupy a buffer its previous tenant still
+        feeds).  Cross-step epochs still require the heavy ``fence()``
+        (node barrier)."""
+        shard, _ = lax.optimization_barrier((self.shard, token))
+        return dataclasses.replace(self, shard=shard, dirty=False,
+                                   epoch=self.epoch + 1)
+
     # -- loads ---------------------------------------------------------------
     def _check_clean(self) -> None:
         if self.dirty:

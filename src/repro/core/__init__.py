@@ -1,11 +1,15 @@
-"""Core: the paper's hierarchical MPI+MPI collective scheme for TPU meshes."""
+"""Core: the paper's hierarchical MPI+MPI collective scheme for TPU meshes.
 
-from repro.core import collectives, plans, shared_buffer, sync, topology
+(The deprecated ``repro.core.collectives`` free-function shims were removed
+after their one-release window — use ``repro.comm.Communicator``.)
+"""
+
+from repro.core import plans, shared_buffer, sync, topology
 from repro.core.topology import (DATA_AXIS, MODEL_AXIS, POD_AXIS,
                                  MeshTopology, multi_pod, single_pod)
 
 __all__ = [
-    "collectives", "plans", "shared_buffer", "sync", "topology",
+    "plans", "shared_buffer", "sync", "topology",
     "MeshTopology", "single_pod", "multi_pod",
     "POD_AXIS", "DATA_AXIS", "MODEL_AXIS",
 ]

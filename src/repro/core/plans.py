@@ -269,6 +269,34 @@ def allreduce_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
     return CollectiveTraffic(int(slow), int(fast), result_per_node)
 
 
+def reduce_scatter_traffic(*, scheme: str, num_nodes: int,
+                           ranks_per_node: int, msg_bytes: int
+                           ) -> CollectiveTraffic:
+    """Traffic for a reduce-scatter of a ``msg_bytes`` buffer (every rank
+    contributes the full buffer; the summed result is scattered).
+
+    naive (flat): one ring reduce-scatter over all R ranks — each rank ends
+    with its private 1/R slice, so a node retains only ``msg/num_nodes``
+    bytes.  hier: intra-node RS, bridge RS on shards — the node's full
+    reduced message stays resident once, sharded over the window (exactly
+    the first half of ``allreduce_traffic``'s hier cycle).
+    """
+    P, c, n = num_nodes, ranks_per_node, msg_bytes
+    if scheme == "naive":
+        R = P * c
+        ring = n * (R - 1)               # total bytes on the flat RS ring
+        slow = ring * (P / R) if P > 1 else 0
+        fast = ring - slow
+        result_per_node = n // P
+    elif scheme == "hier":
+        fast = n * (c - 1) / c * P       # RS inside each node
+        slow = n * (P - 1) / P if P > 1 else 0  # bridge ring on shards
+        result_per_node = n
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return CollectiveTraffic(int(slow), int(fast), result_per_node)
+
+
 def alltoall_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
                      bytes_per_pair: int) -> CollectiveTraffic:
     """Traffic for a personalized all-to-all: every rank sends a distinct
@@ -312,3 +340,68 @@ def collective_time_model(traffic: CollectiveTraffic, *, num_nodes: int,
     slow_t = (traffic.slow_bytes / max(num_nodes, 1)) / slow_bw
     fast_t = (traffic.fast_bytes / max(num_nodes * ranks_per_node, 1)) / fast_bw
     return slow_t + fast_t
+
+
+# ---------------------------------------------------------------------------
+# Pipelined (chunked two-phase) latency model — the overlap term.
+# ---------------------------------------------------------------------------
+
+def pipelined_time_model(traffic: CollectiveTraffic, *, n_chunks: int,
+                         num_nodes: int, ranks_per_node: int,
+                         fast_bw: float = 100e9, slow_bw: float = 25e9,
+                         alpha: float = 0.0) -> float:
+    """Latency of the chunked two-phase schedule with bridge/on-node overlap.
+
+    The message is split into ``n_chunks`` segments; the bridge (slow) stage
+    of segment *k* runs concurrently with the on-node (fast) stage of
+    segment *k+1* (double-buffered window).  With per-segment tier times
+    ``tf = T_fast/n`` and ``ts = T_slow/n``, the classic software-pipeline
+    fill/drain formula applies::
+
+        T(n) = tf + ts + (n - 1) * max(tf, ts) + n * alpha
+
+    ``alpha`` is a fixed per-segment startup cost (chunking is not free);
+    with ``alpha == 0`` the model is monotone non-increasing in ``n`` and
+    approaches ``max(T_fast, T_slow)`` — the overlap win the paper's
+    companion study (Zhou et al., arXiv:2007.11496) measures.  Exactly the
+    serial ``collective_time_model`` at ``n_chunks == 1, alpha == 0``.
+    """
+    if n_chunks < 1:
+        raise ValueError(f"n_chunks must be >= 1, got {n_chunks}")
+    slow_t = (traffic.slow_bytes / max(num_nodes, 1)) / slow_bw
+    fast_t = (traffic.fast_bytes / max(num_nodes * ranks_per_node, 1)) \
+        / fast_bw
+    tf, ts = fast_t / n_chunks, slow_t / n_chunks
+    return tf + ts + (n_chunks - 1) * max(tf, ts) + n_chunks * alpha
+
+
+def overlap_efficiency(traffic: CollectiveTraffic, *, n_chunks: int,
+                       num_nodes: int, ranks_per_node: int,
+                       fast_bw: float = 100e9, slow_bw: float = 25e9
+                       ) -> float:
+    """Serial / pipelined time ratio (>= 1; == 1 when one tier is empty or
+    ``n_chunks == 1``).  Upper-bounded by 2 (perfectly balanced tiers,
+    infinite chunks)."""
+    serial = collective_time_model(traffic, num_nodes=num_nodes,
+                                   ranks_per_node=ranks_per_node,
+                                   fast_bw=fast_bw, slow_bw=slow_bw)
+    pipe = pipelined_time_model(traffic, n_chunks=n_chunks,
+                                num_nodes=num_nodes,
+                                ranks_per_node=ranks_per_node,
+                                fast_bw=fast_bw, slow_bw=slow_bw)
+    return serial / pipe if pipe > 0 else 1.0
+
+
+def best_chunk_count(traffic: CollectiveTraffic, *, num_nodes: int,
+                     ranks_per_node: int, candidates: Sequence[int] = (1, 2,
+                                                                       4, 8),
+                     fast_bw: float = 100e9, slow_bw: float = 25e9,
+                     alpha: float = 1e-6) -> int:
+    """Model-predicted chunk count: argmin of ``pipelined_time_model`` over
+    ``candidates`` (ties go to the smaller count).  The bench autotune
+    measures instead of trusting this — the model seeds the sweep order."""
+    return min(candidates,
+               key=lambda n: (pipelined_time_model(
+                   traffic, n_chunks=n, num_nodes=num_nodes,
+                   ranks_per_node=ranks_per_node, fast_bw=fast_bw,
+                   slow_bw=slow_bw, alpha=alpha), n))

@@ -183,15 +183,17 @@ def attn_block(x_sp: jax.Array, p: dict, meta: dict, ctx: ParallelCtx, cfg, *,
         attn_f = jax.checkpoint(attn_f)
     o = attn_f(q, k, v)
     o = o.reshape(o.shape[0], o.shape[1], -1)
-    y = o @ wo
     if mode == "head_tp":
-        out = x_sp + ctx.rs_tokens(y)
+        # output projection through the fused rs_tokens fast path: with the
+        # "overlap" opt the SP reduce-scatter streams behind the matmul;
+        # without it this is exactly rs_tokens(o @ wo)
+        out = x_sp + ctx.matmul_rs(o, wo)
         if return_kv:
             # cache stores the T-sharded chunk: slice mine from full k, v
             k_loc = lax.dynamic_slice_in_dim(k, ctx.tp_rank * T_loc, T_loc, 1)
             v_loc = lax.dynamic_slice_in_dim(v, ctx.tp_rank * T_loc, T_loc, 1)
     else:
-        out = x_sp + y
+        out = x_sp + o @ wo
     if return_kv:
         return out, (k_loc, v_loc)
     return out

@@ -180,8 +180,10 @@ def ffn(x_sp: jax.Array, p: dict, meta: dict, ctx: ParallelCtx, *,
         a = activation(act, u[:, :, 0], None)
     else:
         a = activation(act, u[:, :, 0], u[:, :, 1])
-    w_out = ctx.gather_w(p["w_out"], meta["w_out"].fsdp_dim)  # (dff/tp, d)
-    y = a @ w_out
+    # down-projection through the fused gather_w fast path: with the
+    # "overlap" opt the FSDP window read streams behind the panel matmuls;
+    # without it this is exactly a @ gather_w(w_out)  (w_out: (dff/tp, d))
+    y = ctx.ag_matmul(a, p["w_out"], meta["w_out"].fsdp_dim)
     return x_sp + ctx.rs_tokens(y)
 
 

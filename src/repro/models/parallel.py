@@ -48,7 +48,12 @@ class ParallelCtx:
     #   bf16_xent   — bf16 logits, fp32 reductions in the streamed loss
     #   decode2d    — 2D (head-group x seq-group) decode attention: TP-
     #                 stationary attn weights, no per-step FSDP gather
+    #   overlap     — fused collective-matmul fast paths: the FSDP window
+    #                 read (gather_w) and the SP reduce-scatter (rs_tokens)
+    #                 stream chunk-wise behind the adjacent matmul
+    #                 (repro.comm.pipeline); overlap_chunks sets the depth
     opts: frozenset = frozenset()
+    overlap_chunks: int = 2
 
     @staticmethod
     def single(mode: str = "hier", opts=frozenset()) -> "ParallelCtx":
@@ -93,6 +98,40 @@ class ParallelCtx:
         if self.mode == "hier" and self.fsdp_axes and fsdp_dim is not None:
             w = self.comm.window(w, axis=fsdp_dim, epoch=1).read()
         return w
+
+    def ag_matmul(self, x: jax.Array, w: jax.Array,
+                  fsdp_dim: Optional[int]) -> jax.Array:
+        """``x @ gather_w(w, fsdp_dim)`` — the fused gather_w fast path.
+
+        With the ``overlap`` opt (hier mode, weight FSDP-sharded along its
+        contraction dim), the window read streams chunk-wise behind the
+        panel matmuls (``comm.ag_matmul``); otherwise exactly the unfused
+        read-then-matmul."""
+        fusable = (self.has("overlap") and self.mode == "hier"
+                   and bool(self.fsdp_axes) and fsdp_dim == 0
+                   and w.ndim == 2)
+        if fusable:
+            shard = w.astype(self.compute_dtype)
+            nc = _clamp_chunks(self.overlap_chunks, shard.shape[0])
+            return self.comm.ag_matmul(x, shard, n_chunks=nc)
+        return x @ self.gather_w(w, fsdp_dim)
+
+    def matmul_rs(self, x: jax.Array, w: jax.Array, dim: int = 1
+                  ) -> jax.Array:
+        """``rs_tokens(x @ w, dim)`` — the fused rs_tokens fast path.
+
+        With the ``overlap`` opt, the token-dim reduce-scatter of panel *k*
+        overlaps the matmul of panel *k+1* (``comm.pipeline.matmul_rs``);
+        otherwise exactly the unfused matmul-then-scatter."""
+        if not self.tp_axis:
+            return x @ w
+        if self.has("overlap"):
+            nc = _clamp_chunks(self.overlap_chunks,
+                               x.shape[dim] // self.tp)
+            if nc > 1:
+                tp_comm = Communicator(fast_axis=self.tp_axis)
+                return tp_comm.matmul_rs(x, w, axis=dim, n_chunks=nc)
+        return self.rs_tokens(x @ w, dim)
 
     def reduce_grads(self, grads):
         """Bridge gradient reduction.  Gradients already match the param
@@ -172,6 +211,15 @@ class ParallelCtx:
     def shard(self, n: int) -> int:
         assert n % self.tp == 0, f"{n} not divisible by tp={self.tp}"
         return n // self.tp
+
+
+def _clamp_chunks(n_chunks: int, extent: int) -> int:
+    """Largest chunk count <= ``n_chunks`` that tiles ``extent`` (the fused
+    paths must never change shapes — they fall back to fewer chunks)."""
+    nc = max(1, min(n_chunks, extent if extent > 0 else 1))
+    while extent % nc:
+        nc -= 1
+    return nc
 
 
 def tp_slice(x: jax.Array, rank, tp: int, dim: int) -> jax.Array:

@@ -8,7 +8,7 @@ onto forced host CPU devices:
 
 A ``VirtualCluster`` builds the two-tier device mesh for one (pods, chips)
 shape and wraps collective *bodies* (functions of local shards, as in
-``repro.core.collectives``) with ``shard_map``, so the same equivalence
+``repro.comm.primitives``) with ``shard_map``, so the same equivalence
 check runs unchanged over a whole topology matrix — single-node, one chip
 per pod, square, and tuple-axis meshes — instead of only the one shape a
 subprocess script happened to hard-code.

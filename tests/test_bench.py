@@ -90,7 +90,7 @@ _TOP_KEYS = {"schema", "generated_by", "jax_version", "backend",
              "validation"}
 _CASE_KEYS = {"name", "csv_name", "family", "scheme", "topology", "pods",
               "chips", "elems", "bytes_per_rank", "populations", "timing",
-              "traffic", "hlo", "checks", "ok"}
+              "traffic", "hlo", "checks", "autotune", "ok"}
 _TIMING_KEYS = {"median_us", "mean_us", "min_us", "max_us", "iqr_us",
                 "reps", "inner"}
 _TRAFFIC_KEYS = {"slow_bytes", "fast_bytes", "result_bytes_per_node"}
@@ -116,7 +116,7 @@ def test_report_schema_golden(small_suite):
     assert rep["schema"] == SCHEMA_VERSION
     assert set(rep) == _TOP_KEYS
     assert rep["matrix"] == ["2x2"]
-    assert len(rep["cases"]) == 5      # 3 allgather + 2 allgatherv schemes
+    assert len(rep["cases"]) == 6      # 4 allgather + 2 allgatherv schemes
     for case in rep["cases"]:
         assert set(case) == _CASE_KEYS
         assert set(case["timing"]) == _TIMING_KEYS
@@ -134,7 +134,7 @@ def test_report_schema_golden(small_suite):
 def test_csv_rows_format_and_fixed_copies_column(small_suite):
     suite = small_suite
     rows = report.csv_rows(suite)
-    assert len(rows) == 5
+    assert len(rows) == 6
     by_name = {}
     for row in rows:
         name, us, derived = row.split(",", 2)
@@ -166,7 +166,8 @@ def test_validation_catches_wrong_lowering():
     """A case claiming to be 'shared' but lowering the naive flat gather
     must trip both the link check and the measured C1 ratio."""
     vc = VirtualCluster(pods=2, chips=2)
-    naive, _, shared = suites.allgather_cases(vc, 64)
+    by_scheme = {c.scheme: c for c in suites.allgather_cases(vc, 64)}
+    naive, shared = by_scheme["naive"], by_scheme["shared"]
     impostor = dataclasses.replace(naive, scheme="shared",
                                    traffic=shared.traffic)
     with pytest.raises(BenchValidationError, match="C1/allgather"):
@@ -179,6 +180,144 @@ def test_no_validate_skips_checks():
     suite = suites.run_suite(cases, reps=1, validate=False)
     assert suite.cases[0].checks == []
     assert suite.cross_checks == []
+
+
+# ---------------------------------------------------------------------------
+# Autotune sweep + skip-and-log + the reduce_scatter family
+# ---------------------------------------------------------------------------
+
+def test_autotune_records_every_candidate_and_picks_best():
+    """A tunable scheme (pipelined) is swept per cell: every candidate
+    timed, the best median recorded, the grid in the JSON record."""
+    vc = VirtualCluster(pods=2, chips=2)
+    cases = [c for c in suites.allgather_cases(vc, 64)
+             if c.scheme == "pipelined"]
+    assert len(cases) == 1
+    assert cases[0].tunable_grid == ({"n_chunks": 1}, {"n_chunks": 2},
+                                     {"n_chunks": 4}, {"n_chunks": 8})
+    suite = suites.run_suite(cases, reps=2)
+    at = suite.cases[0].autotune
+    assert at is not None
+    assert [r["n_chunks"] for r in at["results"]] == [1, 2, 4, 8]
+    assert all(r["median_us"] > 0 for r in at["results"])
+    best_us = min(r["median_us"] for r in at["results"])
+    assert suite.cases[0].timing.median_us == best_us
+    assert at["best"] in at["param_grid"]
+    rec = report.case_record(suite.cases[0])
+    assert rec["autotune"] == at
+    # untunable schemes carry no autotune record
+    naive = [c for c in suites.allgather_cases(vc, 64)
+             if c.scheme == "naive"]
+    assert suites.run_suite(naive, reps=1).cases[0].autotune is None
+
+
+def test_indivisible_cells_skip_and_log_instead_of_raising():
+    """Irregular sizes enter the sweep: schemes whose tiling divisor does
+    not divide elems are skipped-and-logged; the rest of the cell runs."""
+    vc = VirtualCluster(pods=2, chips=4)
+    skips = []
+    cases = suites.build_cases(clusters=(vc,), elems=(6,),
+                               on_skip=skips.append)
+    assert cases                                   # the cell still runs
+    built = {(c.family, c.scheme) for c in cases}
+    assert ("psum", "shared") not in built         # 6 % 4 != 0
+    assert ("reduce_scatter", "naive") not in built  # 6 % 8 != 0
+    assert ("allgather", "naive") in built
+    assert any("psum/shared" in m for m in skips)
+    assert all("skip" in m for m in skips)
+    suite = suites.run_suite(cases, reps=1)        # and validates clean
+    assert all(ch.ok for r in suite.cases for ch in r.checks)
+
+
+def test_schemes_filter_and_unknown_scheme_rejected():
+    vc = VirtualCluster(pods=2, chips=2)
+    cases = suites.build_cases(clusters=(vc,), elems=(64,),
+                               families=("allgather",),
+                               schemes=("pipelined", "hier"))
+    assert {c.scheme for c in cases} == {"pipelined", "hier"}
+    with pytest.raises(ValueError, match="unknown schemes"):
+        suites.build_cases(clusters=(vc,), elems=(64,),
+                           schemes=("warp",))
+
+
+def test_reduce_scatter_family_cross_checks():
+    """The new family validates end-to-end: links, the registry-ratio C1
+    (flat keeps 1/num_nodes of the window's resident bytes), and the
+    naive/pipelined replicates-identity."""
+    vc = VirtualCluster(pods=2, chips=2)
+    cases = suites.build_cases(clusters=(vc,), elems=(64,),
+                               families=("reduce_scatter",))
+    assert {c.scheme for c in cases} == {"naive", "shared", "pipelined"}
+    suite = suites.run_suite(cases, reps=1)
+    c1 = [ch for ch in suite.cross_checks
+          if ch.name.startswith("C1/reduce_scatter")]
+    assert c1 and all(ch.ok for ch in c1)
+    # flat slices: node keeps msg/num_nodes, window keeps the whole msg
+    assert c1[0].expected == 1 / vc.pods
+
+
+# ---------------------------------------------------------------------------
+# Perf-regression gate (scripts/check_bench_regression.py)
+# ---------------------------------------------------------------------------
+
+def _fake_report(medians: dict) -> dict:
+    """medians: (family, scheme, topology, elems) -> median_us."""
+    return {"schema": SCHEMA_VERSION,
+            "cases": [{"family": f, "scheme": s, "topology": t, "elems": e,
+                       "timing": {"median_us": us}}
+                      for (f, s, t, e), us in medians.items()]}
+
+
+def _gate(tmp_path, base, fresh, *extra):
+    import sys
+    sys.path.insert(0, str(REPO_SCRIPTS))
+    import check_bench_regression as gate
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(_fake_report(base)))
+    f.write_text(json.dumps(_fake_report(fresh)))
+    return gate.main([str(b), str(f), *extra])
+
+
+import pathlib
+
+REPO_SCRIPTS = pathlib.Path(__file__).resolve().parent.parent / "scripts"
+
+
+def test_regression_gate_normalizes_within_run(tmp_path):
+    """2x slower hardware across the board must NOT trip the gate — only a
+    scheme whose cost moved relative to its group's reference does."""
+    key_n = ("allgather", "naive", "2x4", 1024)
+    key_p = ("allgather", "pipelined", "2x4", 1024)
+    base = {key_n: 100.0, key_p: 80.0}
+    # uniformly slower machine: same ratios -> ok
+    assert _gate(tmp_path, base, {key_n: 200.0, key_p: 160.0}) == 0
+    # pipelined regressed 4x relative to naive -> fail at default tol 3.0
+    assert _gate(tmp_path, base, {key_n: 100.0, key_p: 320.0}) == 1
+    # ...but passes with a wide-enough band
+    assert _gate(tmp_path, base, {key_n: 100.0, key_p: 320.0},
+                 "--tol", "10") == 0
+
+
+def test_regression_gate_catches_reference_scheme_regression(tmp_path):
+    """The reference scheme's normalized value is 1.0 by construction; the
+    machine-factor pass must still catch a regression confined to it."""
+    keys = {s: ("allgather", s, "2x4", 1024)
+            for s in ("naive", "hier", "pipelined")}
+    base = {k: 100.0 for k in keys.values()}
+    # only the reference got 10x slower: normalized pass is blind (other
+    # schemes' fresh_norm SHRINKS), the raw/machine-factor pass is not
+    fresh = {keys["naive"]: 1000.0, keys["hier"]: 100.0,
+             keys["pipelined"]: 100.0}
+    assert _gate(tmp_path, base, fresh) == 1
+    # a uniformly 10x-slower machine stays ok (factor absorbs it)
+    assert _gate(tmp_path, base, {k: 1000.0 for k in keys.values()}) == 0
+
+
+def test_regression_gate_requires_overlap(tmp_path):
+    """Zero overlapping cells is an error, not a silent pass."""
+    base = {("allgather", "naive", "2x4", 256): 10.0}
+    fresh = {("allgather", "naive", "2x4", 1024): 10.0}
+    assert _gate(tmp_path, base, fresh) == 1
 
 
 # ---------------------------------------------------------------------------

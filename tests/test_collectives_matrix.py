@@ -40,7 +40,7 @@ def comm(vc) -> Communicator:
 
 def test_allgather_full_replication_matches_input(vc, comm):
     x = vc.rank_major_input()
-    for scheme in ("naive", "hier"):
+    for scheme in ("naive", "hier", "pipelined"):
         out = vc.run(lambda v, s=scheme: comm.allgather(v, scheme=s),
                      x, out_specs=P(None))
         np.testing.assert_allclose(out, np.asarray(x))
@@ -83,7 +83,7 @@ def test_broadcast_matches_across_schemes(vc, comm, root_kind):
     root = 0 if root_kind == "leader" else vc.num_devices - 2
     want = np.broadcast_to(msg[root], msg.shape)
 
-    for scheme in ("naive", "hier"):
+    for scheme in ("naive", "hier", "pipelined"):
         out = vc.run(lambda v, s=scheme: comm.broadcast(
             v[0], root=root, scheme=s)[None], x)
         np.testing.assert_allclose(np.asarray(out), want, rtol=1e-6)
@@ -94,26 +94,23 @@ def test_broadcast_matches_across_schemes(vc, comm, root_kind):
     np.testing.assert_allclose(np.asarray(full), want, rtol=1e-6)
 
 
-def test_broadcast_root_pod_alias_deprecated(vc):
-    """Legacy ``root_pod=p`` still equals flat ``root = p * chips`` (the
-    pod's leader) but now warns ``DeprecationWarning``; passing both is
-    rejected."""
+def test_broadcast_root_pod_alias_removed(vc):
+    """The deprecated ``root_pod=`` alias is GONE (its one-release window
+    closed): the primitive rejects it as an unknown kwarg, and the flat
+    ``root = pod * chips`` spelling addresses the pod leader."""
     rng = np.random.default_rng(10)
     msg = rng.normal(size=(vc.num_devices, 4)).astype(np.float32)
     x = jnp.asarray(msg)
     pod = vc.pods - 1
 
-    with pytest.warns(DeprecationWarning, match="root_pod"):
-        old = vc.run(lambda v: primitives.hier_broadcast(
-            v[0], root_pod=pod, fast_axis=vc.fast,
-            slow_axis=vc.slow)[None], x)
     comm = Communicator.from_cluster(vc)
-    new = vc.run(lambda v: comm.broadcast(
+    got = vc.run(lambda v: comm.broadcast(
         v[0], root=pod * vc.chips, scheme="hier")[None], x)
-    np.testing.assert_allclose(np.asarray(old), np.asarray(new))
+    want = np.broadcast_to(msg[pod * vc.chips], msg.shape)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6)
 
-    with pytest.raises(TypeError, match="not both"):
-        primitives.hier_broadcast(jnp.zeros(4), root=0, root_pod=0,
+    with pytest.raises(TypeError, match="root_pod"):
+        primitives.hier_broadcast(jnp.zeros(4), root_pod=0,
                                   fast_axis=vc.fast, slow_axis=vc.slow)
 
 
@@ -156,11 +153,12 @@ def test_fsdp_helpers_accept_list_axis(vc):
 # ---------------------------------------------------------------------------
 
 def test_psum_schemes_agree(vc, comm):
-    x = vc.rank_major_input(m=8, extra=4, seed=2)
+    # m=16: tiles by chips (up to 8) AND the pipelined default n_chunks=2
+    x = vc.rank_major_input(m=16, extra=4, seed=2)
     m = x.shape[0] // vc.num_devices
     want = np.asarray(x).reshape(vc.num_devices, m, -1).sum(0)
 
-    for scheme in ("naive", "hier"):
+    for scheme in ("naive", "hier", "pipelined"):
         out = vc.run(lambda v, s=scheme: comm.allreduce(v, scheme=s),
                      x, out_specs=P(None))
         np.testing.assert_allclose(np.asarray(out)[:m], want, rtol=1e-5)
@@ -170,14 +168,15 @@ def test_psum_schemes_agree(vc, comm):
     np.testing.assert_allclose(np.asarray(shared)[:m], want, rtol=1e-5)
 
 
-def test_reduce_scatter_naive_flat_slices(vc, comm):
-    """naive reduce_scatter: rank r ends with the r-th flat slice of the
-    global sum (rank-major)."""
+@pytest.mark.parametrize("scheme", ["naive", "pipelined"])
+def test_reduce_scatter_flat_slices(vc, comm, scheme):
+    """naive/pipelined reduce_scatter: rank r ends with the r-th flat slice
+    of the global sum (rank-major)."""
     R = vc.num_devices
     m = 4 * R
     x = jnp.arange(R * m, dtype=jnp.float32).reshape(R, m) / (R * m)
     want = np.asarray(x).sum(0)
-    out = vc.run(lambda v: comm.reduce_scatter(v[0], scheme="naive"), x,
+    out = vc.run(lambda v: comm.reduce_scatter(v[0], scheme=scheme), x,
                  in_specs=(vc.spec,), out_specs=P(vc.axis_names))
     np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5)
 
@@ -278,40 +277,16 @@ def test_gather_plan_matches_device_layout(pods, chips):
 
 
 # ---------------------------------------------------------------------------
-# Deprecated free-function shims (one release of compatibility)
+# Deprecated free-function shims: REMOVED (the one-release window closed)
 # ---------------------------------------------------------------------------
 
-def test_core_collectives_shims_warn_but_work(vc):
-    import repro.core.collectives as cc
-
-    with pytest.warns(DeprecationWarning, match="repro.comm.Communicator"):
-        fn = cc.naive_all_gather
-    x = vc.rank_major_input(m=2)
-    out = vc.run(lambda v: fn(v, fast_axis=vc.fast, slow_axis=vc.slow),
-                 x, out_specs=P(None))
-    np.testing.assert_allclose(out, np.asarray(x))
-
-    with pytest.raises(AttributeError):
-        cc.not_a_collective
-
-
-def test_hier_all_to_all_shim_keeps_old_signature(vc):
-    """The deprecated shim must accept the OLD call shape
-    (fast_axis + split_axis/concat_axis, fast-tier-only exchange) — the
-    comm-era primitive changed both, so the shim adapts."""
-    import repro.core.collectives as cc
-
-    with pytest.warns(DeprecationWarning):
-        legacy = cc.hier_all_to_all
-    c, e = vc.chips, 2
-    x = jnp.arange(vc.num_devices * c * e, dtype=jnp.float32)
-    out = vc.run(lambda v: legacy(v, fast_axis=vc.fast, split_axis=0,
-                                  concat_axis=0), x)
-    # fast-tier-only personalized exchange, per pod
-    got = np.asarray(out).reshape(vc.pods, c, c, e)
-    want = np.arange(vc.num_devices * c * e, dtype=np.float32) \
-        .reshape(vc.pods, c, c, e).transpose(0, 2, 1, 3)
-    np.testing.assert_allclose(got, want)
+def test_core_collectives_shims_are_gone():
+    """``repro.core.collectives`` no longer exists — the Communicator is
+    the only collective API (README migration table)."""
+    with pytest.raises(ImportError):
+        import repro.core.collectives  # noqa: F401
+    from repro import core
+    assert "collectives" not in core.__all__
 
 
 # ---------------------------------------------------------------------------

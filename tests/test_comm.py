@@ -86,9 +86,10 @@ def test_from_topology_matches_tiers():
 # ---------------------------------------------------------------------------
 
 def test_registry_entries_and_errors():
-    assert set(scheme_names()) == {"naive", "hier", "shared"}
+    assert set(scheme_names()) == {"naive", "hier", "shared", "pipelined"}
     assert get_scheme("shared").result_class == "shared"
     assert get_scheme("hier").result_class == "replicated"
+    assert get_scheme("pipelined").result_class == "replicated"
     with pytest.raises(KeyError, match="registered"):
         get_scheme("quantum")
     # unsupported (scheme, family) pairs fail loudly, naming alternatives
@@ -96,6 +97,31 @@ def test_registry_entries_and_errors():
         get_scheme("hier").op("reduce_scatter")
     assert [s.name for s in schemes_for("alltoall")] == ["naive", "hier"]
     assert [s.name for s in schemes_for("allgatherv")] == ["naive", "shared"]
+    assert [s.name for s in schemes_for("reduce_scatter")] \
+        == ["naive", "shared", "pipelined"]
+
+
+def test_pipelined_registry_entry_mirrors_hier_closed_forms():
+    """The pipelined entry must inherit hier's links/traffic exactly
+    (chunking is linear — same total bytes) and declare a tunable grid
+    filtered by each (family, topology, size) cell's tiling."""
+    hier, pipe = get_scheme("hier"), get_scheme("pipelined")
+    for fam in ("allgather", "broadcast", "psum"):
+        assert pipe.links(fam, pods=2, chips=4, fast_shape=(4,),
+                          elems=256) == \
+            hier.links(fam, pods=2, chips=4, fast_shape=(4,), elems=256)
+        assert pipe.traffic(fam, pods=2, chips=4, elems=256) == \
+            hier.traffic(fam, pods=2, chips=4, elems=256)
+    # candidate grids honor the per-family tiling divisors
+    assert pipe.candidates("allgather", pods=2, chips=4, elems=8) == \
+        ({"n_chunks": 1}, {"n_chunks": 2}, {"n_chunks": 4}, {"n_chunks": 8})
+    assert pipe.candidates("psum", pods=2, chips=4, elems=8) == \
+        ({"n_chunks": 1}, {"n_chunks": 2})          # 8 % (4*4) != 0
+    assert pipe.candidates("reduce_scatter", pods=2, chips=4, elems=4) == ()
+    # untunable schemes expose the single-candidate grid
+    assert hier.candidates("allgather", pods=2, chips=4, elems=8) == ({},)
+    assert get_scheme("shared").candidates("psum", pods=2, chips=4,
+                                           elems=6) == ()
 
 
 def test_registry_traffic_is_plans_closed_form():

@@ -82,6 +82,11 @@ def test_summa_example():
     proc = _run_example("summa.py", "--n", "128")
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "intra-node copy bytes/round=0" in proc.stdout  # paper C2
+    # the fused Hy_SUMMA variant ran and matched A@B exactly
+    assert "pipelined" in proc.stdout
+    for line in proc.stdout.splitlines():
+        if "rel_err=" in line:
+            assert float(line.split("rel_err=")[1].split()[0]) < 1e-5
 
 
 @pytest.mark.slow

@@ -1,0 +1,303 @@
+"""Pipelined (chunked two-phase) collectives + fused collective-matmul.
+
+Equivalence discipline: every pipelined primitive must match its unchunked
+reference scheme bit-for-bit-close over the WHOLE topology matrix
+(single-node, seed, transpose, bridge-only, tuple-axis) for every valid
+chunk count — chunking is scheduling, never semantics.  The double-buffered
+window keeps the paper's §6 integrity rule: a mid-pipeline read of a
+still-dirty buffer raises ``WindowEpochError`` (see also
+``test_pipeline_props.py`` for the hypothesis n_chunks-invariance
+property).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import Communicator, SharedWindow, WindowEpochError, pipeline
+from repro.substrate import VirtualCluster, default_matrix
+
+MATRIX = default_matrix()
+
+
+@pytest.fixture(params=MATRIX, ids=[t.label for t in MATRIX])
+def vc(request) -> VirtualCluster:
+    cluster = request.param
+    if not cluster.available():
+        pytest.skip(f"needs {cluster.num_devices} devices")
+    return cluster
+
+
+@pytest.fixture
+def comm(vc) -> Communicator:
+    return Communicator.from_cluster(vc)
+
+
+# ---------------------------------------------------------------------------
+# Chunk layout algebra (pure, no devices)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("blocks,nc,piece", [(1, 1, 4), (4, 2, 3),
+                                             (8, 4, 1), (3, 5, 2)])
+@pytest.mark.parametrize("axis", [0, 1])
+def test_strided_split_merge_roundtrip(blocks, nc, piece, axis):
+    n = blocks * nc * piece
+    x = jnp.arange(n * 2, dtype=jnp.float32).reshape(n, 2)
+    x = jnp.moveaxis(x[..., None], 0, axis)
+    parts = pipeline._split_strided(x, axis, nc, blocks)
+    assert len(parts) == nc
+    back = pipeline._merge_strided(parts, axis, blocks)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+def test_split_rejects_indivisible():
+    with pytest.raises(ValueError, match="n_chunks"):
+        pipeline._split_blocked(jnp.zeros(6), 0, 4)
+    with pytest.raises(ValueError, match="stride"):
+        pipeline._split_strided(jnp.zeros(6), 0, 2, blocks=4)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence vs the unchunked reference over the full matrix
+# ---------------------------------------------------------------------------
+
+CHUNKS = (1, 2, 4)
+
+
+def test_pipelined_allgather_equals_hier_every_chunking(vc, comm):
+    x = vc.rank_major_input(m=8, extra=2)
+    want = np.asarray(vc.run(lambda v: comm.allgather(v, scheme="hier"),
+                             x, out_specs=P(None)))
+    for nc in CHUNKS:
+        got = vc.run(lambda v, n=nc: comm.allgather(
+            v, scheme="pipelined", n_chunks=n), x, out_specs=P(None))
+        np.testing.assert_allclose(np.asarray(got), want, err_msg=f"nc={nc}")
+
+
+def test_pipelined_broadcast_equals_hier_every_chunking(vc, comm):
+    R = vc.num_devices
+    msg = np.random.default_rng(3).normal(size=(R, 12, 2)).astype(np.float32)
+    x = jnp.asarray(msg)
+    root = R - 1                     # non-leader root
+    want = np.asarray(vc.run(lambda v: comm.broadcast(
+        v[0], root=root, scheme="hier")[None], x))
+    for nc in CHUNKS:
+        got = vc.run(lambda v, n=nc: comm.broadcast(
+            v[0], root=root, scheme="pipelined", n_chunks=n)[None], x)
+        np.testing.assert_allclose(np.asarray(got), want, err_msg=f"nc={nc}")
+
+
+def test_pipelined_psum_equals_hier_every_chunking(vc, comm):
+    R = vc.num_devices
+    m = 4 * vc.chips * 4             # tiles by chips x every chunk count
+    x = jnp.arange(R * m, dtype=jnp.float32).reshape(R, m) / (R * m)
+    want = np.asarray(vc.run(lambda v: comm.allreduce(
+        v[0], scheme="hier")[None], x))
+    for nc in CHUNKS:
+        got = vc.run(lambda v, n=nc: comm.allreduce(
+            v[0], scheme="pipelined", n_chunks=n)[None], x)
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                   err_msg=f"nc={nc}")
+
+
+def test_pipelined_reduce_scatter_equals_naive_every_chunking(vc, comm):
+    R = vc.num_devices
+    m = 4 * R * 4
+    x = jnp.arange(R * m, dtype=jnp.float32).reshape(R, m) / (R * m)
+    want = np.asarray(vc.run(lambda v: comm.reduce_scatter(
+        v[0], scheme="naive"), x, in_specs=(vc.spec,),
+        out_specs=P(vc.axis_names)))
+    for nc in CHUNKS:
+        got = vc.run(lambda v, n=nc: comm.reduce_scatter(
+            v[0], scheme="pipelined", n_chunks=n), x, in_specs=(vc.spec,),
+            out_specs=P(vc.axis_names))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6,
+                                   err_msg=f"nc={nc}")
+
+
+# ---------------------------------------------------------------------------
+# Double-buffered window epochs (paper §6 mid-pipeline)
+# ---------------------------------------------------------------------------
+
+def test_double_buffered_window_rejects_torn_read_mid_pipeline(vc, comm):
+    """Walking the pipeline's own double-buffer sequence by hand: each
+    chunk's staged intermediate opens a dirty epoch in buffer k%2; reading
+    it BEFORE the epoch closes must raise — fence_local (the pipeline's
+    zero-cost close) makes it readable and preserves the payload."""
+    node = comm.split_type_shared()
+    x = vc.rank_major_input(m=4)
+
+    def body(v):
+        chunks = pipeline._split_blocked(v, 0, 2)
+        bufs, outs = [None, None], []
+        for k, ck in enumerate(chunks):
+            staged = node.allgather(ck, scheme="shared").shard
+            win = SharedWindow(node, staged, axis=0, epoch=k, dirty=True)
+            if k == 0:
+                with pytest.raises(WindowEpochError, match="fence"):
+                    win.read()              # torn read mid-pipeline
+            win = win.fence_local(jnp.ones((), jnp.float32))
+            assert not win.dirty and win.epoch == k + 1
+            bufs[k % 2] = win
+            outs.append(win.shard)
+        return jnp.concatenate(outs, axis=0)
+
+    out = vc.run(body, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x))
+
+
+def test_fence_local_is_value_preserving_for_nonfinite(vc, comm):
+    bad = np.full((vc.num_devices * 2,), np.nan, np.float32)
+    bad[1::2] = np.inf
+    out = vc.run(lambda v: comm.window(v, epoch=1)
+                 .store(v).fence_local(jnp.ones((), jnp.float32)).shard,
+                 jnp.asarray(bad))
+    np.testing.assert_array_equal(np.asarray(out), bad)
+
+
+# ---------------------------------------------------------------------------
+# Fused collective-matmul
+# ---------------------------------------------------------------------------
+
+def _mm_case(vc, seed=0, k_per_rank=6, n_out=5, m_rows=4):
+    rng = np.random.default_rng(seed)
+    K = vc.chips * k_per_rank
+    w = rng.normal(size=(K, n_out)).astype(np.float32)
+    x = rng.normal(size=(m_rows, K)).astype(np.float32)
+    return x, w
+
+
+@pytest.mark.parametrize("nc", [1, 2, 3])
+def test_ag_matmul_matches_unfused(vc, comm, nc):
+    """x @ read(window) == the fused per-chunk gather/matmul, for every
+    chunk count dividing the shard rows (incl. tuple-axis fast tiers)."""
+    x, w = _mm_case(vc, k_per_rank=6)          # shard rows 6 % {1,2,3} == 0
+    node = comm.split_type_shared()
+    want = x @ w
+
+    def body(w_sh):
+        # local w_sh: this chip's (k_per_rank, n_out) window shard
+        return node.ag_matmul(jnp.asarray(x), w_sh, n_chunks=nc)[None]
+
+    w_tiled = jnp.asarray(np.tile(w.reshape(vc.chips, -1, w.shape[1]),
+                                  (vc.pods, 1, 1)).reshape(-1, w.shape[1]))
+    got = vc.run(body, w_tiled, in_specs=(vc.spec,), out_specs=vc.spec)
+    got = np.asarray(got).reshape(vc.num_devices, *want.shape)
+    for r in range(vc.num_devices):
+        np.testing.assert_allclose(got[r], want, rtol=1e-5)
+
+
+def test_ag_matmul_rows_matches_unfused(vc, comm):
+    """read(window) @ b with the window sharded along OUTPUT rows (the
+    SUMMA A-panel): per-chunk row panels merge to the exact product."""
+    rng = np.random.default_rng(1)
+    rows, k, n_out = vc.chips * 4, 3, 5
+    a = rng.normal(size=(rows, k)).astype(np.float32)
+    b = rng.normal(size=(k, n_out)).astype(np.float32)
+    node = comm.split_type_shared()
+    want = a @ b
+
+    def body(a_sh):
+        return node.ag_matmul_rows(a_sh, jnp.asarray(b), n_chunks=2)[None]
+
+    a_tiled = jnp.asarray(np.tile(a.reshape(vc.chips, -1, k),
+                                  (vc.pods, 1, 1)).reshape(-1, k))
+    got = vc.run(body, a_tiled, in_specs=(vc.spec,), out_specs=vc.spec)
+    got = np.asarray(got).reshape(vc.num_devices, *want.shape)
+    for r in range(vc.num_devices):
+        np.testing.assert_allclose(got[r], want, rtol=1e-5)
+
+
+def test_matmul_rs_matches_unfused(vc, comm):
+    """reduce_scatter(x @ w) over the node tier == the fused per-chunk
+    matmul/scatter, independently per pod."""
+    rng = np.random.default_rng(2)
+    rows, k, n_out = vc.chips * 4, 3, 5
+    node = comm.split_type_shared()
+    xs = rng.normal(size=(vc.num_devices, rows, k)).astype(np.float32)
+    w = rng.normal(size=(k, n_out)).astype(np.float32)
+
+    def body(xi):
+        return node.matmul_rs(xi[0], jnp.asarray(w), axis=0, n_chunks=2)
+
+    out_specs = P(vc.axis_names)    # rank-major concat of the 1/c slices
+    got = np.asarray(vc.run(body, jnp.asarray(xs), in_specs=(vc.spec,),
+                            out_specs=out_specs))
+    got = got.reshape(vc.pods, rows, n_out)
+    for pd in range(vc.pods):
+        want = sum(xs[pd * vc.chips + i] @ w for i in range(vc.chips))
+        np.testing.assert_allclose(got[pd], want, rtol=1e-4)
+
+
+def test_ag_matmul_through_pallas_kernel():
+    """The fused path composes with the Pallas blocked-matmul kernel
+    (interpret mode on CPU) — the ISSUE's compute-overlap accumulation."""
+    vc = VirtualCluster(pods=1, chips=4)
+    if not vc.available():
+        pytest.skip("needs 4 devices")
+    comm = Communicator.from_cluster(vc)
+    x, w = _mm_case(vc, k_per_rank=8, n_out=4, m_rows=4)
+    want = x @ w
+
+    def body(w_sh):
+        return comm.ag_matmul(jnp.asarray(x), w_sh, n_chunks=2,
+                              use_kernel=True)[None]
+
+    got = vc.run(body, jnp.asarray(w), in_specs=(vc.spec,),
+                 out_specs=vc.spec)
+    got = np.asarray(got).reshape(vc.num_devices, *want.shape)
+    np.testing.assert_allclose(got[0], want, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# ParallelCtx fast paths (the "overlap" opt)
+# ---------------------------------------------------------------------------
+
+def test_parallel_ctx_overlap_paths_match_baseline():
+    """ffn-style ag_matmul (FSDP window read) and attention-style matmul_rs
+    (SP scatter) must be numerically indistinguishable with the opt on."""
+    from repro.models.parallel import ParallelCtx
+
+    vc = VirtualCluster(pods=2, chips=4, fast_axis=("data", "model"),
+                        fast_shape=(2, 2), slow_axis="pod")
+    if not vc.available():
+        pytest.skip("needs 8 devices")
+    kw = dict(tp_axis="model", fsdp_axes=("data",),
+              dp_axes=("pod", "data"), pod_axis="pod", tp=2, mode="hier",
+              compute_dtype=jnp.float32)
+    base = ParallelCtx(**kw)
+    fused = ParallelCtx(**kw, opts=frozenset({"overlap"}))
+
+    rng = np.random.default_rng(7)
+    B, T, F, D = 2, 8, 4, 6          # w: (F*data, D), fsdp dim 0 over "data"
+    w = rng.normal(size=(F * 2, D)).astype(np.float32)
+    w2 = rng.normal(size=(D, 2 * D)).astype(np.float32)
+    x = rng.normal(size=(B, T, F * 2)).astype(np.float32)
+
+    def body_for(ctx):
+        def body(w_sh, xv):
+            # local w_sh: this rank's (F, D) fsdp shard; x replicated
+            y = ctx.ag_matmul(xv, w_sh, 0)               # (B, T, D)
+            z = ctx.matmul_rs(y, jnp.asarray(w2), 1)     # (B, T/tp, 2D)
+            return z
+        return body
+
+    outs = {}
+    for name, ctx in (("base", base), ("fused", fused)):
+        outs[name] = np.asarray(vc.run(
+            body_for(ctx), jnp.asarray(w), jnp.asarray(x),
+            in_specs=(P("data"), P(None)), out_specs=P(None, "model")))
+    # fused panels reassociate the fp32 accumulation — numerics, not bits
+    np.testing.assert_allclose(outs["fused"], outs["base"], rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_clamp_chunks_always_tiles():
+    from repro.models.parallel import _clamp_chunks
+    assert _clamp_chunks(2, 8) == 2
+    assert _clamp_chunks(4, 6) == 3      # largest divisor <= 4
+    assert _clamp_chunks(8, 7) == 7
+    assert _clamp_chunks(2, 1) == 1
+    assert _clamp_chunks(3, 0) == 1

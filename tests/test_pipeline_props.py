@@ -1,0 +1,86 @@
+"""Hypothesis properties of the pipelined family.
+
+The load-bearing invariant: for ANY valid chunk count the pipelined
+collectives return exactly the unchunked reference result — chunking is
+scheduling, never semantics.  Runs on the seed 2x4 cluster (the matrix
+sweep lives in ``test_pipeline.py``); the pure latency-model properties
+live in ``test_plans.py``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import Communicator
+from repro.substrate import VirtualCluster
+
+VC = VirtualCluster(pods=2, chips=4)
+COMM = Communicator.from_cluster(VC)
+R = VC.num_devices
+
+needs_matrix = pytest.mark.skipif(not VC.available(),
+                                  reason="needs 8 devices")
+
+# per-rank message length = n_chunks * chips * k so EVERY family tiles
+# (psum needs % (nc*c), reduce_scatter % (nc*R) — use nc*R*k)
+chunk_counts = st.integers(min_value=1, max_value=8)
+mults = st.integers(min_value=1, max_value=3)
+seeds = st.integers(min_value=0, max_value=2 ** 16)
+
+
+@needs_matrix
+@given(chunk_counts, mults, seeds)
+@settings(max_examples=12, deadline=None)
+def test_allgather_invariant_to_n_chunks(nc, k, seed):
+    m = nc * k
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(R * m, 2)).astype(np.float32))
+    want = np.asarray(VC.run(lambda v: COMM.allgather(v, scheme="hier"),
+                             x, out_specs=P(None)))
+    got = VC.run(lambda v: COMM.allgather(v, scheme="pipelined",
+                                          n_chunks=nc), x, out_specs=P(None))
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@needs_matrix
+@given(chunk_counts, mults, seeds, st.integers(min_value=0,
+                                               max_value=R - 1))
+@settings(max_examples=12, deadline=None)
+def test_broadcast_invariant_to_n_chunks(nc, k, seed, root):
+    m = nc * k
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(R, m)).astype(np.float32))
+    want = np.asarray(VC.run(lambda v: COMM.broadcast(
+        v[0], root=root, scheme="hier")[None], x))
+    got = VC.run(lambda v: COMM.broadcast(
+        v[0], root=root, scheme="pipelined", n_chunks=nc)[None], x)
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+@needs_matrix
+@given(chunk_counts, mults, seeds)
+@settings(max_examples=12, deadline=None)
+def test_psum_and_reduce_scatter_invariant_to_n_chunks(nc, k, seed):
+    m = nc * R * k                  # tiles for both families at any nc
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(R, m)).astype(np.float32) / R)
+
+    want = np.asarray(VC.run(lambda v: COMM.allreduce(
+        v[0], scheme="hier")[None], x))
+    got = VC.run(lambda v: COMM.allreduce(
+        v[0], scheme="pipelined", n_chunks=nc)[None], x)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-6, atol=1e-7)
+
+    want_rs = np.asarray(VC.run(lambda v: COMM.reduce_scatter(
+        v[0], scheme="naive"), x, in_specs=(VC.spec,),
+        out_specs=P(VC.axis_names)))
+    got_rs = VC.run(lambda v: COMM.reduce_scatter(
+        v[0], scheme="pipelined", n_chunks=nc), x, in_specs=(VC.spec,),
+        out_specs=P(VC.axis_names))
+    # two-phase RS reassociates the sum (pods first): bitwise equality is
+    # not guaranteed against the flat ring, only numerics
+    np.testing.assert_allclose(np.asarray(got_rs), want_rs, rtol=1e-5,
+                               atol=1e-6)

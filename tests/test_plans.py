@@ -17,8 +17,10 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.plans import (GatherPlan, NodeMap, allgather_traffic,
                               allgatherv_traffic, allreduce_traffic,
-                              alltoall_traffic, broadcast_traffic,
-                              collective_time_model)
+                              alltoall_traffic, best_chunk_count,
+                              broadcast_traffic, collective_time_model,
+                              overlap_efficiency, pipelined_time_model,
+                              reduce_scatter_traffic)
 
 nodes = st.integers(min_value=1, max_value=12)
 ppn = st.integers(min_value=1, max_value=32)
@@ -200,6 +202,61 @@ def test_time_model_positive_finite(P, c, m):
                           bytes_per_rank=m),
         num_nodes=P, ranks_per_node=c)
     assert t >= 0 and math.isfinite(t)
+
+
+@given(nodes, ppn, msg)
+@settings(max_examples=100, deadline=None)
+def test_reduce_scatter_traffic_halves_the_allreduce_cycle(P, c, m):
+    """hier reduce-scatter is exactly the first half of the hier allreduce
+    RS+AG cycle per tier; the flat scheme's ring total is m*(R-1) and its
+    resident bytes are the 1/num_nodes share (inverse C1)."""
+    rs = reduce_scatter_traffic(scheme="hier", num_nodes=P,
+                                ranks_per_node=c, msg_bytes=m)
+    ar = allreduce_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                           msg_bytes=m)
+    assert abs(2 * rs.fast_bytes - ar.fast_bytes) <= 1     # int truncation
+    assert abs(2 * rs.slow_bytes - ar.slow_bytes) <= 1
+    assert rs.result_bytes_per_node == m
+
+    flat = reduce_scatter_traffic(scheme="naive", num_nodes=P,
+                                  ranks_per_node=c, msg_bytes=m)
+    assert abs(flat.slow_bytes + flat.fast_bytes - m * (P * c - 1)) <= 1
+    assert flat.result_bytes_per_node == m // P
+    if P == 1:
+        assert flat.slow_bytes == 0
+    with pytest.raises(ValueError, match="unknown scheme"):
+        reduce_scatter_traffic(scheme="quantum", num_nodes=P,
+                               ranks_per_node=c, msg_bytes=m)
+
+
+@given(nodes, ppn, msg, st.integers(min_value=1, max_value=16))
+@settings(max_examples=200, deadline=None)
+def test_pipelined_time_model_overlap_properties(P, c, m, n):
+    """The overlap term: T(1) == the serial model; T is monotone
+    non-increasing in n (alpha=0); T never beats the slower tier (the
+    pipeline can hide the cheaper tier, not delete the dearer one); the
+    serial/pipelined ratio lives in [1, 2]."""
+    tr = allgather_traffic(scheme="hier", num_nodes=P, ranks_per_node=c,
+                           bytes_per_rank=m)
+    kw = dict(num_nodes=P, ranks_per_node=c)
+    serial = collective_time_model(tr, **kw)
+    assert pipelined_time_model(tr, n_chunks=1, **kw) == pytest.approx(
+        serial)
+    prev = None
+    slow_t = (tr.slow_bytes / max(P, 1)) / 25e9
+    fast_t = (tr.fast_bytes / max(P * c, 1)) / 100e9
+    for k in (1, 2, 4, n):
+        t = pipelined_time_model(tr, n_chunks=k, **kw)
+        assert t >= max(slow_t, fast_t) - 1e-18
+        if prev is not None and k >= 4:
+            assert t <= prev + 1e-18
+        prev = t
+    eff = overlap_efficiency(tr, n_chunks=n, **kw)
+    assert 1.0 - 1e-9 <= eff <= 2.0 + 1e-9
+    best = best_chunk_count(tr, **kw)
+    assert best in (1, 2, 4, 8)
+    with pytest.raises(ValueError, match="n_chunks"):
+        pipelined_time_model(tr, n_chunks=0, **kw)
 
 
 def test_node_map_validation():
