@@ -8,9 +8,12 @@ paper accelerates:
 * naive  (Ori_BPMF): flat allgather, every core a private copy of the full
   factor matrix;
 * hybrid (Hy_BPMF): bridge-only exchange (``shared_all_gather``), one copy
-  per node sharded over its cores, read at use.
+  per node sharded over its cores, read at use;
+* auto: ``scheme="auto"`` — the committed tuning table picks the gather
+  scheme for this 2x4 shape (a MEASURED cell of the bench matrix).
 
-Both produce identical samples (same RNG); RMSE on held-out entries falls.
+All variants produce identical samples (same RNG); RMSE on held-out
+entries falls.
 
     PYTHONPATH=src python examples/bpmf.py [--iters 10]
 """
@@ -31,7 +34,7 @@ import numpy as np              # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.comm import Communicator               # noqa: E402
+from repro.comm import Communicator, SharedWindow, tuning  # noqa: E402
 from repro.core.plans import allgather_traffic    # noqa: E402
 from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
@@ -47,6 +50,12 @@ def gather(x, scheme):
     """Allgather factor shards: (n_loc, D) -> (N, D)."""
     if scheme == "naive":
         return COMM.allgather(x, scheme="naive")
+    if scheme == "auto":
+        # tuning-table dispatch: normalize whatever class the table picked
+        # back to the rank-order full matrix the sampler consumes
+        out = COMM.allgather(x, scheme="auto")
+        return out.read_rank_order() if isinstance(out, SharedWindow) \
+            else out
     # hybrid: ONE shared copy per node (a SharedWindow), read at use
     return COMM.allgather(x, scheme="shared").read_rank_order()
 
@@ -130,8 +139,13 @@ def main():
     test_mask = ((rng.uniform(size=r.shape) < 0.1) * (1 - mask))
     r_obs = (r * mask).astype(np.float32)
 
+    res = tuning.resolve_for(
+        COMM, "allgather", elems=args.items * D // (NODES * CORES))
+    print(f"scheme='auto' resolved the factor gather to {res.scheme!r} "
+          f"[{res.source}] on this {NODES}x{CORES} shape")
+
     results = {}
-    for scheme in ("naive", "hybrid"):
+    for scheme in ("naive", "hybrid", "auto"):
         t0 = time.time()
         pred = bpmf(r_obs, mask, scheme, mesh, args.iters)
         dt = time.time() - t0
@@ -139,8 +153,12 @@ def main():
                              / test_mask.sum()))
         base = float(np.sqrt(((r ** 2) * test_mask).sum()
                              / test_mask.sum()))
-        tr = allgather_traffic(scheme="hier" if scheme == "hybrid"
-                               else "naive", num_nodes=NODES,
+        flat = scheme == "naive" or (
+            scheme == "auto"
+            and tuning.registry.get_scheme(res.scheme).result_class
+            == "replicated")
+        tr = allgather_traffic(scheme="naive" if flat else "hier",
+                               num_nodes=NODES,
                                ranks_per_node=CORES,
                                bytes_per_rank=args.items * D * 4
                                // (NODES * CORES))
@@ -151,8 +169,9 @@ def main():
     ratio = results["naive"][0] / results["hybrid"][0]
     print(f"Ori_BPMF/Hy_BPMF time ratio: {ratio:.2f} "
           f"(paper Fig. 12: >1, growing with core count)")
-    assert abs(results["naive"][1] - results["hybrid"][1]) < 1e-4, \
-        "schemes must produce identical samples"
+    for scheme in ("hybrid", "auto"):
+        assert abs(results["naive"][1] - results[scheme][1]) < 1e-4, \
+            "schemes must produce identical samples"
 
 
 if __name__ == "__main__":

@@ -12,7 +12,11 @@ the grid column:
   read is FUSED into the panel product — ``Communicator.ag_matmul_rows``
   gathers the A-panel chunk-wise behind the per-chunk matmuls
   (``repro.comm.pipeline``), so the window load streams instead of
-  completing before the first MXU cycle.
+  completing before the first MXU cycle;
+* auto: ``scheme="auto"`` — the tuning table picks the row-panel reduction
+  scheme; this grid's 1x4 node shape is NOT in the committed bench matrix,
+  so the pick comes from the ``core.plans`` closed forms (the modeled
+  cold-start path), and the example prints which scheme won.
 
 All schemes must produce C = A @ B exactly; the derived traffic model shows
 the hybrid schemes deleting the intra-node copy bytes (paper Fig. 11's win).
@@ -37,7 +41,7 @@ import numpy as np              # noqa: E402
 from jax import lax  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.comm import Communicator         # noqa: E402
+from repro.comm import Communicator, SharedWindow, tuning  # noqa: E402
 from repro.core.plans import broadcast_traffic  # noqa: E402
 from repro.substrate.compat import make_mesh, shard_map  # noqa: E402
 
@@ -68,6 +72,14 @@ def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False,
             # column broadcast of B[k, :] (owner node k) — bridge tier
             b_src = jnp.where(i == k, b_blk, jnp.zeros_like(b_blk))
             b_panel = lax.psum(b_src, "node")
+            if scheme == "auto":
+                # tuning-table dispatch: shared-class picks come back as a
+                # window (read at use), replicated picks as a plain panel
+                out = ROW_COMM.allreduce(a_src, scheme="auto")
+                a_panel = out.read() if isinstance(out, SharedWindow) \
+                    else out
+                cs = cs + a_panel @ b_panel
+                continue
             if scheme == "pipelined":
                 # Hy_SUMMA + overlap: the shared window's read is fused into
                 # the panel product — per-chunk row gathers stream behind
@@ -111,22 +123,32 @@ def main():
     b = rng.normal(size=(args.n, args.n)).astype(np.float32)
     want = a @ b
 
-    for scheme in ("naive", "hybrid", "pipelined"):
+    panel_elems = (args.n // NODES) * (args.n // CORES)
+    res = tuning.resolve_for(ROW_COMM, "psum", elems=panel_elems)
+    print(f"scheme='auto' resolved the row-panel reduction to "
+          f"{res.scheme!r} [{res.source}] for this 1x{CORES} node shape")
+
+    for scheme in ("naive", "hybrid", "pipelined", "auto"):
         t0 = time.time()
         got = summa(a, b, scheme=scheme, mesh=mesh,
                     use_kernel=args.use_kernel, chunks=args.chunks)
         dt = time.time() - t0
         err = np.abs(got - want).max() / np.abs(want).max()
         panel = args.n * (args.n // CORES) * 4  # bytes per A panel
-        tr = broadcast_traffic(scheme="naive" if scheme == "naive"
-                               else "hier", num_nodes=NODES,
+        flat = scheme == "naive" or (
+            scheme == "auto"
+            and tuning.registry.get_scheme(res.scheme).result_class
+            == "replicated")
+        tr = broadcast_traffic(scheme="naive" if flat else "hier",
+                               num_nodes=NODES,
                                ranks_per_node=CORES, msg_bytes=panel)
         print(f"{scheme:9s}: {dt*1e3:8.1f} ms  rel_err={err:.2e}  "
               f"intra-node copy bytes/round={tr.fast_bytes:,}  "
               f"panel copies/node={tr.result_bytes_per_node // panel}")
     print("paper claim C2: the hybrid schemes delete all intra-node panel "
           "copies (pipelined additionally streams the window read behind "
-          "the matmul); all schemes match A@B exactly.")
+          "the matmul; auto lets the tuning table choose); all schemes "
+          "match A@B exactly.")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Tuning-table gate: schema sanity (cheap) + staleness vs a fresh sweep.
+
+Two modes over the committed ``TUNING_default.json``:
+
+* ``--schema-only`` — structural validation with NO third-party imports
+  (runs in CI's dependency-free ``checks`` job): schema string, required
+  entry fields, per-entry ranking sorted by median, known ``source`` tags,
+  positive sizes.
+
+* ``--bench FRESH.json [--tol 3.0]`` — the nightly STALENESS check: for
+  every (family, topology signature, dtype, size) cell present in both the
+  table and a freshly generated bench report, the table's recorded winner
+  must still be within ``tol``x of the fresh run's own best median.  A
+  committed table whose winners the hardware no longer agrees with fails
+  the gate — regenerate with ``python -m repro.bench --emit-tuning-table
+  --bench FRESH.json``.  Zero overlapping cells is an error (a gate that
+  compares nothing passes forever).
+
+Deliberately standalone (stdlib json only, duplicating the tiny
+topology-signature rule) so it runs before any dependency install — the
+same design as ``check_bench_regression.py``.
+
+    python scripts/check_tuning_table.py TUNING_default.json --schema-only
+    python scripts/check_tuning_table.py TUNING_default.json \
+        --bench BENCH_fresh.json --tol 3.0
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+SCHEMA = "repro.tuning/v1"
+SOURCES = ("measured", "modeled")
+ENTRY_FIELDS = ("family", "topo", "dtype", "nbytes", "source", "ranking")
+
+
+def schema_errors(table: dict) -> list[str]:
+    errs: list[str] = []
+    if table.get("schema") != SCHEMA:
+        return [f"schema is {table.get('schema')!r}, want {SCHEMA!r}"]
+    entries = table.get("entries")
+    if not isinstance(entries, list) or not entries:
+        return ["table has no entries"]
+    seen: set[tuple] = set()
+    for i, e in enumerate(entries):
+        tag = f"entries[{i}]"
+        missing = [f for f in ENTRY_FIELDS if f not in e]
+        if missing:
+            errs.append(f"{tag}: missing fields {missing}")
+            continue
+        tag = f"{e['family']}/{e['topo']}/{e['dtype']}/b{e['nbytes']}"
+        key = (e["family"], e["topo"], e["dtype"], e["nbytes"])
+        if key in seen:
+            errs.append(f"{tag}: duplicate cell")
+        seen.add(key)
+        if e["source"] not in SOURCES:
+            errs.append(f"{tag}: bad source {e['source']!r}")
+        if not isinstance(e["nbytes"], int) or e["nbytes"] <= 0:
+            errs.append(f"{tag}: bad nbytes {e['nbytes']!r}")
+        ranking = e["ranking"]
+        if not isinstance(ranking, list) or not ranking:
+            errs.append(f"{tag}: empty ranking")
+            continue
+        for c in ranking:
+            if "scheme" not in c or not isinstance(c.get("opts", {}), dict):
+                errs.append(f"{tag}: malformed choice {c!r}")
+        if e["source"] == "measured":
+            meds = [c.get("median_us") for c in ranking]
+            if any(m is None for m in meds):
+                errs.append(f"{tag}: measured entry without medians")
+            elif meds != sorted(meds):
+                errs.append(f"{tag}: ranking not sorted by median")
+    return errs
+
+
+def _signature(case: dict) -> str:
+    # MUST mirror repro.comm.tuning.topo_signature (this script is
+    # import-free by design); fast_axes was added to the report schema
+    # alongside the table — older artifacts betray a factored fast tier
+    # only through the dotted label
+    n_fast = case.get("fast_axes", 2 if "." in case["topology"] else 1)
+    sig = f"{case['pods']}x{case['chips']}"
+    if n_fast > 1:
+        sig += f"-f{n_fast}"
+    return sig
+
+
+def staleness_failures(table: dict, bench: dict, tol: float
+                       ) -> tuple[list[str], list[str]]:
+    """(report_rows, failures) of the winner-vs-fresh-best comparison."""
+    cells: dict[tuple, dict[str, float]] = {}
+    for case in bench.get("cases", []):
+        key = (case["family"], _signature(case), case.get("dtype",
+                                                          "float32"),
+               int(case["bytes_per_rank"]))
+        cells.setdefault(key, {})[case["scheme"]] = \
+            float(case["timing"]["median_us"])
+    rows, failures = [], []
+    compared = 0
+    for e in table.get("entries", []):
+        if e.get("source") != "measured":
+            continue
+        key = (e["family"], e["topo"], e["dtype"], int(e["nbytes"]))
+        cell = cells.get(key)
+        if not cell:
+            continue
+        compared += 1
+        winner = e["ranking"][0]["scheme"]
+        name = f"{e['family']}/{e['topo']}/b{e['nbytes']}"
+        if winner not in cell:
+            failures.append(f"{name}: table winner {winner!r} not in the "
+                            "fresh sweep — regenerate the table")
+            continue
+        best = min(cell.values())
+        ratio = cell[winner] / best if best > 0 else 1.0
+        ok = ratio <= tol
+        rows.append(f"  {name}: winner {winner} {ratio:.2f}x fresh best "
+                    f"{'ok' if ok else 'STALE'}")
+        if not ok:
+            fresh_winner = min(cell, key=cell.get)
+            failures.append(
+                f"{name}: committed winner {winner!r} is {ratio:.2f}x the "
+                f"fresh best ({fresh_winner!r}) — tol {tol}x; regenerate "
+                "TUNING_default.json from this sweep")
+    if not compared:
+        failures.append("no overlapping (family, topology, dtype, size) "
+                        "cells between the table and the fresh report — "
+                        "nothing was checked")
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate the committed scheme-selection tuning table")
+    ap.add_argument("table", nargs="?", default="TUNING_default.json")
+    ap.add_argument("--schema-only", action="store_true",
+                    help="structural checks only (no bench report needed)")
+    ap.add_argument("--bench", default=None,
+                    help="fresh BENCH json for the staleness check")
+    ap.add_argument("--tol", type=float, default=3.0,
+                    help="staleness band: committed winner may trail the "
+                         "fresh best by this factor (default %(default)s)")
+    args = ap.parse_args(argv)
+
+    with open(args.table) as f:
+        table = json.load(f)
+    errs = schema_errors(table)
+    if errs:
+        print(f"tuning-table check FAILED ({args.table}):", file=sys.stderr)
+        for e in errs:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    n = len(table["entries"])
+    measured = sum(1 for e in table["entries"] if e["source"] == "measured")
+    print(f"tuning-table schema OK: {n} entries ({measured} measured) in "
+          f"{args.table}")
+    if args.schema_only:
+        return 0
+    if not args.bench:
+        print("tuning-table check: pass --schema-only or --bench FRESH.json",
+              file=sys.stderr)
+        return 2
+    with open(args.bench) as f:
+        bench = json.load(f)
+    if not str(bench.get("schema", "")).startswith("repro.bench/"):
+        print(f"tuning-table check: {args.bench} is not a repro.bench "
+              f"report (schema={bench.get('schema')!r})", file=sys.stderr)
+        return 1
+    rows, failures = staleness_failures(table, bench, args.tol)
+    print(f"tuning-table staleness: {len(rows)} compared cells "
+          f"(tol {args.tol}x):")
+    for r in rows:
+        print(r)
+    if failures:
+        print("tuning-table staleness FAILED:", file=sys.stderr)
+        for fl in failures:
+            print(f"  {fl}", file=sys.stderr)
+        return 1
+    print("tuning-table staleness OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

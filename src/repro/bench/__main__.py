@@ -7,6 +7,14 @@ artifact.  ``--csv`` additionally prints the legacy
 ``name,us_per_call,derived`` rows so ``benchmarks/run.py`` can consume the
 output unchanged.
 
+``--emit-tuning-table`` instead FOLDS an existing report (``--bench``,
+default the committed ``BENCH_collectives.json``) into the scheme-selection
+table ``scheme="auto"`` dispatches through (``--table-out``, default
+``TUNING_default.json``) — no re-measurement.  The fold is self-checked:
+every emitted winner must hold the best pooled median of the very report it
+came from (``repro.bench.validate.tuning_table_checks``), so a broken fold
+can never reach dispatch.
+
 Device forcing happens HERE, before the jax backend initializes — which is
 why the heavy imports live inside ``main``.
 """
@@ -14,8 +22,32 @@ why the heavy imports live inside ``main``.
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
+
+
+def _emit_tuning_table(bench_path: str, table_out: str) -> int:
+    from repro.bench.validate import tuning_table_checks
+    from repro.comm.tuning import TuningTable
+
+    with open(bench_path) as f:
+        rep = json.load(f)
+    table = TuningTable.from_bench_report(rep, source_name=bench_path)
+    bad = [ch for ch in tuning_table_checks(table, rep) if not ch.ok]
+    if bad:
+        print(f"repro.bench: tuning-table fold FAILED {len(bad)} winner "
+              "cross-check(s) against its own report:", file=sys.stderr)
+        for ch in bad:
+            print(f"  {ch.name}: expected {ch.expected}, measured "
+                  f"{ch.measured} ({ch.note})", file=sys.stderr)
+        return 1
+    table.save(table_out)
+    measured = sum(1 for e in table.entries if e.source == "measured")
+    print(f"repro.bench: wrote {table_out} ({measured} measured entries "
+          f"over {len(table.signatures())} topology signatures, folded "
+          f"from {bench_path})", file=sys.stderr)
+    return 0
 
 
 def _force_devices(n: int | None) -> None:
@@ -66,7 +98,20 @@ def main(argv=None) -> int:
     ap.add_argument("--no-validate", action="store_true",
                     help="skip the traffic-model cross-checks (timing "
                          "only; the JSON then carries no checks)")
+    ap.add_argument("--emit-tuning-table", action="store_true",
+                    help="fold an existing report (--bench) into the "
+                         "scheme='auto' tuning table (--table-out) and "
+                         "exit — runs no sweep")
+    ap.add_argument("--bench", default="BENCH_collectives.json",
+                    help="input report for --emit-tuning-table "
+                         "(default %(default)s)")
+    ap.add_argument("--table-out", default="TUNING_default.json",
+                    help="tuning-table path for --emit-tuning-table "
+                         "(default %(default)s)")
     args = ap.parse_args(argv)
+
+    if args.emit_tuning_table:
+        return _emit_tuning_table(args.bench, args.table_out)
 
     _force_devices(args.devices)
 

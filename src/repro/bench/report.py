@@ -24,7 +24,7 @@ import json
 from typing import Sequence
 
 from repro.bench import SCHEMA_VERSION
-from repro.bench.suites import CaseResult, SuiteResult
+from repro.bench.suites import ELEM_DTYPE, CaseResult, SuiteResult
 
 
 def case_record(r: CaseResult) -> dict:
@@ -39,6 +39,8 @@ def case_record(r: CaseResult) -> dict:
         "chips": c.cluster.chips,
         "elems": c.elems,
         "bytes_per_rank": c.elems * 4,
+        "dtype": ELEM_DTYPE,
+        "fast_axes": len(c.cluster.fast_names),
         "populations": list(c.populations) if c.populations else None,
         "timing": r.timing.to_dict(),
         "traffic": dataclasses.asdict(c.traffic),

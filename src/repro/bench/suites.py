@@ -49,6 +49,7 @@ from repro.substrate import VirtualCluster, default_matrix
 
 ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
                 # downcast warning of the seed bench came from f64 arange)
+ELEM_DTYPE = "float32"  # recorded per case: the tuning table keys by dtype
 
 FAMILIES = ("allgather", "broadcast", "psum", "reduce_scatter",
             "allgatherv", "alltoall")
@@ -386,6 +387,12 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
         raise ValueError(f"unknown families {sorted(unknown)}; "
                          f"pick from {list(_FAMILY_BUILDERS)}")
     if schemes is not None:
+        if "auto" in schemes:
+            raise ValueError(
+                "'auto' is the tuning-table dispatch mode, not a registry "
+                "entry — the sweep measures the concrete schemes auto "
+                "chooses between (emit the table from the sweep instead: "
+                "python -m repro.bench --emit-tuning-table)")
         unknown_s = set(schemes) - set(registry.scheme_names())
         if unknown_s:
             raise ValueError(f"unknown schemes {sorted(unknown_s)}; "

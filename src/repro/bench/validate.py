@@ -151,6 +151,68 @@ def inspect_case(case: BenchCase, hlo_text: str, outputs
 
 
 # ---------------------------------------------------------------------------
+# Tuning-table winner cross-check
+# ---------------------------------------------------------------------------
+
+def tuning_table_checks(table, report: dict, *,
+                        rel_tol: float = 1.0) -> list[Check]:
+    """Every MEASURED tuning-table entry's winner must actually have the
+    best pooled median in the bench run being checked.
+
+    Two callers, one rule:
+
+    * ``--emit-tuning-table`` passes the table TOGETHER WITH the report it
+      was folded from (``rel_tol=1.0``): a mismatch means the fold itself
+      is broken — the table would steer ``scheme="auto"`` away from the
+      run's own winners.
+    * the nightly staleness gate passes the COMMITTED table with a fresh
+      report and a tolerance band: the committed winner may trail the
+      fresh winner by up to ``rel_tol``x before the table counts as stale.
+
+    Cells only one side measured are skipped; ZERO overlapping cells is a
+    failing check (a gate that compares nothing passes forever).
+    """
+    from repro.comm.tuning import TuningTable, bench_cells
+
+    if isinstance(table, dict):
+        table = TuningTable.from_dict(table)
+    cells = bench_cells(report)
+    checks: list[Check] = []
+    overlap = 0
+    for entry in table.entries:
+        if entry.source != "measured":
+            continue
+        key = (entry.family, entry.topo, entry.dtype, entry.nbytes)
+        cell = cells.get(key)
+        if cell is None:
+            continue
+        overlap += 1
+        name = (f"tuning/{entry.family}/{entry.topo}/"
+                f"b{entry.nbytes}")
+        best_med = min(med for med, _ in cell["schemes"].values())
+        winner = cell["schemes"].get(entry.best.scheme)
+        if winner is None:
+            checks.append(Check(
+                name, best_med, -1.0,
+                f"table winner {entry.best.scheme!r} was not timed in this "
+                "run — regenerate the table from a sweep that covers it",
+                tol=0.0))
+            continue
+        checks.append(Check(
+            name, best_med, winner[0],
+            f"table winner {entry.best.scheme!r} vs the run's best pooled "
+            f"median (band {rel_tol}x)",
+            tol=max(best_med * (rel_tol - 1.0), 0.0)))
+    if not overlap:
+        checks.append(Check(
+            "tuning/overlap", 1.0, 0.0,
+            "no (family, topology, dtype, size) cell appears in both the "
+            "tuning table and the bench report — nothing was cross-checked",
+            tol=0.0))
+    return checks
+
+
+# ---------------------------------------------------------------------------
 # Cross-scheme (C1) checks + failure aggregation
 # ---------------------------------------------------------------------------
 

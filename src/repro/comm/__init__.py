@@ -15,17 +15,24 @@ free functions were removed after their deprecation release):
   ``Communicator``;
 * ``pipeline``      — the chunked two-phase primitives behind the
   ``pipelined`` scheme, plus the fused collective-matmul compute-overlap
-  primitives (``ag_matmul``/``matmul_rs``).
+  primitives (``ag_matmul``/``matmul_rs``);
+* ``tuning``        — the ``scheme="auto"`` backend: the persisted
+  ``TuningTable`` (measured winners per family x topology x dtype x size
+  bucket, ``TUNING_default.json``) and the ``resolve()`` chain that falls
+  back to the ``core.plans`` closed forms on unmeasured cells.
 """
 
-from repro.comm import pipeline, primitives, registry, window
+from repro.comm import pipeline, primitives, registry, tuning, window
 from repro.comm.communicator import Communicator
 from repro.comm.registry import (CollectiveScheme, get_scheme,
                                  register_scheme, scheme_names, schemes_for)
+from repro.comm.tuning import (Resolution, TuningTable, resolve_scheme,
+                               use_table)
 from repro.comm.window import SharedWindow, WindowEpochError
 
 __all__ = [
     "Communicator", "SharedWindow", "WindowEpochError",
     "CollectiveScheme", "get_scheme", "register_scheme", "scheme_names",
-    "schemes_for", "pipeline", "primitives", "registry", "window",
+    "schemes_for", "pipeline", "primitives", "registry", "tuning", "window",
+    "Resolution", "TuningTable", "resolve_scheme", "use_table",
 ]

@@ -13,6 +13,16 @@ tier).  ``Communicator`` carries exactly that structure for a jax mesh:
   scheme registry — ``scheme="naive" | "hier" | "shared" | <future entry>``
   replaces the old per-scheme free functions.
 
+``scheme="auto"`` (the default) resolves the scheme per call through
+``repro.comm.tuning``: the committed tuning table where the (family,
+topology, size) cell was measured, the ``core.plans`` closed forms where it
+was not (see that module's measured -> modeled -> fallback chain).  Because
+schemes differ in result CLASS (replicated array vs ``SharedWindow``), call
+sites that can only consume one class pass ``result="replicated"`` /
+``result="shared"`` — a constraint on the pick, not a scheme name.
+Resolution happens at trace time; the lowered program is bit-identical to
+calling the chosen concrete scheme directly.
+
 Shared-scheme results come back as a ``SharedWindow`` (ONE copy per node,
 sharded over the fast tier) whose ``read()``/``fence()`` carry the paper's
 synchronization-epoch semantics; replicated schemes return plain arrays.
@@ -147,6 +157,37 @@ class Communicator:
         return p.axis_index(self.slow_axis)
 
     # -- dispatch ------------------------------------------------------------
+    def _auto_elems(self, family: str, x) -> int:
+        """Per-rank payload elems — the tuning table's size normalization
+        (alltoall cells are keyed per PAIR, and the local buffer holds one
+        chunk per rank)."""
+        n = int(x.size)
+        if family == "alltoall" and self.num_ranks:
+            n = max(1, n // self.num_ranks)
+        return n
+
+    def _resolve(self, family: str, scheme: str, x, opts: dict,
+                 result: Optional[str]) -> tuple[str, dict]:
+        """Turn ``scheme="auto"`` into a concrete registry entry (plus its
+        recorded tunables; explicit caller opts win).  A concrete scheme
+        passes through — but still checked against ``result`` so a
+        constraint can never be silently violated."""
+        if scheme != "auto":
+            if result is not None and \
+                    registry.get_scheme(scheme).result_class != result:
+                raise ValueError(
+                    f"scheme {scheme!r} is "
+                    f"{registry.get_scheme(scheme).result_class}-class but "
+                    f"the call requires result={result!r}")
+            return scheme, opts
+        from repro.comm import tuning
+        import numpy as np
+        dt = np.dtype(x.dtype)
+        res = tuning.resolve_for(
+            self, family, elems=self._auto_elems(family, x),
+            elem_bytes=dt.itemsize, dtype=dt.name, result_class=result)
+        return res.scheme, {**res.opts, **opts}
+
     def _call(self, family: str, scheme: str, *args, **kw):
         sch = registry.get_scheme(scheme)
         return sch, sch.op(family)(*args, fast=self.fast_axis,
@@ -157,57 +198,71 @@ class Communicator:
             return SharedWindow(self, out, axis=axis, epoch=1)
         return out
 
-    def allgather(self, x: jax.Array, *, scheme: str = "shared",
-                  axis: int = 0, **opts):
+    def allgather(self, x: jax.Array, *, scheme: str = "auto",
+                  axis: int = 0, result: Optional[str] = None, **opts):
         """Gather every rank's contribution.  Replicated schemes return the
         full rank-ordered buffer; ``shared`` returns the node's
         ``SharedWindow`` (chip *i* holds shard *i*, (local, pod) order).
         ``**opts`` are scheme tunables (e.g. ``pipelined``'s
-        ``n_chunks=``)."""
+        ``n_chunks=``); ``result=`` constrains an ``"auto"`` pick to one
+        result class."""
+        scheme, opts = self._resolve("allgather", scheme, x, opts, result)
         sch, out = self._call("allgather", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def allgatherv(self, x_padded: jax.Array, valid: jax.Array, *,
-                   scheme: str = "shared", axis: int = 0, **opts):
+                   scheme: str = "auto", axis: int = 0,
+                   result: Optional[str] = None, **opts):
         """Irregular allgather (padded blocks + valid counts).
 
         The one family that returns raw ``(blocks, counts)`` for EVERY
         scheme — never a ``SharedWindow``: the irregular result is
         plan-mediated (compaction via ``core.plans.GatherPlan``), not
-        window-mediated, matching the paper's counts/displs one-off."""
+        window-mediated, matching the paper's counts/displs one-off.
+        NOTE the two result classes still differ in block LAYOUT
+        (rank-major vs node regions), so auto callers either handle both
+        or pass ``result=``."""
+        scheme, opts = self._resolve("allgatherv", scheme, x_padded, opts,
+                                     result)
         _, out = self._call("allgatherv", scheme, x_padded, valid, axis=axis,
                             **opts)
         return out
 
     def broadcast(self, x: jax.Array, *, root: int = 0,
-                  scheme: str = "shared", axis: int = 0, **opts):
+                  scheme: str = "auto", axis: int = 0,
+                  result: Optional[str] = None, **opts):
         """Broadcast from the flat SMP rank ``root`` (pod, chip row-major).
         ``shared`` returns the node's ``SharedWindow`` of the message."""
+        scheme, opts = self._resolve("broadcast", scheme, x, opts, result)
         sch, out = self._call("broadcast", scheme, x, root=root, axis=axis,
                               **opts)
         return self._wrap(sch, out, axis)
 
-    def allreduce(self, x: jax.Array, *, scheme: str = "shared",
-                  axis: int = 0, **opts):
+    def allreduce(self, x: jax.Array, *, scheme: str = "auto",
+                  axis: int = 0, result: Optional[str] = None, **opts):
         """Global sum.  Replicated schemes return the full sum per rank;
         ``shared`` returns it once per node as a ``SharedWindow``."""
+        scheme, opts = self._resolve("psum", scheme, x, opts, result)
         sch, out = self._call("psum", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
-    def reduce_scatter(self, x: jax.Array, *, scheme: str = "shared",
-                       axis: int = 0, **opts):
+    def reduce_scatter(self, x: jax.Array, *, scheme: str = "auto",
+                       axis: int = 0, result: Optional[str] = None, **opts):
         """Sum + scatter.  ``naive``/``pipelined``: every rank gets its flat
         1/R slice; ``shared``: the node's window shards (1/c each,
         bridge-reduced)."""
+        scheme, opts = self._resolve("reduce_scatter", scheme, x, opts,
+                                     result)
         sch, out = self._call("reduce_scatter", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
-    def alltoall(self, x: jax.Array, *, scheme: str = "hier", axis: int = 0,
-                 **opts):
+    def alltoall(self, x: jax.Array, *, scheme: str = "auto", axis: int = 0,
+                 result: Optional[str] = None, **opts):
         """Personalized exchange: the local buffer along ``axis`` is R rank-
         ordered chunks; chunk *s* goes to rank *s*.  ``hier`` routes node
         superchunks over the bridge once (P messages instead of P*c), with
         identical results."""
+        scheme, opts = self._resolve("alltoall", scheme, x, opts, result)
         _, out = self._call("alltoall", scheme, x, axis=axis, **opts)
         return out
 

@@ -35,8 +35,9 @@ from repro.comm import pipeline as pipe
 from repro.comm import primitives as p
 from repro.core.plans import (CollectiveTraffic, allgather_traffic,
                               allgatherv_traffic, allreduce_traffic,
-                              alltoall_traffic, broadcast_traffic,
-                              reduce_scatter_traffic)
+                              alltoall_traffic, best_chunk_count,
+                              broadcast_traffic, collective_time_model,
+                              pipelined_time_model, reduce_scatter_traffic)
 
 CNT_BYTES = 4  # int32 valid-count payload of the irregular allgatherv
 
@@ -185,6 +186,29 @@ class CollectiveScheme:
         scatter-based schemes shard the message over the fast tier).
         Overridden per scheme; 1 = any size fits."""
         return 1
+
+    # -- model-predicted latency (cold-start for scheme="auto") --------------
+    def predicted_time(self, family: str, *, pods: int, chips: int,
+                       elems: int, elem_bytes: int = 4,
+                       populations: Optional[Sequence[int]] = None
+                       ) -> Optional[tuple[float, dict]]:
+        """Closed-form latency prediction for one config, plus the tunable
+        kwargs the prediction assumes — the cold-start input of
+        ``repro.comm.tuning`` when no measured table entry covers a cell.
+
+        Returns ``None`` when the scheme cannot run the cell at all (empty
+        ``candidates`` grid).  The base implementation is the serial
+        ``core.plans.collective_time_model`` of the scheme's own traffic
+        closed form; schemes with tunables override it (``pipelined`` picks
+        ``best_chunk_count`` and prices the overlap)."""
+        if not self.candidates(family, pods=pods, chips=chips, elems=elems):
+            return None
+        if family == "allgatherv" and populations is None:
+            populations = (chips,) * pods    # regular cold-start assumption
+        tr = self.traffic(family, pods=pods, chips=chips, elems=elems,
+                          elem_bytes=elem_bytes, populations=populations)
+        return collective_time_model(tr, num_nodes=pods,
+                                     ranks_per_node=chips), {}
 
 
 # ---------------------------------------------------------------------------
@@ -562,6 +586,26 @@ class PipelinedScheme(HierScheme):
         return super().links(family, pods=pods, chips=chips,
                              fast_shape=fast_shape, elems=elems,
                              elem_bytes=elem_bytes)
+
+    def predicted_time(self, family, *, pods, chips, elems, elem_bytes=4,
+                       populations=None):
+        """Overlap-aware prediction: ``core.plans.best_chunk_count`` over
+        the cell's valid ``n_chunks`` candidates, priced by
+        ``pipelined_time_model``.  The nonzero per-chunk alpha makes the
+        one-chunk pipeline strictly pricier than the plain ``hier``
+        schedule, so the model never prefers chunking that buys nothing."""
+        cands = self.candidates(family, pods=pods, chips=chips, elems=elems)
+        if not cands:
+            return None
+        tr = self.traffic(family, pods=pods, chips=chips, elems=elems,
+                          elem_bytes=elem_bytes, populations=populations)
+        ncs = tuple(c["n_chunks"] for c in cands)
+        alpha = 1e-6
+        nc = best_chunk_count(tr, num_nodes=pods, ranks_per_node=chips,
+                              candidates=ncs, alpha=alpha)
+        t = pipelined_time_model(tr, n_chunks=nc, num_nodes=pods,
+                                 ranks_per_node=chips, alpha=alpha)
+        return t, {"n_chunks": nc}
 
 
 NAIVE = register_scheme(NaiveScheme())

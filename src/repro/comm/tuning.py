@@ -1,0 +1,462 @@
+"""Tuning-table-driven scheme selection: the ``scheme="auto"`` backend.
+
+The paper's central measurement (Figs 7-10) is that the best collective
+algorithm depends on topology and message size — hier wins on multi-node
+shapes, flat schemes on SMP, and the crossover moves with the op family.
+``repro.comm.tuning`` turns that observation into the dispatch rule:
+
+* ``TuningTable``  — a schema-versioned, persisted table of per-cell scheme
+  rankings, keyed by (op family x topology signature x dtype x size
+  bucket).  Measured entries are folded out of a ``repro.bench`` report
+  (``python -m repro.bench --emit-tuning-table``) and committed as
+  ``TUNING_default.json``; every entry carries a ``source`` tag
+  (``measured`` | ``modeled``) and the full per-scheme ranking, so a
+  result-class-constrained lookup can fall through to the best *allowed*
+  scheme instead of only the overall winner.
+* ``resolve()``    — the dispatch rule ``Communicator`` consults when
+  ``scheme="auto"``:
+
+  1. **measured** — nearest-size-bucket table entry for the communicator's
+     topology signature; the ranking is walked best-first, skipping schemes
+     the caller's ``result`` constraint or the cell's tiling rules out.
+  2. **modeled**  — no usable entry: every registry scheme prices the cell
+     with its ``predicted_time`` closed form (``core.plans``; ``pipelined``
+     folds in ``best_chunk_count``) and the cheapest wins.
+  3. **fallback** — the communicator has no static ``pods``/``chips``
+     counts (nothing to key or model on): the pre-auto per-family defaults
+     apply (``shared`` for the window families, ``hier`` for alltoall;
+     ``naive`` under a ``replicated`` constraint).
+
+Resolution is pure Python on static shapes — it happens once at trace
+time, never inside the compiled program.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import pathlib
+from typing import Iterable, Mapping, Optional, Sequence
+
+from repro.comm import registry
+from repro.core.plans import nearest_bucket, size_bucket
+
+SCHEMA_VERSION = "repro.tuning/v1"
+
+#: Per-family defaults when nothing can be measured or modeled (no static
+#: pods/chips counts) — exactly the pre-auto hard-coded defaults, so an
+#: unannotated Communicator behaves as it always did.
+FALLBACK = {
+    None: {"allgather": "shared", "broadcast": "shared", "psum": "shared",
+           "reduce_scatter": "shared", "allgatherv": "shared",
+           "alltoall": "hier"},
+    "shared": {"allgather": "shared", "broadcast": "shared",
+               "psum": "shared", "reduce_scatter": "shared",
+               "allgatherv": "shared"},
+    "replicated": {"allgather": "naive", "broadcast": "naive",
+                   "psum": "naive", "reduce_scatter": "naive",
+                   "allgatherv": "naive", "alltoall": "hier"},
+}
+
+
+def topo_signature(pods: int, chips: int, n_fast_axes: int = 1) -> str:
+    """Stable topology key: ``{pods}x{chips}`` plus a ``-f{n}`` suffix when
+    the fast tier spans several named mesh axes (the tuple-axis
+    ``pod x (dp, tp)`` layout lowers differently from the flat ``2x4``
+    even though the tier sizes match)."""
+    sig = f"{pods}x{chips}"
+    if n_fast_axes > 1:
+        sig += f"-f{n_fast_axes}"
+    return sig
+
+
+# ---------------------------------------------------------------------------
+# Table entries
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Choice:
+    """One ranked (scheme, tunable-opts) alternative of a measured cell."""
+
+    scheme: str
+    opts: Mapping = dataclasses.field(default_factory=dict)
+    median_us: Optional[float] = None
+
+    def to_dict(self) -> dict:
+        out = {"scheme": self.scheme, "opts": dict(self.opts)}
+        if self.median_us is not None:
+            out["median_us"] = self.median_us
+        return out
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Choice":
+        return cls(scheme=d["scheme"], opts=dict(d.get("opts") or {}),
+                   median_us=d.get("median_us"))
+
+
+@dataclasses.dataclass(frozen=True)
+class TuningEntry:
+    """One (family, topology, dtype, size) cell: the full scheme ranking.
+
+    ``nbytes`` is the per-rank payload (message bytes for broadcast/psum,
+    per-rank contribution for allgather, per-pair bytes for alltoall) —
+    the same normalization ``repro.bench`` keys its sweep by."""
+
+    family: str
+    topo: str                       # topo_signature(...)
+    dtype: str
+    nbytes: int
+    source: str                     # "measured" | "modeled"
+    ranking: tuple[Choice, ...]     # best first
+    label: str = ""                 # human topology label, e.g. "2x4"
+
+    def __post_init__(self):
+        if self.source not in ("measured", "modeled"):
+            raise ValueError(f"bad source {self.source!r}")
+        if not self.ranking:
+            raise ValueError(f"{self.family}/{self.topo}: empty ranking")
+
+    @property
+    def bucket(self) -> int:
+        return size_bucket(self.nbytes)
+
+    @property
+    def best(self) -> Choice:
+        return self.ranking[0]
+
+    def to_dict(self) -> dict:
+        return {"family": self.family, "topo": self.topo,
+                "dtype": self.dtype, "nbytes": self.nbytes,
+                "bucket": self.bucket, "source": self.source,
+                "label": self.label,
+                "ranking": [c.to_dict() for c in self.ranking]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningEntry":
+        return cls(family=d["family"], topo=d["topo"], dtype=d["dtype"],
+                   nbytes=int(d["nbytes"]), source=d["source"],
+                   label=d.get("label", ""),
+                   ranking=tuple(Choice.from_dict(c)
+                                 for c in d["ranking"]))
+
+
+# ---------------------------------------------------------------------------
+# The table
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TuningTable:
+    """Persisted scheme-selection table (``TUNING_default.json``)."""
+
+    entries: tuple[TuningEntry, ...] = ()
+    meta: Mapping = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    # -- lookup --------------------------------------------------------------
+    def lookup(self, family: str, topo: str, dtype: str, nbytes: int
+               ) -> Optional[TuningEntry]:
+        """Nearest-size-bucket entry for one (family, topology) cell.
+
+        Exact-dtype entries are preferred; with none recorded the search
+        widens to every dtype (a bf16 payload is better served by the f32
+        ranking of its size class than by the modeled cold start).  Among
+        candidates the geometrically-nearest bucket wins, ties toward the
+        smaller size (``core.plans.nearest_bucket``)."""
+        cands = [e for e in self.entries
+                 if e.family == family and e.topo == topo]
+        if not cands:
+            return None
+        exact = [e for e in cands if e.dtype == dtype]
+        cands = exact or cands
+        best_bucket = nearest_bucket(nbytes, [e.bucket for e in cands])
+        matches = [e for e in cands if e.bucket == best_bucket]
+        return min(matches, key=lambda e: e.nbytes)
+
+    def signatures(self) -> tuple[str, ...]:
+        return tuple(sorted({e.topo for e in self.entries}))
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"schema": SCHEMA_VERSION,
+                "meta": dict(self.meta),
+                "entries": [e.to_dict() for e in sorted(
+                    self.entries,
+                    key=lambda e: (e.family, e.topo, e.dtype, e.nbytes))]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TuningTable":
+        schema = d.get("schema")
+        if schema != SCHEMA_VERSION:
+            raise ValueError(
+                f"not a {SCHEMA_VERSION} table (schema={schema!r})")
+        return cls(entries=tuple(TuningEntry.from_dict(e)
+                                 for e in d.get("entries", [])),
+                   meta=dict(d.get("meta") or {}))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path) -> "TuningTable":
+        with open(path) as f:
+            return cls.from_dict(json.load(f))
+
+    # -- folding a bench report into measured entries ------------------------
+    @classmethod
+    def from_bench_report(cls, report: dict, *,
+                          source_name: str = "") -> "TuningTable":
+        """Fold a ``repro.bench`` report's per-cell medians + ``autotune``
+        winners into measured entries: one entry per (family, topology
+        signature, dtype, elems) cell, ranking every scheme the sweep
+        timed there by its (autotuned-best) pooled median.
+
+        Operates on the plain report dict, so emitting a table needs no
+        re-measurement — the committed ``BENCH_collectives.json`` (or a
+        fresh nightly artifact) is the input."""
+        entries = []
+        for (family, sig, dtype, nbytes), cell in sorted(
+                bench_cells(report).items()):
+            ranking = tuple(sorted(
+                (Choice(scheme=s, opts=dict(opts), median_us=med)
+                 for s, (med, opts) in cell["schemes"].items()),
+                key=lambda c: (c.median_us, c.scheme)))
+            entries.append(TuningEntry(
+                family=family, topo=sig, dtype=dtype, nbytes=nbytes,
+                source="measured", ranking=ranking, label=cell["label"]))
+        meta = {"generated_by": "python -m repro.bench --emit-tuning-table",
+                "generated_from": source_name or report.get("generated_by",
+                                                            ""),
+                "bench_schema": report.get("schema"),
+                "jax_version": report.get("jax_version"),
+                "backend": report.get("backend"),
+                "sweep": report.get("sweep")}
+        return cls(entries=tuple(entries), meta=meta)
+
+
+def bench_cells(report: dict) -> dict[tuple, dict]:
+    """A bench report regrouped into tuning cells: ``(family, topology
+    signature, dtype, nbytes) -> {"label", "schemes": {scheme: (median_us,
+    best_opts)}}``.  The shared keying of ``from_bench_report`` and the
+    ``repro.bench.validate`` winner cross-check — both sides MUST bucket a
+    report identically or the check would compare different cells."""
+    schema = str(report.get("schema", ""))
+    if not schema.startswith("repro.bench/"):
+        raise ValueError(f"not a repro.bench report (schema={schema!r})")
+    cells: dict[tuple, dict] = {}
+    for case in report.get("cases", []):
+        # fast_axes entered the report schema with the tuning table; older
+        # artifacts only betray a factored fast tier through their label
+        sig = topo_signature(case["pods"], case["chips"],
+                             case.get("fast_axes",
+                                      2 if "." in case["topology"] else 1))
+        dtype = case.get("dtype", "float32")
+        key = (case["family"], sig, dtype, int(case["bytes_per_rank"]))
+        opts = (case["autotune"] or {}).get("best", {}) \
+            if case.get("autotune") else {}
+        cell = cells.setdefault(key, {"label": case["topology"],
+                                      "schemes": {}})
+        cell["schemes"][case["scheme"]] = (
+            float(case["timing"]["median_us"]), dict(opts))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# The active table (process-wide; tests swap it with ``use_table``)
+# ---------------------------------------------------------------------------
+
+_ENV_VAR = "REPRO_TUNING_TABLE"
+_DEFAULT_PATH = pathlib.Path(__file__).resolve().parents[3] \
+    / "TUNING_default.json"
+_active: Optional[TuningTable] = None
+_default_cache: Optional[TuningTable] = None
+
+
+def default_table_path() -> pathlib.Path:
+    """The committed table, overridable via ``REPRO_TUNING_TABLE``."""
+    env = os.environ.get(_ENV_VAR)
+    return pathlib.Path(env) if env else _DEFAULT_PATH
+
+
+def default_table() -> TuningTable:
+    """The committed ``TUNING_default.json`` (cached); an EMPTY table when
+    the file does not exist — every auto dispatch then takes the modeled
+    cold-start path."""
+    global _default_cache
+    if _default_cache is None:
+        path = default_table_path()
+        _default_cache = TuningTable.load(path) if path.exists() \
+            else TuningTable()
+    return _default_cache
+
+
+def active_table() -> TuningTable:
+    return _active if _active is not None else default_table()
+
+
+@contextlib.contextmanager
+def use_table(table: Optional[TuningTable]):
+    """Swap the process-wide active table (``None`` = empty: force the
+    modeled path).  Tests drive resolution through this."""
+    global _active
+    prev = _active
+    _active = table if table is not None else TuningTable()
+    try:
+        yield
+    finally:
+        _active = prev
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Resolution:
+    """The outcome of one ``scheme="auto"`` dispatch decision."""
+
+    scheme: str
+    opts: dict
+    source: str                    # "measured" | "modeled" | "fallback"
+    entry: Optional[TuningEntry] = None
+
+
+def _usable(sch, family: str, result_class: Optional[str], pods: int,
+            chips: int, elems: int):
+    """The scheme's valid tunable grid for this cell, or ``None`` when the
+    caller's result-class constraint or the cell's tiling rules it out."""
+    if result_class is not None and sch.result_class != result_class:
+        return None
+    cands = sch.candidates(family, pods=pods, chips=chips, elems=elems)
+    return cands or None
+
+
+def best_scheme_predicted(family: str, *, pods: int, chips: int, elems: int,
+                          elem_bytes: int = 4,
+                          result_class: Optional[str] = None,
+                          populations: Optional[Sequence[int]] = None
+                          ) -> Optional[tuple[str, dict, float]]:
+    """Model-predicted (scheme, opts, time) for one cell: every registry
+    scheme that can run it prices the cell with its ``predicted_time``
+    closed form; the cheapest wins (ties: registration order)."""
+    best = None
+    for sch in registry.schemes_for(family):
+        if _usable(sch, family, result_class, pods, chips, elems) is None:
+            continue
+        pred = sch.predicted_time(family, pods=pods, chips=chips,
+                                  elems=elems, elem_bytes=elem_bytes,
+                                  populations=populations)
+        if pred is None:
+            continue
+        t, opts = pred
+        if best is None or t < best[2]:
+            best = (sch.name, dict(opts), t)
+    return best
+
+
+def resolve(family: str, *, pods: Optional[int], chips: Optional[int],
+            elems: int, elem_bytes: int = 4, dtype: str = "float32",
+            n_fast_axes: int = 1, result_class: Optional[str] = None,
+            table: Optional[TuningTable] = None) -> Resolution:
+    """Resolve one ``scheme="auto"`` dispatch (see module docstring for the
+    measured -> modeled -> fallback chain).  ``result_class`` constrains
+    the pick to schemes of one result class (``"replicated"`` /
+    ``"shared"``) — call sites that consume plain arrays pass the
+    constraint instead of a scheme name."""
+    if result_class not in (None, "replicated", "shared"):
+        raise ValueError(f"bad result constraint {result_class!r}")
+    table = table if table is not None else active_table()
+    if pods and chips:
+        entry = table.lookup(family, topo_signature(pods, chips,
+                                                    n_fast_axes),
+                             dtype, elems * elem_bytes)
+        if entry is not None:
+            for choice in entry.ranking:
+                try:
+                    sch = registry.get_scheme(choice.scheme)
+                except KeyError:
+                    continue           # table from a build with more schemes
+                cands = _usable(sch, family, result_class, pods, chips,
+                                elems)
+                if cands is None:
+                    continue
+                opts = dict(choice.opts)
+                if opts and opts not in [dict(c) for c in cands]:
+                    # recorded tunables do not tile THIS size: re-predict
+                    # them from the closed form instead of mis-lowering
+                    pred = sch.predicted_time(family, pods=pods,
+                                              chips=chips, elems=elems,
+                                              elem_bytes=elem_bytes)
+                    opts = dict(pred[1]) if pred else dict(cands[0])
+                return Resolution(sch.name, opts, entry.source, entry)
+        best = best_scheme_predicted(family, pods=pods, chips=chips,
+                                     elems=elems, elem_bytes=elem_bytes,
+                                     result_class=result_class)
+        if best is not None:
+            return Resolution(best[0], best[1], "modeled")
+        raise ValueError(
+            f"no registered scheme can run {family} with elems={elems} on "
+            f"a {pods}x{chips} topology"
+            + (f" under result={result_class!r}" if result_class else "")
+            + " — every candidate grid is empty (tiling)")
+    try:
+        name = FALLBACK[result_class][family]
+    except KeyError:
+        raise ValueError(
+            f"scheme='auto' cannot resolve {family} under "
+            f"result={result_class!r} without static pods/chips counts"
+        ) from None
+    return Resolution(name, {}, "fallback")
+
+
+# package-level alias: ``repro.comm.resolve_scheme`` reads better than the
+# module-qualified ``tuning.resolve`` at call sites outside this package
+resolve_scheme = resolve
+
+
+def resolve_for(comm, family: str, *, elems: int, elem_bytes: int = 4,
+                dtype: str = "float32",
+                result_class: Optional[str] = None,
+                table: Optional[TuningTable] = None) -> Resolution:
+    """``resolve`` keyed by a ``Communicator``'s static structure."""
+    from repro.comm import primitives as p
+    return resolve(family, pods=comm.pods, chips=comm.chips, elems=elems,
+                   elem_bytes=elem_bytes, dtype=dtype,
+                   n_fast_axes=len(p._axes(comm.fast_axis)),
+                   result_class=result_class, table=table)
+
+
+def modeled_entries(families: Iterable[str], *, pods: int, chips: int,
+                    elems_list: Sequence[int], elem_bytes: int = 4,
+                    dtype: str = "float32", n_fast_axes: int = 1
+                    ) -> tuple[TuningEntry, ...]:
+    """Cold-start table rows for an unmeasured topology: one ``modeled``
+    entry per (family, size), ranking every runnable scheme by its
+    ``predicted_time``.  Useful to pre-seed a table for a mesh the bench
+    has never run on."""
+    out = []
+    sig = topo_signature(pods, chips, n_fast_axes)
+    for family in families:
+        for elems in elems_list:
+            ranked = []
+            for sch in registry.schemes_for(family):
+                pred = sch.predicted_time(family, pods=pods, chips=chips,
+                                          elems=elems,
+                                          elem_bytes=elem_bytes)
+                if pred is None:
+                    continue
+                t, opts = pred
+                ranked.append((t, Choice(sch.name, dict(opts))))
+            if ranked:
+                ranked.sort(key=lambda tc: (tc[0], tc[1].scheme))
+                out.append(TuningEntry(
+                    family=family, topo=sig, dtype=dtype,
+                    nbytes=elems * elem_bytes, source="modeled",
+                    ranking=tuple(c for _, c in ranked),
+                    label=f"{pods}x{chips}"))
+    return tuple(out)

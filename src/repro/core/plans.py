@@ -329,6 +329,33 @@ def alltoall_traffic(*, scheme: str, num_nodes: int, ranks_per_node: int,
     return CollectiveTraffic(slow, fast, result_per_node)
 
 
+# ---------------------------------------------------------------------------
+# Size buckets (the tuning-table key space).
+# ---------------------------------------------------------------------------
+
+def size_bucket(nbytes: int) -> int:
+    """Power-of-two bucket id of a message size: ``round(log2(nbytes))``.
+
+    The tuning table (``repro.comm.tuning``) keys measured cells by bucket
+    rather than exact bytes, so a lookup at an unmeasured size lands on the
+    geometrically-nearest measured cell.  Sizes <= 1 byte share bucket 0.
+    """
+    if nbytes <= 1:
+        return 0
+    return int(round(math.log2(nbytes)))
+
+
+def nearest_bucket(nbytes: int, available: Sequence[int]) -> int:
+    """The member of ``available`` (bucket ids) nearest to ``nbytes``'s own
+    bucket; ties break toward the SMALLER bucket (under-provisioning a
+    scheme choice is cheaper than over-committing to a large-message
+    winner).  Raises on an empty candidate set."""
+    if not available:
+        raise ValueError("no buckets to pick from")
+    b = size_bucket(nbytes)
+    return min(available, key=lambda a: (abs(a - b), a))
+
+
 def collective_time_model(traffic: CollectiveTraffic, *, num_nodes: int,
                           ranks_per_node: int, fast_bw: float = 100e9,
                           slow_bw: float = 25e9) -> float:

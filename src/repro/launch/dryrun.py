@@ -24,7 +24,6 @@ import traceback  # noqa: E402
 
 import jax        # noqa: E402
 import jax.numpy as jnp  # noqa: E402
-import numpy as np  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
 from repro.analysis.roofline import (CollectiveBytes, extrapolate_cost,  # noqa: E402

@@ -43,7 +43,6 @@ def main():
         cfg = cfg.reduced(n_layers=args.n_layers, d_model=args.d_model)
 
     n_dev = len(jax.devices())
-    data_ax = max(n_dev // 1, 1)
     topo = MeshTopology({"data": n_dev, "model": 1}, slow_axes=())
     mesh = make_mesh_from_topo(topo)
     bundle = make_train_step(cfg, topo, mesh, mode=args.mode, lr=args.lr,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.models.parallel import ParallelCtx, tp_slice
+from repro.models.parallel import ParallelCtx
 
 
 def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:

@@ -4,13 +4,11 @@ from __future__ import annotations
 
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
-from repro.models import transformer
 from repro.models.parallel import ParallelCtx
 from repro.models.transformer import Model, build
 

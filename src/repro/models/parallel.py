@@ -145,17 +145,20 @@ class ParallelCtx:
             if comm is None:     # no node tier: the bridge is the whole comm
                 comm = Communicator(fast_axis=self.pod_axis)
                 return jax.tree.map(
-                    lambda g: comm.allreduce(g, scheme="naive"), grads)
+                    lambda g: comm.allreduce(g, result="replicated"), grads)
             return jax.tree.map(comm.bridge_psum, grads)
         axes = self.dp_axes
         if not axes:
             return grads
-        # the dp reduction's own communicator: reduce over EXACTLY dp_axes
+        # the dp reduction's own communicator: reduce over EXACTLY dp_axes.
+        # scheme="auto" + the replicated constraint: the tuning table (or
+        # the closed forms) picks the reduction schedule, but the result
+        # must stay a plain per-rank gradient, never a window.
         fast = tuple(a for a in axes if a != self.pod_axis)
         slow = self.pod_axis if (self.pod_axis in axes and fast) else None
         dp_comm = Communicator(fast_axis=fast or axes, slow_axis=slow)
         return jax.tree.map(
-            lambda g: dp_comm.allreduce(g, scheme="naive"), grads)
+            lambda g: dp_comm.allreduce(g, result="replicated"), grads)
 
     # ---- tp collectives ------------------------------------------------------
     def ag_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:

@@ -13,8 +13,7 @@ semantics live in ParallelCtx / the block implementations.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

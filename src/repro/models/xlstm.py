@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.layers import rms_norm
-from repro.models.parallel import ParallelCtx, tp_slice
+from repro.models.parallel import ParallelCtx
 
 
 def causal_conv1d(x: jax.Array, w: jax.Array) -> jax.Array:

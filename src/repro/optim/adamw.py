@@ -13,7 +13,8 @@ import jax.numpy as jnp
 
 
 def adamw_init(params):
-    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    def zeros(p):
+        return jnp.zeros(p.shape, jnp.float32)
     return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
 
 

@@ -11,8 +11,7 @@ DCN and a coordinator — the decision logic is all here.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Optional
+from typing import Callable
 
 import numpy as np
 

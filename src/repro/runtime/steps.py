@@ -17,13 +17,12 @@ computational parallelism unchanged.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 from jax import lax
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.substrate.compat import shard_map
 
@@ -142,8 +141,11 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
             return loss, cnt
 
         (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
-        loss_g = world.allreduce(loss_sum, scheme="naive")
-        cnt_g = world.allreduce(cnt, scheme="naive")
+        # scheme="auto": the tuning table picks the reduction schedule per
+        # topology/size; the replicated constraint (not a scheme name)
+        # keeps the result a plain per-rank scalar, never a window
+        loss_g = world.allreduce(loss_sum, result="replicated")
+        cnt_g = world.allreduce(cnt, result="replicated")
 
         # gradient bridge (the paper's scheme vs the flat pure-MPI reduce)
         gl = jax.tree.leaves(grads)
@@ -176,7 +178,7 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
             if not data_sharded and "data" in topo.axis_sizes:
                 repl *= topo.size("data")
             gsq += jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
-        gsq = node.allreduce(gsq, scheme="naive")
+        gsq = node.allreduce(gsq, result="replicated")
         gnorm = jnp.sqrt(gsq)
         scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
         grads = jax.tree.map(lambda g: g * scale, grads)
@@ -223,7 +225,6 @@ def make_serve_steps(cfg: ModelConfig, topo: MeshTopology, mesh, *,
                      unroll: int = 1, opts=(),
                      compute_dtype=jnp.bfloat16) -> ServeStepBundle:
     model = build_model(cfg, topo, mode, compute_dtype, opts)
-    ctx = model.ctx
     dp = _dp_tuple(topo)
     n_dp = 1
     for a in dp:

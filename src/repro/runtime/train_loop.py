@@ -13,7 +13,6 @@ import time
 from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpointer import Checkpointer
 from repro.data.synthetic import DataConfig, SyntheticLM

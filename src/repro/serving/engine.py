@@ -23,27 +23,77 @@ def materialize_params(params):
     Hier-mode training state hands weights around as node-shared windows;
     the single-device engine needs full private copies.  A degenerate
     window (one rank per node — the shard IS the whole buffer) unwraps for
-    free; anything wider must be read inside the sharded step that owns the
-    mesh (``window.read()``), and an *open* store epoch is rejected outright
-    rather than served stale (paper §6's integrity rule).
+    free; anything wider must be read on the mesh that owns it
+    (``materialize_params_on_mesh``), and an *open* store epoch is rejected
+    outright rather than served stale (paper §6's integrity rule).
     """
     def unwrap(leaf):
         if not isinstance(leaf, SharedWindow):
             return leaf
-        if leaf.dirty:
-            raise ValueError(
-                "refusing to serve from a dirty SharedWindow: a store "
-                "opened an epoch that was never closed — fence() it first")
+        _check_clean(leaf)
         if leaf.comm.chips != 1:
             # unknown width (chips=None) is just as unreadable here as a
             # known multi-chip window: the shard may be a fraction of the
             # weight, so refuse rather than serve it as if it were whole.
             raise ValueError(
                 f"params contain a {leaf.comm.chips or 'unknown'}-way "
-                "SharedWindow; materialize it on the mesh (window.read() "
-                "inside the sharded step) before handing state to the "
+                "SharedWindow; materialize it on the mesh "
+                "(materialize_params_on_mesh) before handing state to the "
                 "single-device engine")
         return leaf.shard
+    return jax.tree.map(unwrap, params,
+                        is_leaf=lambda x: isinstance(x, SharedWindow))
+
+
+def _check_clean(window: SharedWindow) -> None:
+    if window.dirty:
+        raise ValueError(
+            "refusing to serve from a dirty SharedWindow: a store "
+            "opened an epoch that was never closed — fence() it first")
+
+
+def materialize_params_on_mesh(params, cluster, *, scheme: str = "auto"):
+    """The multi-chip companion of ``materialize_params``: read every
+    node-window leaf back into a full private array by gathering its shards
+    on the mesh that owns them.
+
+    ``cluster`` is the ``repro.substrate.VirtualCluster`` (or any object
+    with ``.run``/``.axis_names``) whose mesh matches each window's
+    communicator; a leaf's global ``shard`` array must be the rank-major
+    stack of per-rank window shards along ``leaf.axis`` (the layout a
+    shard_map with the natural specs produces).  The gather dispatches
+    through the window's OWN communicator with ``scheme="auto"`` — the
+    tuning table (or the closed forms, on an unmeasured shape) picks the
+    scheme, constrained to the replicated class so the engine always
+    receives plain arrays.  Epoch integrity is enforced exactly as in the
+    single-device path: dirty windows are rejected, never served stale.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def unwrap(leaf):
+        if not isinstance(leaf, SharedWindow):
+            return leaf
+        _check_clean(leaf)
+        comm, axis = leaf.comm, leaf.axis
+        if comm.chips == 1:
+            return leaf.shard
+        if comm.pods is None or comm.chips is None:
+            raise ValueError(
+                "materialize_params_on_mesh needs windows with static "
+                "pods/chips counts (construct their Communicator via "
+                "from_cluster/from_topology)")
+        if comm.slow_axis is not None:
+            raise ValueError(
+                "multi-pod windows are pod-replicated — read the node "
+                "window (split_type_shared) instead of the world window")
+
+        def body(shard):
+            return comm.allgather(shard, scheme=scheme, axis=axis,
+                                  result="replicated")
+
+        spec = P(*((None,) * axis + (cluster.axis_names,)))
+        return cluster.run(body, leaf.shard, in_specs=(spec,),
+                           out_specs=P(None))
     return jax.tree.map(unwrap, params,
                         is_leaf=lambda x: isinstance(x, SharedWindow))
 

@@ -3,7 +3,6 @@ no module outside ``repro/comm`` (and the deprecated shim) may pass raw
 ``fast_axis=``/``slow_axis=`` kwargs — collectives go through the
 ``Communicator``.  CI runs the same script in the fast lane."""
 
-import os
 import pathlib
 import sys
 

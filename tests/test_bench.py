@@ -10,11 +10,9 @@ value is that a number that disagrees with the model never gets written).
 import dataclasses
 import json
 
-import numpy as np
 import pytest
 
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 from repro.bench import SCHEMA_VERSION, report, runner, suites
 from repro.bench.validate import BenchValidationError
@@ -89,8 +87,9 @@ _TOP_KEYS = {"schema", "generated_by", "jax_version", "backend",
              "device_count", "sweep", "matrix", "cases", "cross_checks",
              "validation"}
 _CASE_KEYS = {"name", "csv_name", "family", "scheme", "topology", "pods",
-              "chips", "elems", "bytes_per_rank", "populations", "timing",
-              "traffic", "hlo", "checks", "autotune", "ok"}
+              "chips", "elems", "bytes_per_rank", "dtype", "fast_axes",
+              "populations", "timing", "traffic", "hlo", "checks",
+              "autotune", "ok"}
 _TIMING_KEYS = {"median_us", "mean_us", "min_us", "max_us", "iqr_us",
                 "reps", "inner"}
 _TRAFFIC_KEYS = {"slow_bytes", "fast_bytes", "result_bytes_per_node"}

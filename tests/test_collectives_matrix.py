@@ -198,6 +198,86 @@ def test_alltoall_schemes_agree(vc, comm):
 
 
 # ---------------------------------------------------------------------------
+# scheme="auto": bit-identical to the concrete scheme it resolves to
+# ---------------------------------------------------------------------------
+
+def test_auto_is_bit_identical_to_the_resolved_scheme(vc, comm):
+    """Auto dispatch is a trace-time table lookup, NOT a different lowering:
+    for every op family, ``scheme="auto"`` must produce bitwise the same
+    result as naming the resolved scheme (with its resolved opts)
+    explicitly.  Runs under whatever table is active (committed or empty),
+    so both the measured and the modeled resolution paths stay covered."""
+    from jax.sharding import PartitionSpec
+    from repro.comm import SharedWindow, registry, tuning
+
+    R = vc.num_devices
+    e = R * 8                          # tiles every scheme's divisor (nc<=8)
+    rng = np.random.default_rng(11)
+
+    def raw(o):
+        return o.shard if isinstance(o, SharedWindow) else o
+
+    def specs(res, repl_spec, shared_spec):
+        repl = registry.get_scheme(res.scheme).result_class == "replicated"
+        return repl_spec if repl else shared_spec
+
+    def run_pair(family, body, x, in_specs, repl_spec, shared_spec,
+                 elems):
+        res = tuning.resolve_for(comm, family, elems=elems)
+        out_specs = specs(res, repl_spec, shared_spec)
+        got = vc.run(lambda *a: body(*a, scheme="auto", opts={}),
+                     *x, in_specs=in_specs, out_specs=out_specs)
+        want = vc.run(lambda *a: body(*a, scheme=res.scheme, opts=res.opts),
+                      *x, in_specs=in_specs, out_specs=out_specs)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want),
+                                      err_msg=f"{family} ({res.scheme})")
+        return res
+
+    x1 = jnp.asarray(rng.normal(size=(R * 4, 2)).astype(np.float32))
+    run_pair("allgather",
+             lambda v, *, scheme, opts: raw(comm.allgather(v, scheme=scheme,
+                                                           **opts)),
+             (x1,), (vc.spec,), PartitionSpec(None), vc.spec, elems=8)
+
+    xr = jnp.asarray(rng.normal(size=(R, e)).astype(np.float32) / R)
+    run_pair("broadcast",
+             lambda v, *, scheme, opts: raw(comm.broadcast(
+                 v[0], root=R // 2, scheme=scheme, **opts))[None],
+             (xr,), (vc.spec,), PartitionSpec(None), P(None, vc.fast),
+             elems=e)
+    run_pair("psum",
+             lambda v, *, scheme, opts: raw(comm.allreduce(
+                 v[0], scheme=scheme, **opts))[None],
+             (xr,), (vc.spec,), PartitionSpec(None), P(None, vc.fast),
+             elems=e)
+    run_pair("reduce_scatter",
+             lambda v, *, scheme, opts: raw(comm.reduce_scatter(
+                 v[0], scheme=scheme, **opts)),
+             (xr,), (vc.spec,), P(vc.axis_names), P(vc.fast), elems=e)
+
+    xa = jnp.asarray(rng.normal(size=(R * R * 4,)).astype(np.float32))
+    run_pair("alltoall",
+             lambda v, *, scheme, opts: comm.alltoall(v, scheme=scheme,
+                                                      **opts),
+             (xa,), (vc.spec,), vc.spec, vc.spec, elems=4)
+
+    # allgatherv returns (blocks, counts) in both classes; compare both
+    valid = jnp.full((R, 1), e, jnp.int32)
+    res = tuning.resolve_for(comm, "allgatherv", elems=e)
+    repl = registry.get_scheme(res.scheme).result_class == "replicated"
+    o_specs = (P(None), P(None)) if repl \
+        else (P(None, vc.fast), P(None, vc.fast))
+    got = vc.run(lambda v, val: comm.allgatherv(v, val, scheme="auto"),
+                 xr, valid, in_specs=(vc.spec, vc.spec), out_specs=o_specs)
+    want = vc.run(lambda v, val: comm.allgatherv(v, val, scheme=res.scheme,
+                                                 **res.opts),
+                  xr, valid, in_specs=(vc.spec, vc.spec), out_specs=o_specs)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=f"allgatherv ({res.scheme})")
+
+
+# ---------------------------------------------------------------------------
 # Irregular allgatherv + GatherPlan compaction (paper Figs 4/10)
 # ---------------------------------------------------------------------------
 

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.comm import (Communicator, SharedWindow, WindowEpochError,
-                        get_scheme, registry, scheme_names, schemes_for)
+                        get_scheme, scheme_names, schemes_for)
 from repro.core import sync
 from repro.core.plans import NodeMap
 from repro.substrate import VirtualCluster, default_matrix

@@ -5,7 +5,6 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -46,8 +45,8 @@ def test_checkpoint_resume_continues_loss_curve(tmp_path):
     # uninterrupted run
     full = train(bundle, steps=20, data_cfg=data_cfg, log_every=0)
     # interrupted at step 10 (checkpoint), then resumed
-    r1 = train(bundle, steps=10, data_cfg=data_cfg, ckpt_dir=ck,
-               save_every=10, log_every=0)
+    train(bundle, steps=10, data_cfg=data_cfg, ckpt_dir=ck,
+          save_every=10, log_every=0)
     r2 = train(bundle, steps=20, data_cfg=data_cfg, ckpt_dir=ck,
                save_every=10, log_every=0)
     assert r2.resumed_from == 10

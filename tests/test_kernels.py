@@ -1,6 +1,5 @@
 """Per-kernel allclose sweeps (interpret=True on CPU) vs the jnp oracles."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,6 @@
 """Serving engine across families: greedy generation runs, positions/caches
 advance, sampled generation respects temperature seeding."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

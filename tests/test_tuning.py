@@ -1,0 +1,364 @@
+"""scheme="auto" tuning-table dispatch: round-trip, interpolation,
+modeled cold start, constraints, and the emit/staleness gates.
+
+The resolution chain under test (``repro.comm.tuning.resolve``):
+measured table entry (nearest size bucket) -> ``core.plans`` closed-form
+prediction (unknown topology signature) -> static per-family fallback
+(no static pods/chips counts at all).
+"""
+
+import json
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.bench import SCHEMA_VERSION as BENCH_SCHEMA
+from repro.comm import Communicator, SharedWindow, tuning
+from repro.core.plans import nearest_bucket, size_bucket
+from repro.substrate import VirtualCluster, default_matrix
+
+MATRIX = default_matrix()
+REPO_SCRIPTS = pathlib.Path(__file__).resolve().parent.parent / "scripts"
+
+
+# ---------------------------------------------------------------------------
+# Pure helpers (plans.py)
+# ---------------------------------------------------------------------------
+
+def test_size_bucket_is_log2_rounded():
+    assert size_bucket(4096) == 12
+    assert size_bucket(4095) == 12          # nearest power of two
+    assert size_bucket(6000) == 13          # rounds up past sqrt(2) mark
+    assert size_bucket(1) == 0
+    assert size_bucket(0) == 0
+
+
+def test_nearest_bucket_ties_go_smaller():
+    # 2^13 sits exactly between buckets 12 and 14 -> the smaller wins
+    assert nearest_bucket(2 ** 13, [12, 14]) == 12
+    assert nearest_bucket(100, [12, 18]) == 12
+    assert nearest_bucket(10 ** 9, [12, 18]) == 18
+    with pytest.raises(ValueError):
+        nearest_bucket(64, [])
+
+
+def test_topo_signature_distinguishes_factored_fast_tier():
+    assert tuning.topo_signature(2, 4) == "2x4"
+    assert tuning.topo_signature(2, 4, n_fast_axes=2) == "2x4-f2"
+    assert tuning.topo_signature(1, 8) != tuning.topo_signature(8, 1)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic bench reports (schema-shaped, controlled medians)
+# ---------------------------------------------------------------------------
+
+def _case(family, scheme, vc, elems, median, opts=None):
+    return {"family": family, "scheme": scheme, "topology": vc.label,
+            "pods": vc.pods, "chips": vc.chips,
+            "fast_axes": len(vc.fast_names), "dtype": "float32",
+            "elems": elems, "bytes_per_rank": elems * 4,
+            "timing": {"median_us": median},
+            "autotune": ({"param_grid": [dict(opts)], "best": dict(opts),
+                          "results": []} if opts else None)}
+
+
+def _report(cases):
+    return {"schema": BENCH_SCHEMA, "generated_by": "test", "sweep": {},
+            "jax_version": "test", "backend": "cpu", "cases": cases}
+
+
+# a DIFFERENT winner per topology proves dispatch is per-signature, and
+# pipelined's recorded n_chunks rides along through the autotune field
+WINNERS = {"1x8": ("naive", {}), "2x4": ("shared", {}),
+           "4x2": ("hier", {}), "8x1": ("pipelined", {"n_chunks": 2}),
+           "2x(2x2)-pod.dp.tp": ("shared", {})}
+
+
+def _matrix_report(elems=64):
+    cases = []
+    for vc in MATRIX:
+        win, opts = WINNERS[vc.label]
+        medians = {"naive": 40.0, "hier": 30.0, "shared": 20.0,
+                   "pipelined": 25.0}
+        medians[win] = 10.0               # force the intended winner
+        for scheme, med in medians.items():
+            cases.append(_case("allgather", scheme, vc, elems, med,
+                               opts if scheme == "pipelined" else None))
+    return _report(cases)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip: emit -> save -> load -> dispatch picks the recorded winner
+# ---------------------------------------------------------------------------
+
+def test_emit_load_dispatch_round_trip_on_every_topology(tmp_path):
+    table = tuning.TuningTable.from_bench_report(_matrix_report(),
+                                                 source_name="synthetic")
+    path = tmp_path / "TUNING.json"
+    table.save(path)
+    loaded = tuning.TuningTable.load(path)
+    assert len(loaded) == len(MATRIX)
+    assert loaded.meta["generated_from"] == "synthetic"
+    for vc in MATRIX:
+        comm = Communicator.from_cluster(vc)
+        res = tuning.resolve_for(comm, "allgather", elems=64, table=loaded)
+        want, opts = WINNERS[vc.label]
+        assert res.scheme == want, vc.label
+        assert res.source == "measured"
+        if want == "pipelined":           # autotuned opts survive the fold
+            assert res.opts == opts
+        assert res.entry is not None and res.entry.label == vc.label
+
+
+def test_dispatch_through_communicator_uses_the_table():
+    """One end-to-end auto call per result class: the active table decides
+    whether the caller gets a window or a replicated array."""
+    vc = next(c for c in MATRIX if c.label == "2x4")
+    if not vc.available():
+        pytest.skip("needs 8 devices")
+    comm = Communicator.from_cluster(vc)
+    x = vc.rank_major_input(m=2, extra=2)
+    table = tuning.TuningTable.from_bench_report(_matrix_report())
+    with tuning.use_table(table):          # winner on 2x4: shared
+        got = vc.run(lambda v: comm.allgather(v).shard, x)
+        want = vc.run(lambda v: comm.allgather(v, scheme="shared").shard, x)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # same call, a table that crowns naive -> a replicated array comes back
+    flip = _matrix_report()
+    for case in flip["cases"]:
+        if case["topology"] == "2x4":
+            case["timing"]["median_us"] = \
+                5.0 if case["scheme"] == "naive" else 50.0
+    with tuning.use_table(tuning.TuningTable.from_bench_report(flip)):
+        full = vc.run(lambda v: comm.allgather(v), x, out_specs=P(None))
+        np.testing.assert_allclose(np.asarray(full), np.asarray(x))
+
+
+# ---------------------------------------------------------------------------
+# Nearest-bucket interpolation
+# ---------------------------------------------------------------------------
+
+def test_nearest_bucket_interpolation_at_unmeasured_sizes():
+    vc = MATRIX[1]                         # 2x4
+    small = _case("allgather", "naive", vc, 1024, 10.0)      # 4 KiB
+    small2 = _case("allgather", "shared", vc, 1024, 20.0)
+    big = _case("allgather", "naive", vc, 65536, 90.0)       # 256 KiB
+    big2 = _case("allgather", "shared", vc, 65536, 30.0)
+    table = tuning.TuningTable.from_bench_report(
+        _report([small, small2, big, big2]))
+    # below/near the small cell -> its winner (naive)
+    for elems in (16, 1024, 4000):
+        res = tuning.resolve(("allgather"), pods=2, chips=4, elems=elems,
+                             table=table)
+        assert (res.scheme, res.entry.nbytes) == ("naive", 4096), elems
+    # near the big cell -> its winner (shared)
+    for elems in (50000, 65536, 10 ** 6):
+        res = tuning.resolve("allgather", pods=2, chips=4, elems=elems,
+                             table=table)
+        assert (res.scheme, res.entry.nbytes) == ("shared", 262144), elems
+    # geometric midpoint (2^15 elems = bucket 17 bytes, equidistant from
+    # buckets 12 and 18... pick the closer; exact ties go smaller)
+    res = tuning.resolve("allgather", pods=2, chips=4, elems=2 ** 13,
+                         table=table)
+    assert res.entry.nbytes == 4096        # tie in log space -> smaller
+
+
+# ---------------------------------------------------------------------------
+# Modeled cold start + fallback
+# ---------------------------------------------------------------------------
+
+def test_modeled_fallback_on_unknown_topology_signature():
+    table = tuning.TuningTable.from_bench_report(_matrix_report())
+    assert "3x2" not in table.signatures()
+    res = tuning.resolve("allgather", pods=3, chips=2, elems=64,
+                         table=table)
+    assert res.source == "modeled" and res.entry is None
+    # the modeled pick is a real registry scheme that can run the cell
+    from repro.comm import registry
+    sch = registry.get_scheme(res.scheme)
+    assert sch.candidates("allgather", pods=3, chips=2, elems=64)
+    # empty table: every topology takes the modeled path
+    with tuning.use_table(None):
+        res = tuning.resolve("psum", pods=2, chips=4, elems=1024)
+        assert res.source == "modeled"
+
+
+def test_fallback_without_static_counts_matches_old_defaults():
+    """A Communicator with no pods/chips (e.g. ParallelCtx's ad-hoc dp
+    communicator) must behave exactly as the pre-auto hard-coded defaults
+    did."""
+    for family, want in (("allgather", "shared"), ("broadcast", "shared"),
+                         ("psum", "shared"), ("alltoall", "hier")):
+        res = tuning.resolve(family, pods=None, chips=None, elems=64)
+        assert (res.scheme, res.source) == (want, "fallback"), family
+    res = tuning.resolve("psum", pods=None, chips=None, elems=64,
+                         result_class="replicated")
+    assert res.scheme == "naive"
+    with pytest.raises(ValueError, match="result"):
+        tuning.resolve("alltoall", pods=None, chips=None, elems=64,
+                       result_class="shared")
+
+
+# ---------------------------------------------------------------------------
+# Constraints: result class + tiling walk the ranking, never break it
+# ---------------------------------------------------------------------------
+
+def test_result_class_constraint_walks_the_ranking():
+    table = tuning.TuningTable.from_bench_report(_matrix_report())
+    # 2x4's measured winner is shared; a replicated-constrained caller
+    # must get the best REPLICATED entry of the same cell instead
+    res = tuning.resolve("allgather", pods=2, chips=4, elems=64,
+                         result_class="replicated", table=table)
+    assert res.scheme == "pipelined"       # 25us: best non-shared median
+    assert res.source == "measured"
+
+
+def test_tiling_filters_unrunnable_winner():
+    """psum/shared needs chips | elems: a scalar dispatch must skip a
+    recorded shared winner rather than fail to lower."""
+    vc = MATRIX[1]
+    cases = [_case("psum", "shared", vc, 1024, 10.0),
+             _case("psum", "naive", vc, 1024, 40.0)]
+    table = tuning.TuningTable.from_bench_report(_report(cases))
+    res = tuning.resolve("psum", pods=2, chips=4, elems=1, table=table)
+    assert res.scheme == "naive" and res.source == "measured"
+
+
+def test_recorded_opts_revalidated_against_dispatch_size():
+    """A pipelined winner recorded at n_chunks=8 must re-predict its chunk
+    count when the dispatch size cannot tile 8 chunks."""
+    vc = MATRIX[1]
+    cases = [_case("allgather", "pipelined", vc, 1024, 10.0,
+                   {"n_chunks": 8}),
+             _case("allgather", "naive", vc, 1024, 40.0)]
+    table = tuning.TuningTable.from_bench_report(_report(cases))
+    res = tuning.resolve("allgather", pods=2, chips=4, elems=12,
+                         table=table)   # 12 % 8 != 0
+    assert res.scheme == "pipelined"
+    assert res.opts["n_chunks"] in (1, 2, 4) and 12 % res.opts["n_chunks"] \
+        == 0
+
+
+def test_concrete_scheme_with_wrong_result_constraint_raises():
+    vc = MATRIX[1]
+    if not vc.available():
+        pytest.skip("needs 8 devices")
+    comm = Communicator.from_cluster(vc)
+    with pytest.raises(ValueError, match="replicated"):
+        vc.run(lambda v: comm.allgather(v, scheme="shared",
+                                        result="replicated").shard,
+               vc.rank_major_input(m=1, extra=1))
+
+
+# ---------------------------------------------------------------------------
+# Emit CLI + winner cross-check + staleness gate
+# ---------------------------------------------------------------------------
+
+def test_emit_cli_round_trip_and_self_check(tmp_path):
+    from repro.bench.__main__ import main
+    bench = tmp_path / "bench.json"
+    bench.write_text(json.dumps(_matrix_report()))
+    out = tmp_path / "table.json"
+    assert main(["--emit-tuning-table", "--bench", str(bench),
+                 "--table-out", str(out)]) == 0
+    table = json.loads(out.read_text())
+    assert table["schema"] == tuning.SCHEMA_VERSION
+    assert len(table["entries"]) == len(MATRIX)
+    assert all(e["source"] == "measured" for e in table["entries"])
+
+
+def test_tuning_table_checks_fail_on_disagreeing_winner():
+    """validate.tuning_table_checks: a table whose recorded winner did NOT
+    have the best pooled median in the run must fail."""
+    from repro.bench.validate import tuning_table_checks
+    rep = _matrix_report()
+    table = tuning.TuningTable.from_bench_report(rep)
+    assert all(ch.ok for ch in tuning_table_checks(table, rep))
+    # now make the run disagree: naive suddenly 100x faster on 2x4
+    for case in rep["cases"]:
+        if case["topology"] == "2x4" and case["scheme"] == "naive":
+            case["timing"]["median_us"] = 0.1
+    bad = [ch for ch in tuning_table_checks(table, rep) if not ch.ok]
+    assert bad and "2x4" in bad[0].name
+    # zero overlap is itself a failure
+    empty = _report([])
+    checks = tuning_table_checks(table, empty)
+    assert len(checks) == 1 and not checks[0].ok
+
+
+def test_staleness_script_gates_committed_vs_fresh(tmp_path):
+    sys.path.insert(0, str(REPO_SCRIPTS))
+    import check_tuning_table as gate
+    rep = _matrix_report()
+    table = tuning.TuningTable.from_bench_report(rep)
+    tpath = tmp_path / "TUNING.json"
+    table.save(tpath)
+    bpath = tmp_path / "fresh.json"
+    bpath.write_text(json.dumps(rep))
+    assert gate.main([str(tpath), "--schema-only"]) == 0
+    assert gate.main([str(tpath), "--bench", str(bpath)]) == 0
+    # fresh run flips the 2x4 winner far beyond the band -> stale
+    for case in rep["cases"]:
+        if case["topology"] == "2x4":
+            case["timing"]["median_us"] = \
+                1.0 if case["scheme"] == "naive" else 500.0
+    bpath.write_text(json.dumps(rep))
+    assert gate.main([str(tpath), "--bench", str(bpath),
+                      "--tol", "3.0"]) == 1
+    # schema gate has teeth: break the ranking order
+    broken = json.loads(tpath.read_text())
+    broken["entries"][0]["ranking"].reverse()
+    tpath.write_text(json.dumps(broken))
+    assert gate.main([str(tpath), "--schema-only"]) == 1
+
+
+def test_committed_default_table_resolves_the_full_matrix():
+    """The COMMITTED TUNING_default.json must cover every default_matrix()
+    topology signature and resolve every op family on it (measured or —
+    after a tiling walk-off — at worst modeled)."""
+    path = tuning.default_table_path()
+    if not path.exists():
+        pytest.skip("no committed TUNING_default.json")
+    table = tuning.TuningTable.load(path)
+    for vc in MATRIX:
+        comm = Communicator.from_cluster(vc)
+        for family in ("allgather", "broadcast", "psum", "reduce_scatter",
+                       "allgatherv", "alltoall"):
+            res = tuning.resolve_for(comm, family, elems=1024, table=table)
+            assert res.scheme, (vc.label, family)
+            assert res.source == "measured", (vc.label, family, res.source)
+
+
+# ---------------------------------------------------------------------------
+# Serving: mesh-side window materialization dispatches through auto
+# ---------------------------------------------------------------------------
+
+def test_materialize_params_on_mesh_reads_multichip_windows():
+    from repro.serving.engine import (materialize_params,
+                                      materialize_params_on_mesh)
+    vc = VirtualCluster(pods=1, chips=4)
+    if not vc.available():
+        pytest.skip("needs 4 devices")
+    comm = Communicator.from_cluster(vc)
+    w = jnp.arange(8 * 3, dtype=jnp.float32).reshape(8, 3)
+    params = {"w": SharedWindow(comm, w, axis=0, epoch=1),
+              "b": jnp.ones((3,))}
+    with pytest.raises(ValueError, match="SharedWindow"):
+        materialize_params(params)        # single-device path still refuses
+    out = materialize_params_on_mesh(params, vc)
+    np.testing.assert_allclose(np.asarray(out["w"]), np.asarray(w))
+    np.testing.assert_allclose(np.asarray(out["b"]), 1.0)
+    # a sharded dim other than 0 round-trips too
+    w2 = jnp.arange(2 * 8, dtype=jnp.float32).reshape(2, 8)
+    out2 = materialize_params_on_mesh(
+        {"w": SharedWindow(comm, w2, axis=1, epoch=1)}, vc)
+    np.testing.assert_allclose(np.asarray(out2["w"]), np.asarray(w2))
+    # epoch integrity holds on the mesh path exactly as off it
+    with pytest.raises(ValueError, match="dirty"):
+        materialize_params_on_mesh(
+            {"w": SharedWindow(comm, w, epoch=1, dirty=True)}, vc)
