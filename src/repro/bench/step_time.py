@@ -1,0 +1,337 @@
+"""End-to-end ``step_time`` bench family: whole train steps, not medians of
+one collective.
+
+The single-collective families measure each schedule in isolation; what the
+async prefetch engine actually buys — layer *k+1*'s FSDP window gather
+overlapping layer *k*'s compute — only shows up in a full forward/backward
+step.  This family times exactly that, over the model-zoo configs, through
+the same machinery as every other family: its two schemes are registry
+entries, its cases carry traffic expectations that ``repro.bench.validate``
+cross-checks against the compiled HLO, its cells land in
+``BENCH_collectives.json`` and fold into the ``scheme="auto"`` tuning table,
+and the CI regression gate diffs it like any ``allgather`` cell.
+
+* ``eager``    — issue-at-use baseline: the unit loop fully unrolled
+  (``lax.scan(unroll=n_units)``), weight gathers issued inside each unit
+  body at use time and re-issued by the remat bwd;
+* ``prefetch`` — the same step with the ``prefetch`` opt: the unrolled
+  ``ParamGroup`` walk (``models.parallel``) that issues the next unit's
+  gathers as ``AsyncCollectiveHandle``s while the current unit computes.
+
+Both schemes unroll the unit loop, so the measured delta isolates the
+prefetch engine (gather placement and issue order) — rolled-scan vs
+unrolled is an orthogonal code-layout effect that would otherwise swamp
+the comparison on small reduced configs.  Production training keeps its
+rolled scan; this family measures the *schedule*, not the loop form.
+
+A step's collective content is whatever the model traced — there is no
+closed form in ``(pods, chips, elems)`` alone — so each scheme carries a
+per-config **link inventory** recorded by the case builder from the step's
+own jaxpr (``link_inventory``), priced with the very ring model
+``analysis.roofline.parse_collectives`` applies to the compiled HLO.  The
+jaxpr is what we asked for and the HLO is what XLA lowered, so the
+``link/fast``/``link/slow`` checks pin real rewrites (a lost overlap, an
+accidental re-gather, a wrong replica group), not a tautology.
+
+Case sizing: ``elems`` is the model's global parameter element count —
+deterministic per config, so quick (CI) and full sweeps land on the same
+(family, topology, dtype, size) cells and stay comparable.
+"""
+
+from __future__ import annotations
+
+import math
+from types import MappingProxyType
+from typing import Optional
+
+import jax
+
+from repro.bench.suites import ELEM_BYTES, BenchCase, _swept
+from repro.comm import registry
+from repro.comm.registry import CollectiveScheme, register_scheme
+from repro.configs import get_config
+from repro.core.plans import CollectiveTraffic, collective_time_model
+
+#: model-zoo configs timed by the family (reduced shapes: the bench measures
+#: schedules, not model quality).  Both are plain dense, untied-embedding
+#: entries on purpose: a tied unembed gathers the SAME leaf twice and XLA
+#: CSE merges the two gathers, which a jaxpr-side count cannot see.
+STEP_CONFIGS = ("starcoder2-7b", "mistral-nemo-12b")
+
+
+# ---------------------------------------------------------------------------
+# Jaxpr link inventory (the expected side of the HLO cross-check)
+# ---------------------------------------------------------------------------
+
+_AR_LIKE = ("psum", "pmax", "pmin")
+
+
+def _names(axis_name) -> tuple[str, ...]:
+    if axis_name is None:
+        return ()
+    if isinstance(axis_name, (tuple, list)):
+        return tuple(a for a in axis_name if isinstance(a, str))
+    return (axis_name,) if isinstance(axis_name, str) else ()
+
+
+def _aval_bytes(v) -> int:
+    aval = v.aval
+    return math.prod(aval.shape) * aval.dtype.itemsize
+
+
+def _inner_jaxprs(eqn):
+    core = jax.extend.core if hasattr(jax, "extend") else jax.core
+    kinds = (core.ClosedJaxpr, core.Jaxpr)
+    for val in eqn.params.values():
+        vals = val if isinstance(val, (tuple, list)) else (val,)
+        for v in vals:
+            if isinstance(v, core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, kinds):
+                yield v
+
+
+def _scan_copies(eqn) -> int:
+    """Static body copies a ``scan`` leaves in the lowered module text.
+
+    ``unroll`` is a lowering-time knob invisible in the jaxpr structure:
+    the body jaxpr stays one step, but lowering emits ``unroll`` copies
+    inside the loop (all of them when fully unrolled, where the loop
+    disappears entirely)."""
+    length = eqn.params.get("length", 1) or 1
+    unroll = eqn.params.get("unroll", 1)
+    if unroll is True:
+        return length
+    return min(int(unroll) or 1, length)
+
+
+def _walk(jaxpr, sizes: dict, pod_names: set, acc: list,
+          mult: float = 1.0) -> None:
+    # within one jaxpr, identical collective eqns over the same operands are
+    # one HLO op after CSE — count them once
+    seen = set()
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in _AR_LIKE:
+            names = _names(eqn.params.get("axes", ()))
+            kind = "ar"
+        elif prim == "all_gather":
+            names = _names(eqn.params.get("axis_name"))
+            kind = "ag"
+        elif prim == "reduce_scatter":
+            names = _names(eqn.params.get("axis_name"))
+            kind = "rs"
+        elif prim == "all_to_all":
+            names = _names(eqn.params.get("axis_name"))
+            kind = "a2a"
+        elif prim == "ppermute":
+            names = _names(eqn.params.get("axis_name"))
+            kind = "perm"
+        else:
+            # loop/branch/remat/pjit bodies appear once in the lowered
+            # module text, which is exactly how parse_collectives counts
+            # them — recurse once per eqn; a partially/fully unrolled scan
+            # body is the one exception (``unroll`` static copies)
+            inner_mult = mult * _scan_copies(eqn) if prim == "scan" else mult
+            for inner in _inner_jaxprs(eqn):
+                _walk(inner, sizes, pod_names, acc, inner_mult)
+            continue
+        if not names:
+            continue            # positional-axes only: no wire traffic
+        groups = eqn.params.get("axis_index_groups")
+        if groups is not None:
+            n = len(groups[0])
+        else:
+            n = 1
+            for a in names:
+                n *= sizes.get(a, 1)
+        if n <= 1:
+            continue
+        key = (prim, tuple(map(id, eqn.invars)),
+               tuple(sorted((k, repr(v)) for k, v in eqn.params.items())))
+        if key in seen:
+            continue
+        seen.add(key)
+        out_b = sum(_aval_bytes(v) for v in eqn.outvars)
+        if kind == "ag":
+            link = out_b * (n - 1) / n
+        elif kind == "rs":
+            link = out_b * (n - 1)
+        elif kind == "ar":
+            link = 2.0 * out_b * (n - 1) / n
+        elif kind == "a2a":
+            link = out_b * (n - 1) / n
+        else:                   # ppermute -> collective-permute
+            link = float(out_b)
+        if any(a in pod_names for a in names):
+            acc[1] += link * mult   # group spans pods: the bridge tier
+        else:
+            acc[0] += link * mult
+
+
+def link_inventory(fn, example_args, vc) -> tuple[float, float]:
+    """Expected per-chip (fast, slow) link bytes of ``fn``'s lowering.
+
+    Traces ``fn`` (a mesh-level function, e.g. an ``smap``-wrapped body) to
+    a jaxpr, DCEs it the way jit will, and prices every collective primitive
+    with ``parse_collectives``' ring model: AG ``out*(n-1)/n``, RS
+    ``out*(n-1)``, AR ``2*out*(n-1)/n``, A2A ``out*(n-1)/n``, permute
+    ``out``.  Loop bodies count once (static module text); size-1 groups are
+    skipped; a group naming a slow axis is charged to the bridge tier.
+    """
+    closed = jax.make_jaxpr(fn)(*example_args)
+    try:
+        from jax.interpreters.partial_eval import dce_jaxpr
+    except ImportError:                       # pragma: no cover
+        from jax._src.interpreters.partial_eval import dce_jaxpr
+    jaxpr, _ = dce_jaxpr(closed.jaxpr, [True] * len(closed.jaxpr.outvars))
+    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+    acc = [0.0, 0.0]
+    _walk(jaxpr, sizes, set(vc.slow_names), acc)
+    return acc[0], acc[1]
+
+
+# ---------------------------------------------------------------------------
+# The two step schemes
+# ---------------------------------------------------------------------------
+
+def _no_dispatch(*_a, **_k):
+    raise NotImplementedError(
+        "step_time schemes are whole-train-step bench entries; they have no "
+        "Communicator dispatch body — build cases via "
+        "repro.bench.step_time.step_time_cases")
+
+
+class StepTimeScheme(CollectiveScheme):
+    """Base of the ``step_time`` schemes: a registry entry whose expected
+    lowering is a recorded per-config inventory instead of a closed form.
+
+    ``step_time_cases`` records each built case's jaxpr inventory here;
+    ``links()`` replays it for ``validate.expected_links``, ``traffic``/
+    ``predicted_time`` express it in ``core.plans`` terms so the tuning
+    table's modeled fallback ranks the schemes off-table too.
+    """
+
+    result_class = "replicated"
+    ops = MappingProxyType({"step_time": _no_dispatch})
+    opts: tuple = ()            # ParallelCtx opts that select this schedule
+    N_OUT = 3                   # loss, gnorm, checksum: replicated f32
+
+    def __init__(self):
+        # (pods, chips, fast_shape, elems) -> (fast, slow) per-chip bytes
+        self._inventory: dict = {}
+
+    def record(self, *, pods: int, chips: int, fast_shape, elems: int,
+               fast: float, slow: float) -> None:
+        self._inventory[(pods, chips, tuple(fast_shape), elems)] = \
+            (fast, slow)
+
+    def _lookup(self, pods: int, chips: int, elems: int
+                ) -> Optional[tuple[float, float]]:
+        for (p, c, _fs, e), v in self._inventory.items():
+            if (p, c, e) == (pods, chips, elems):
+                return v
+        return None
+
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+        inv = self._inventory.get((pods, chips, tuple(fast_shape), elems))
+        if inv is None:
+            raise ValueError(
+                f"{self.name!r} has no recorded link inventory for "
+                f"{pods}x{chips} (fast {fast_shape}) at {elems} elems — "
+                "step_time expectations are recorded per case by "
+                "step_time_cases, not closed forms")
+        return inv
+
+    def result_node(self, family, *, pods, chips, elems, elem_bytes=4):
+        # replicated scalars: every rank holds each f32 output once
+        return self.N_OUT * 4 * chips
+
+    def traffic_for(self, *, pods: int, chips: int, fast_shape, elems: int
+                    ) -> CollectiveTraffic:
+        fast, slow = self.links("step_time", pods=pods, chips=chips,
+                                fast_shape=fast_shape, elems=elems)
+        R = pods * chips
+        return CollectiveTraffic(
+            slow_bytes=slow * R, fast_bytes=fast * R,
+            result_bytes_per_node=self.result_node(
+                "step_time", pods=pods, chips=chips, elems=elems))
+
+    def traffic(self, family, *, pods, chips, elems, elem_bytes=4,
+                populations=None):
+        if family != "step_time":
+            return super().traffic(family, pods=pods, chips=chips,
+                                   elems=elems, elem_bytes=elem_bytes,
+                                   populations=populations)
+        inv = self._lookup(pods, chips, elems)
+        if inv is None:
+            raise ValueError(f"{self.name!r}: no recorded inventory for "
+                             f"{pods}x{chips}/e{elems}")
+        R = pods * chips
+        return CollectiveTraffic(
+            slow_bytes=inv[1] * R, fast_bytes=inv[0] * R,
+            result_bytes_per_node=self.result_node(
+                family, pods=pods, chips=chips, elems=elems))
+
+    def predicted_time(self, family, *, pods, chips, elems, elem_bytes=4,
+                       populations=None):
+        if self._lookup(pods, chips, elems) is None:
+            return None         # unrecorded config: cannot rank off-table
+        tr = self.traffic(family, pods=pods, chips=chips, elems=elems)
+        return collective_time_model(tr, num_nodes=pods,
+                                     ranks_per_node=chips), {}
+
+
+class StepEagerScheme(StepTimeScheme):
+    """Issue-at-use baseline: the unit loop fully unrolled, weight gathers
+    issued inside each unit body at use time (and re-issued by the remat
+    bwd) — the prefetch schedule minus the prefetching."""
+
+    name = "eager"
+    opts = ()
+
+
+class StepPrefetchScheme(StepTimeScheme):
+    """The async-prefetch step: unrolled ``ParamGroup`` walk, unit *k+1*'s
+    gathers in flight (``AsyncCollectiveHandle``) while unit *k* computes,
+    double-buffered (in-flight budget 2)."""
+
+    name = "prefetch"
+    opts = ("prefetch",)
+
+
+EAGER = register_scheme(StepEagerScheme())
+PREFETCH = register_scheme(StepPrefetchScheme())
+
+
+# ---------------------------------------------------------------------------
+# Case builder
+# ---------------------------------------------------------------------------
+
+def step_time_cases(vc, on_skip=None, schemes=None):
+    """One case per (model config, step scheme) on this cluster.
+
+    Builds the flattened-state train-step body (``runtime.steps.
+    make_step_bench``), records its jaxpr link inventory on the scheme, and
+    yields a ``BenchCase`` whose HLO the validate layer must match."""
+    from repro.runtime.steps import make_step_bench
+
+    for cfg_name in STEP_CONFIGS:
+        cfg = get_config(cfg_name).reduced()
+        for sch in _swept(registry.schemes_for("step_time"), schemes):
+            body, in_specs, out_specs, make_args, elems = make_step_bench(
+                cfg, vc, opts=sch.opts, unroll=cfg.n_units)
+            avals = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                          for a in make_args())
+            fast_b, slow_b = link_inventory(
+                vc.smap(body, in_specs, out_specs), avals, vc)
+            sch.record(pods=vc.pods, chips=vc.chips,
+                       fast_shape=vc.fast_shape, elems=elems,
+                       fast=fast_b, slow=slow_b)
+            yield BenchCase(
+                "step_time", sch.name, vc, elems,
+                body=body, in_specs=in_specs, out_specs=out_specs,
+                make_args=make_args,
+                traffic=sch.traffic_for(pods=vc.pods, chips=vc.chips,
+                                        fast_shape=vc.fast_shape,
+                                        elems=elems))

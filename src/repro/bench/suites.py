@@ -52,7 +52,7 @@ ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
 ELEM_DTYPE = "float32"  # recorded per case: the tuning table keys by dtype
 
 FAMILIES = ("allgather", "broadcast", "psum", "reduce_scatter",
-            "allgatherv", "alltoall")
+            "allgatherv", "alltoall", "step_time")
 # QUICK_ELEMS must stay a subset of FULL_ELEMS: CI's perf-regression gate
 # compares the quick sweep against a committed full-sweep baseline, and
 # only shared (family, scheme, topology, elems) cells can be compared.
@@ -357,6 +357,16 @@ def allgatherv_cases(vc: VirtualCluster, max_elems: int,
             body_with=body_with, tunable_grid=grid)
 
 
+def step_time_cases(vc: VirtualCluster, elems=None, on_skip=None,
+                    schemes=None):
+    """Bridge to ``repro.bench.step_time``: whole-train-step cases.  The
+    family sizes itself (``elems`` is each model config's global parameter
+    element count), so ``build_cases`` invokes it once per cluster, outside
+    the message-size sweep."""
+    from repro.bench import step_time as st
+    return st.step_time_cases(vc, on_skip=on_skip, schemes=schemes)
+
+
 _FAMILY_BUILDERS = {
     "allgather": allgather_cases,
     "broadcast": broadcast_cases,
@@ -364,6 +374,7 @@ _FAMILY_BUILDERS = {
     "reduce_scatter": reduce_scatter_cases,
     "allgatherv": allgatherv_cases,
     "alltoall": alltoall_cases,
+    "step_time": step_time_cases,
 }
 
 
@@ -386,6 +397,9 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
     if unknown:
         raise ValueError(f"unknown families {sorted(unknown)}; "
                          f"pick from {list(_FAMILY_BUILDERS)}")
+    if "step_time" in families:
+        from repro.bench import step_time  # noqa: F401  registers its
+        # eager/prefetch schemes before the scheme-name validation below
     if schemes is not None:
         if "auto" in schemes:
             raise ValueError(
@@ -398,11 +412,16 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
             raise ValueError(f"unknown schemes {sorted(unknown_s)}; "
                              f"registered: {list(registry.scheme_names())}")
     cases: list[BenchCase] = []
+    per_size = tuple(f for f in families if f != "step_time")
     for vc in clusters:
         for e in elems:
-            for fam in families:
+            for fam in per_size:
                 cases.extend(_FAMILY_BUILDERS[fam](vc, e, on_skip=on_skip,
                                                    schemes=schemes))
+        if "step_time" in families:
+            # self-sized family: one sweep per cluster, not per message size
+            cases.extend(step_time_cases(vc, on_skip=on_skip,
+                                         schemes=schemes))
     return cases
 
 

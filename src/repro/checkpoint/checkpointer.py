@@ -120,6 +120,12 @@ class Checkpointer:
         for w, l, rec in zip(want, leaves, manifest["leaves"]):
             assert tuple(w.shape) == tuple(l.shape) == tuple(rec["shape"]), (
                 w.shape, l.shape)
+            assert str(l.dtype) == rec["dtype"], \
+                f"{rec['path']}: shard dtype {l.dtype} != " \
+                f"manifest {rec['dtype']}"
+            assert str(np.dtype(w.dtype)) == rec["dtype"], \
+                f"{rec['path']}: template dtype {w.dtype} != " \
+                f"manifest {rec['dtype']}"
         treedef = jax.tree.structure(like)
         restored = jax.tree.unflatten(treedef, leaves)
         if shardings is not None:

@@ -8,6 +8,9 @@ free functions were removed after their deprecation release):
   ``reduce_scatter``/``alltoall`` dispatch through the scheme registry;
 * ``SharedWindow``  — the MPI-3 shared-window analogue with explicit
   ``fence()``/epoch synchronization semantics;
+* ``AsyncCollectiveHandle`` — issue-early / resolve-late collectives
+  (``Communicator.allgather_async``): window epochs stand in for CUDA
+  events, and a torn resolve raises ``WindowEpochError``;
 * ``registry``      — self-describing scheme entries (``naive``/``hier``/
   ``shared``/``pipelined``): bodies + traffic closed-forms + expected
   lowerings + tunable grids.  New schemes register here and are
@@ -22,8 +25,9 @@ free functions were removed after their deprecation release):
   back to the ``core.plans`` closed forms on unmeasured cells.
 """
 
-from repro.comm import pipeline, primitives, registry, tuning, window
+from repro.comm import handle, pipeline, primitives, registry, tuning, window
 from repro.comm.communicator import Communicator
+from repro.comm.handle import AsyncCollectiveHandle
 from repro.comm.registry import (CollectiveScheme, get_scheme,
                                  register_scheme, scheme_names, schemes_for)
 from repro.comm.tuning import (Resolution, TuningTable, resolve_scheme,
@@ -31,8 +35,9 @@ from repro.comm.tuning import (Resolution, TuningTable, resolve_scheme,
 from repro.comm.window import SharedWindow, WindowEpochError
 
 __all__ = [
-    "Communicator", "SharedWindow", "WindowEpochError",
-    "CollectiveScheme", "get_scheme", "register_scheme", "scheme_names",
-    "schemes_for", "pipeline", "primitives", "registry", "tuning", "window",
+    "AsyncCollectiveHandle", "Communicator", "SharedWindow",
+    "WindowEpochError", "CollectiveScheme", "get_scheme", "register_scheme",
+    "scheme_names", "schemes_for", "handle", "pipeline", "primitives",
+    "registry", "tuning", "window",
     "Resolution", "TuningTable", "resolve_scheme", "use_table",
 ]

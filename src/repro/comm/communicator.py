@@ -266,6 +266,21 @@ class Communicator:
         _, out = self._call("alltoall", scheme, x, axis=axis, **opts)
         return out
 
+    # -- async (issue-early / resolve-late) -----------------------------------
+    def allgather_async(self, x: jax.Array, *, scheme: str = "auto",
+                        axis: int = 0, **opts):
+        """Issue the gather now, consume later: returns an
+        ``AsyncCollectiveHandle`` whose ``resolve()`` yields the full node
+        buffer ((local, pod) order, same as ``SharedWindow.read``).  The
+        pick is constrained to the shared result class — the window IS the
+        async object; its epoch stands in for the CUDA event, and a store
+        between issue and resolve makes ``resolve()`` raise
+        ``WindowEpochError`` instead of returning torn bytes."""
+        from repro.comm.handle import AsyncCollectiveHandle
+        win = self.allgather(x, scheme=scheme, axis=axis, result="shared",
+                             **opts)
+        return AsyncCollectiveHandle.issue("allgather", win)
+
     # -- fused collective-matmul (compute overlap) ----------------------------
     def ag_matmul(self, x: jax.Array, w_shard: jax.Array, *,
                   n_chunks: int = 2, use_kernel: bool = False):

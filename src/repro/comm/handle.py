@@ -1,0 +1,108 @@
+"""AsyncCollectiveHandle: issue-early / resolve-late collectives.
+
+The companion paper (Zhou et al., *Collectives in hybrid MPI+MPI code*)
+observes that the shared-window synchronization epochs are what make
+*asynchronous* collectives safe: a gather may be issued in one epoch and its
+result consumed much later, as long as no store re-opens the window in
+between.  On GPUs this is the CUDA-event idiom (record at issue, wait at
+use); here the window's **epoch counter is the event**:
+
+* ``issue`` — materialize the gather from a clean window and capture a
+  dependency token (the AD-safe twin of ``pipeline._token_after``) plus
+  the window's epoch;
+* ``resolve`` — return the gathered value, ordered after the token via
+  ``optimization_barrier`` (the "event wait"); if the window was stored to
+  or fenced past the issue epoch in the meantime, the handle is *torn* and
+  ``resolve`` raises ``WindowEpochError``.
+
+Handles are frozen pytrees, so they thread through ``lax`` control flow and
+``jax.tree`` walks like any other value.  Inside one jitted step XLA's
+dataflow already overlaps the issued gather with unrelated compute between
+issue and resolve — exactly the double-buffer overlap of
+``repro.comm.pipeline``, but spanning arbitrary user code instead of one
+fused matmul.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm.window import SharedWindow, WindowEpochError
+
+
+@jax.custom_vjp
+def _ordered(value, token):
+    """``pipeline._token_after``-style ordering pair, but differentiable:
+    ``optimization_barrier`` has no AD rule, and handles live inside
+    differentiated model code.  Forward lowers to the barrier (the pair is
+    scheduled as a unit); backward passes cotangents straight through —
+    grads need no ordering constraint, remat policy handles the bwd."""
+    return lax.optimization_barrier((value, token))
+
+
+def _ordered_fwd(value, token):
+    return _ordered(value, token), None
+
+
+def _ordered_bwd(_, g):
+    return g
+
+
+_ordered.defvjp(_ordered_fwd, _ordered_bwd)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncCollectiveHandle:
+    """An in-flight collective: the issuing window, the materialized value,
+    and the epoch "event" that guards the resolve."""
+
+    family: str
+    window: SharedWindow
+    value: jax.Array
+    token: jax.Array
+    issue_epoch: int
+
+    @classmethod
+    def issue(cls, family: str, window: SharedWindow) \
+            -> "AsyncCollectiveHandle":
+        """Start the collective: read the (clean) window now, record the
+        epoch.  Raises ``WindowEpochError`` if the window is dirty — an
+        async gather may not overlap an open store epoch."""
+        value = window.read()
+        # token computable only after the gather issued (the "event record")
+        _, token = _ordered(value, jnp.ones((), jnp.float32))
+        return cls(family=family, window=window, value=value,
+                   token=token, issue_epoch=window.epoch)
+
+    @property
+    def done(self) -> bool:
+        """Event query (``MPI_Test`` / ``cudaEventQuery``): the handle is
+        resolvable iff the window is still clean in the issue epoch."""
+        return (not self.window.dirty) and \
+            self.window.epoch == self.issue_epoch
+
+    def resolve(self) -> jax.Array:
+        """Event wait: return the gathered buffer, data-dependent on the
+        issue token.  A dirty window or an epoch bump since issue means the
+        buffer may have been torn by a concurrent store — raise instead of
+        returning stale bytes."""
+        if not self.done:
+            raise WindowEpochError(
+                f"resolve of a torn {self.family} handle: the window was "
+                f"stored to or fenced past epoch {self.issue_epoch} "
+                f"(now epoch {self.window.epoch}, "
+                f"dirty={self.window.dirty}) — re-issue after the fence")
+        out, _ = _ordered(self.value, self.token)
+        return out
+
+
+jax.tree_util.register_pytree_node(
+    AsyncCollectiveHandle,
+    lambda h: ((h.window, h.value, h.token), (h.family, h.issue_epoch)),
+    lambda aux, ch: AsyncCollectiveHandle(
+        family=aux[0], window=ch[0], value=ch[1], token=ch[2],
+        issue_epoch=aux[1]))

@@ -51,13 +51,14 @@ SCHEMA_VERSION = "repro.tuning/v1"
 FALLBACK = {
     None: {"allgather": "shared", "broadcast": "shared", "psum": "shared",
            "reduce_scatter": "shared", "allgatherv": "shared",
-           "alltoall": "hier"},
+           "alltoall": "hier", "step_time": "prefetch"},
     "shared": {"allgather": "shared", "broadcast": "shared",
                "psum": "shared", "reduce_scatter": "shared",
                "allgatherv": "shared"},
     "replicated": {"allgather": "naive", "broadcast": "naive",
                    "psum": "naive", "reduce_scatter": "naive",
-                   "allgatherv": "naive", "alltoall": "hier"},
+                   "allgatherv": "naive", "alltoall": "hier",
+                   "step_time": "prefetch"},
 }
 
 

@@ -170,11 +170,15 @@ def decode_logits(x: jax.Array, unemb: jax.Array, ctx: ParallelCtx, *,
 
 def ffn(x_sp: jax.Array, p: dict, meta: dict, ctx: ParallelCtx, *,
         act: str, eps: float) -> jax.Array:
-    h = rms_norm(x_sp, ctx.gather_w(p["ln"], meta["ln"].fsdp_dim), eps)
-    hg = ctx.ag_tokens(h)                                  # (B, T, d)
+    # issue every window read up front (issue-early discipline: the weight
+    # gathers are independent of the token math, so XLA is free to overlap
+    # them with the norm/SP-gather below — same values, earlier issue)
+    w_ln = ctx.gather_w(p["ln"], meta["ln"].fsdp_dim)
     # w_in: (d, g, dff) with g in {1 (gelu), 2 (gated)}; tp shards dff so the
     # gate/up halves stay aligned under contiguous sharding.
     w_in = ctx.gather_w(p["w_in"], meta["w_in"].fsdp_dim)  # (d, g, dff/tp)
+    h = rms_norm(x_sp, w_ln, eps)
+    hg = ctx.ag_tokens(h)                                  # (B, T, d)
     u = jnp.einsum("btd,dgf->btgf", hg, w_in)
     if act == "gelu":
         a = activation(act, u[:, :, 0], None)
@@ -191,8 +195,9 @@ def ffn_decode(x: jax.Array, p: dict, meta: dict, ctx: ParallelCtx, *,
                act: str, eps: float) -> jax.Array:
     """Decode-shape FFN: 1 token, no SP AG (token replicated over tp);
     col/row parallel with a single psum."""
-    h = rms_norm(x, ctx.gather_w(p["ln"], meta["ln"].fsdp_dim), eps)
+    w_ln = ctx.gather_w(p["ln"], meta["ln"].fsdp_dim)
     w_in = ctx.gather_w(p["w_in"], meta["w_in"].fsdp_dim)
+    h = rms_norm(x, w_ln, eps)
     u = jnp.einsum("btd,dgf->btgf", h, w_in)
     if act == "gelu":
         a = activation(act, u[:, :, 0], None)

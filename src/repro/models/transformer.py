@@ -26,7 +26,8 @@ from repro.models.attention import (attn_block, attn_flops, cache_write,
 from repro.models.layers import (decode_logits, embed, ffn, ffn_decode,
                                  rms_norm, sinusoidal_pe, unembed_xent)
 from repro.models.moe import moe_block
-from repro.models.parallel import ParallelCtx, tp_slice
+from repro.models.parallel import (ParallelCtx, ParamGroup, prefetch_walk,
+                                   tp_slice)
 from repro.models.rglru import rglru_block, rglru_state_init
 from repro.models.xlstm import (mlstm_block, mlstm_state_init, slstm_block,
                                 slstm_scan_flops, slstm_state_init)
@@ -353,9 +354,36 @@ def _scan_units(cfg, ctx, defs, params, x, *, collect_state=False,
         # recompute then skips every re-gather (trades footprint for
         # collective+memory traffic).
         policy = jax.checkpoint_policies.save_only_these_names("ag_out")
-        unit_r = jax.checkpoint(unit, policy=policy)
+        remat = lambda f: jax.checkpoint(f, policy=policy)  # noqa: E731
     else:
-        unit_r = jax.checkpoint(unit)
+        remat = jax.checkpoint
+
+    budget = ctx.prefetch
+    if budget > 0:
+        # Async prefetch: an unrolled walk over per-unit ParamGroups — layer
+        # k+1's FSDP window gathers are issued while layer k computes, at
+        # most `budget` groups unsharded at once.  The unit body runs with
+        # fsdp_axes cleared (its params arrive already full), which also
+        # keeps the gathers OUTSIDE the remat region: the bwd recompute
+        # reuses the unsharded copy instead of re-gathering.
+        inner = dataclasses.replace(ctx, fsdp_axes=())
+
+        def unit_full(x, pu):
+            for i, k in enumerate(kinds):
+                x = _block_train(k, x, pu[f"b{i}"], defs["units"][f"b{i}"],
+                                 inner, cfg)
+            return x
+        unit_f = remat(unit_full)
+        groups = [ParamGroup(ctx,
+                             jax.tree.map(lambda u, i=i: u[i],
+                                          params["units"]),
+                             defs["units"])
+                  for i in range(cfg.n_units)]
+        x = prefetch_walk(groups, lambda c, _k, full: unit_f(c, full), x,
+                          budget)
+        return x, None
+
+    unit_r = remat(unit)
     x, _ = lax.scan(lambda c, pu: (unit_r(c, pu), None), x, params["units"],
                     unroll=unroll)
     return x, None

@@ -18,11 +18,9 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def int8_bridge_psum(g: jax.Array, axes, *, stochastic: bool = False,
-                     key=None) -> jax.Array:
-    """Quantized psum over ``axes`` (the bridge).  The absmax scale is
-    agreed with a tiny fp32 pmax first (one scalar per tensor)."""
-    g32 = g.astype(jnp.float32)
+def _quantize(g32: jax.Array, axes, *, stochastic: bool = False, key=None):
+    """int8-quantize ``g32`` with an absmax scale agreed over ``axes`` via a
+    tiny fp32 pmax (one scalar per tensor).  Returns (q, scale)."""
     amax = jnp.max(jnp.abs(g32))
     amax = lax.pmax(amax, axes)
     scale = jnp.maximum(amax, 1e-30) / 127.0
@@ -32,6 +30,14 @@ def int8_bridge_psum(g: jax.Array, axes, *, stochastic: bool = False,
     else:
         x = jnp.round(x)
     q = jnp.clip(x, -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_bridge_psum(g: jax.Array, axes, *, stochastic: bool = False,
+                     key=None) -> jax.Array:
+    """Quantized psum over ``axes`` (the bridge)."""
+    g32 = g.astype(jnp.float32)
+    q, scale = _quantize(g32, axes, stochastic=stochastic, key=key)
     # int16 on the wire: exact for <= 256 pods (sum <= 127*256 < 2^15) and
     # half the fp32 bridge bytes; int8 itself would overflow at 2 pods.
     total = lax.psum(q.astype(jnp.int16), axes)
@@ -47,8 +53,14 @@ def make_error_feedback(params_like):
 
     def compress_leaf(g, err, axes):
         g32 = g.astype(jnp.float32) + err
-        out = int8_bridge_psum(g32, axes)
-        new_err = g32 - out.astype(jnp.float32)
-        return out.astype(g.dtype), new_err
+        q, scale = _quantize(g32, axes)
+        # residual of the LOCAL quantization only: the psum total includes
+        # the other pods' contributions, so `g32 - total` would grow like
+        # (P-1)*g per step and the feedback would diverge instead of
+        # correcting rounding bias.
+        new_err = g32 - q.astype(jnp.float32) * scale
+        total = lax.psum(q.astype(jnp.int16), axes)
+        out = (total.astype(jnp.float32) * scale).astype(g.dtype)
+        return out, new_err
 
     return init, compress_leaf

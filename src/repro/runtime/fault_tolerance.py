@@ -36,13 +36,20 @@ class StragglerPolicy:
     def __post_init__(self):
         self.ewma: dict[int, float] = {}
         self.strikes: dict[int, int] = {}
+        self.evicted: set[int] = set()
 
     def observe(self, step_times: dict[int, float]) -> list[int]:
         """step_times: host_id -> wall seconds for this step.  Returns hosts
-        to evict/replace."""
+        to evict/replace.  Each host is returned at most once: its EWMA and
+        strike state are dropped on eviction so a dead host neither inflates
+        the fleet median nor gets re-flagged every call."""
         for h, t in step_times.items():
+            if h in self.evicted:
+                continue
             prev = self.ewma.get(h, t)
             self.ewma[h] = (1 - self.alpha) * prev + self.alpha * t
+        if not self.ewma:
+            return []
         med = float(np.median(list(self.ewma.values())))
         evict = []
         for h, e in self.ewma.items():
@@ -52,6 +59,10 @@ class StragglerPolicy:
                     evict.append(h)
             else:
                 self.strikes[h] = 0
+        for h in evict:
+            self.evicted.add(h)
+            self.ewma.pop(h, None)
+            self.strikes.pop(h, None)
         return evict
 
 
@@ -99,7 +110,9 @@ class RestartManager:
         if step is None:
             return init_fn(), 0
         template = jax.eval_shape(init_fn)
+        # pin the step we validated: a concurrent save landing between
+        # latest_step() and restore() must not switch the checkpoint under us
         state, step = self.ckpt.restore(
             jax.tree.map(lambda s: np.zeros(s.shape, s.dtype), template),
-            shardings=shardings)
+            step=step, shardings=shardings)
         return state, step

@@ -200,6 +200,158 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
 
 
 # ---------------------------------------------------------------------------
+# End-to-end step-time bench body (the repro.bench "step_time" family)
+# ---------------------------------------------------------------------------
+
+def cluster_ctx(vc, *, mode: str = "hier", compute_dtype=jnp.float32,
+                opts=()) -> ParallelCtx:
+    """A ``ParallelCtx`` over a bench ``VirtualCluster``'s OWN axis names.
+
+    ``make_ctx`` hardcodes the production ``("pod", "data", "model")`` mesh;
+    the bench topology matrix names its axes per cluster.  Mapping: the slow
+    tier is the bridge, the fast tier is where parameters are stored — and
+    when the fast tier is factored over several axes (the ``(dp, tp)``
+    tuple mesh) the LAST fast axis plays tensor-parallel, mirroring the
+    production layout.
+    """
+    if len(vc.slow_names) > 1:
+        raise ValueError("cluster_ctx supports at most one slow (bridge) "
+                         f"axis, got {vc.slow_names}")
+    pod = vc.slow_names[0] if vc.slow_names else None
+    fast = vc.fast_names
+    tp_axis = fast[-1] if len(fast) > 1 else None
+    store = fast[:-1] if len(fast) > 1 else fast
+    store_size = 1
+    for name, size in zip(vc.axis_names, vc.axis_shapes):
+        if name in store:
+            store_size *= size
+    if store_size == 1:
+        # a size-1 store shards nothing, so there is no window gather to
+        # issue early: the prefetch schedule degrades to the eager path
+        # (same program) instead of paying the handle plumbing for no-ops
+        opts = tuple(o for o in opts if not str(o).startswith("prefetch"))
+    return ParallelCtx(
+        tp_axis=tp_axis,
+        fsdp_axes=store if mode == "hier" else (),
+        dp_axes=((pod,) + store) if pod else store,
+        pod_axis=pod,
+        tp=vc.fast_shape[-1] if tp_axis else 1,
+        mode=mode, compute_dtype=compute_dtype, opts=frozenset(opts))
+
+
+def make_step_bench(cfg: ModelConfig, vc, *, opts=(), unroll: int = 1,
+                    lr: float = 3e-4, weight_decay: float = 0.1,
+                    clip: float = 1.0, global_batch: int = 8, seq: int = 32,
+                    seed: int = 0):
+    """Whole-train-step bench body for one cluster: forward + backward +
+    gradient bridge + optimizer, as a ``repro.bench`` case.
+
+    Returns ``(body, in_specs, out_specs, make_args, elems)`` with the
+    state tree FLATTENED into separate top-level args (``BenchCase.compile``
+    shards one plain ``PartitionSpec`` per arg) and ``elems`` = the model's
+    global parameter element count (the family's recorded message size).
+    Everything runs fp32 (the bench artifact's recorded dtype); the body
+    returns three replicated f32 scalars — loss, grad norm, and a parameter
+    checksum that keeps the whole optimizer update alive under DCE.
+
+    ``unroll`` feeds the unit scan: the ``step_time`` family's eager
+    baseline unrolls all units (``unroll=cfg.n_units``) so it differs from
+    the prefetch schedule ONLY in gather placement — scan-vs-unroll is an
+    orthogonal code-layout effect the family deliberately holds constant.
+    """
+    ctx = cluster_ctx(vc, opts=opts)
+    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+    data = 1
+    for a in ctx.fsdp_axes:
+        data *= sizes[a]
+    model = build(cfg, ctx, data=data)
+    defs = model.defs
+    pspecs = model.param_specs(tp_axis=ctx.tp_axis,
+                               fsdp_axis=ctx.fsdp_axes[0]
+                               if ctx.fsdp_axes else None)
+    state_specs = {"params": pspecs, "m": pspecs, "v": pspecs, "step": P()}
+    bspec = P(ctx.dp_axes)
+    meta_leaves = jax.tree.leaves(defs,
+                                  is_leaf=lambda x: isinstance(x, PMeta))
+    world = Communicator.from_cluster(vc)
+    node = world.split_type_shared()
+
+    from repro.models.transformer import _loss  # local-body entry
+
+    def step(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            return _loss(cfg, ctx, defs, p, {"tokens": batch},
+                         unroll=unroll)
+
+        (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        # scalar stats: pinned to the flat scheme so the step's lowering is
+        # one fixed program per topology (auto would couple the bench body
+        # to the tuning table's per-topology winner, and scatter-based
+        # winners cannot scatter a 0-d operand anyway)
+        loss_g = world.allreduce(loss_sum, scheme="naive")
+        cnt_g = world.allreduce(cnt, scheme="naive")
+        gl = jax.tree.leaves(grads)
+        reduced = []
+        for g, meta in zip(gl, meta_leaves):
+            axes = grad_reduce_axes(meta, ctx)
+            reduced.append(lax.psum(g, axes) if axes else g)
+        grads = jax.tree.unflatten(jax.tree.structure(grads), reduced)
+        grads = jax.tree.map(lambda g: g / cnt_g, grads)
+        gsq = jnp.float32(0.0)
+        for g, meta in zip(jax.tree.leaves(grads), meta_leaves):
+            repl = 1.0
+            if meta.tp_dim is None and ctx.tp_axis:
+                repl *= ctx.tp
+            if meta.fsdp_dim is None:
+                repl *= data
+            gsq += jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
+        gsq = node.allreduce(gsq, scheme="naive")
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        new_params, _, _ = adamw_update(
+            params, grads, state["m"], state["v"], state["step"] + 1,
+            lr=lr, weight_decay=weight_decay)
+        csum = jnp.float32(0.0)
+        for leaf in jax.tree.leaves(new_params):
+            csum += jnp.sum(leaf.astype(jnp.float32))
+        csum = world.allreduce(csum, scheme="naive")
+        return loss_g / cnt_g, gnorm, csum
+
+    spec_leaves, spec_tree = jax.tree.flatten(
+        state_specs, is_leaf=lambda x: isinstance(x, P))
+
+    def body(*args):
+        state = jax.tree.unflatten(spec_tree, args[:-1])
+        return step(state, args[-1])
+
+    in_specs = tuple(spec_leaves) + (bspec,)
+    out_specs = (P(), P(), P())
+
+    def make_args():
+        params = model.init_params(seed)
+        m, v = adamw_init(params)
+        state = {"params": params, "m": m, "v": v,
+                 "step": jnp.zeros((), jnp.int32)}
+        # deterministic token stream (Knuth multiplicative hash of position)
+        toks = (jnp.arange(global_batch * (seq + 1), dtype=jnp.uint32)
+                * jnp.uint32(2654435761)) % jnp.uint32(cfg.vocab)
+        tokens = toks.astype(jnp.int32).reshape(global_batch, seq + 1)
+        return tuple(jax.tree.flatten(state)[0]) + (tokens,)
+
+    pshapes = jax.eval_shape(model.init_params)
+    elems = 0
+    for leaf in jax.tree.leaves(pshapes):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        elems += n
+    return body, in_specs, out_specs, make_args, elems
+
+
+# ---------------------------------------------------------------------------
 # Serve steps
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,221 @@
+"""Async collective handles + the layer-parameter prefetcher.
+
+Covers the tentpole surface end to end: ``allgather_async`` issue/resolve
+equivalence against the eager shared-window gather over the full topology
+matrix, torn-read (``WindowEpochError``) semantics on resolve-after-store,
+the ``ParamGroup`` sharded -> in_flight -> unsharded lifecycle, bit-identical
+train-step outputs with the prefetcher on vs off, and the ``step_time``
+bench family's registry/traffic wiring.  The pure in-flight-budget
+properties live in ``test_prefetch_props.py`` (hypothesis).
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import Communicator, WindowEpochError
+from repro.comm.handle import AsyncCollectiveHandle
+from repro.models.meta import PMeta
+from repro.models.parallel import ParamGroup
+from repro.runtime.steps import cluster_ctx, make_step_bench
+from repro.substrate import VirtualCluster, default_matrix
+
+MATRIX = default_matrix()
+VC2 = VirtualCluster(pods=2, chips=4)          # seed shape, store size 4
+TUPLE = VirtualCluster(pods=2, chips=4, fast_axis=("dp", "tp"),
+                       fast_shape=(2, 2), slow_axis="pod")
+
+needs8 = pytest.mark.skipif(not VC2.available(), reason="needs 8 devices")
+
+
+@pytest.fixture(params=MATRIX, ids=[t.label for t in MATRIX])
+def vc(request) -> VirtualCluster:
+    cluster = request.param
+    if not cluster.available():
+        pytest.skip(f"needs {cluster.num_devices} devices")
+    return cluster
+
+
+# ---------------------------------------------------------------------------
+# AsyncCollectiveHandle: issue / resolve
+# ---------------------------------------------------------------------------
+
+def test_async_gather_matches_eager(vc):
+    """resolve() returns exactly the eager shared-window gather — the async
+    path changes scheduling, never bytes — on every matrix topology."""
+    comm = Communicator.from_cluster(vc)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(vc.num_devices, 3)).astype(np.float32))
+
+    def body(v):
+        h = comm.allgather_async(v)
+        assert h.family == "allgather" and h.done
+        eager = comm.allgather(v, scheme="shared").read()
+        return jnp.stack([h.resolve(), eager])[None]
+
+    out = np.asarray(vc.run(body, x))
+    assert out.shape == (vc.num_devices, 2, vc.num_devices, 3)
+    np.testing.assert_array_equal(out[:, 0], out[:, 1])
+    # every rank's row is present somewhere in its node buffer
+    np.testing.assert_allclose(np.sort(out[0, 0].ravel()),
+                               np.sort(np.asarray(x).ravel()))
+
+
+@needs8
+def test_resolve_after_store_raises():
+    """A store between issue and resolve tears the handle: resolve() must
+    raise instead of returning stale bytes."""
+    comm = Communicator.from_cluster(VC2)
+    x = jnp.zeros((VC2.num_devices, 2), jnp.float32)
+
+    def torn(v):
+        h = comm.allgather_async(v)
+        return dataclasses.replace(h, window=h.window.store(v)).resolve()
+
+    with pytest.raises(WindowEpochError, match="torn"):
+        VC2.run(torn, x)
+
+
+@needs8
+def test_resolve_after_fence_epoch_bump_raises():
+    """A fence past the issue epoch (even back to a clean window) also
+    tears the handle — the buffer was rewritten since issue."""
+    comm = Communicator.from_cluster(VC2)
+    x = jnp.zeros((VC2.num_devices, 2), jnp.float32)
+
+    def torn(v):
+        h = comm.allgather_async(v)
+        bumped = h.window.store(v).fence_local(h.token)
+        assert not dataclasses.replace(h, window=bumped).done
+        return dataclasses.replace(h, window=bumped).resolve()
+
+    with pytest.raises(WindowEpochError, match="torn"):
+        VC2.run(torn, x)
+
+
+@needs8
+def test_issue_on_dirty_window_raises():
+    """An async gather may not overlap an open store epoch."""
+    comm = Communicator.from_cluster(VC2)
+    x = jnp.zeros((VC2.num_devices, 2), jnp.float32)
+
+    def dirty(v):
+        win = comm.window(v, epoch=1).store(v)
+        return AsyncCollectiveHandle.issue("allgather", win).resolve()
+
+    with pytest.raises(WindowEpochError, match="dirty"):
+        VC2.run(dirty, x)
+
+
+# ---------------------------------------------------------------------------
+# ParamGroup lifecycle
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_paramgroup_lifecycle_and_gather_identity():
+    """sharded -> in_flight -> unsharded -> sharded; the group's gather is
+    byte-identical to the eager ``gather_w`` load."""
+    ctx = cluster_ctx(VC2)
+    meta = {"w": PMeta(shape=(8, 4), fsdp_dim=0)}
+    x = jnp.arange(VC2.num_devices * 2 * 4,
+                   dtype=jnp.float32).reshape(VC2.num_devices * 2, 4)
+
+    def body(w):
+        g = ParamGroup(ctx, {"w": w}, meta)
+        assert g.state == "sharded"
+        g.unshard()
+        assert g.state == "in_flight"
+        g.unshard()                      # idempotent while in flight
+        full = g.wait()["w"]
+        assert g.state == "unsharded"
+        g.reshard()
+        assert g.state == "sharded"
+        return jnp.stack([full, ctx.gather_w(w, 0)])[None]
+
+    out = np.asarray(VC2.run(body, x))
+    np.testing.assert_array_equal(out[:, 0], out[:, 1])
+
+
+@needs8
+def test_paramgroup_wait_on_torn_handle_raises():
+    """A store tearing ONE window between unshard and wait fails the whole
+    group's wait, exactly like a per-leaf resolve would."""
+    ctx = cluster_ctx(VC2)
+    meta = {"w": PMeta(shape=(8, 4), fsdp_dim=0)}
+    x = jnp.zeros((VC2.num_devices * 2, 4), jnp.float32)
+
+    def body(w):
+        g = ParamGroup(ctx, {"w": w}, meta)
+        g.unshard()
+        h = g._handles["w"]
+        g._handles = {"w": dataclasses.replace(
+            h, window=h.window.store(w.astype(ctx.compute_dtype)))}
+        return g.wait()["w"]
+
+    with pytest.raises(WindowEpochError, match="torn"):
+        VC2.run(body, x)
+
+
+# ---------------------------------------------------------------------------
+# Prefetch on/off: bit-identical step outputs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not TUPLE.available(), reason="needs 8 devices")
+def test_prefetch_step_outputs_bit_identical():
+    """The prefetcher reorders gather issue, never math: the full train
+    step (fwd + bwd + bridge + optimizer) returns bit-identical scalars
+    with prefetch on vs off, on the production-shaped tuple mesh."""
+    from repro.configs import get_config
+    cfg = get_config("starcoder2-7b").reduced()
+    outs = []
+    for opts in ((), ("prefetch",)):
+        body, in_specs, out_specs, make_args, _ = make_step_bench(
+            cfg, TUPLE, opts=opts, unroll=cfg.n_units)
+        fn = jax.jit(TUPLE.smap(body, in_specs, out_specs))
+        outs.append([np.asarray(o) for o in fn(*make_args())])
+    for a, b in zip(*outs):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_cluster_ctx_strips_prefetch_on_size1_store():
+    """A size-1 store shards nothing: the prefetch opt must degrade to the
+    eager path (same program) instead of paying handle plumbing for
+    no-op gathers."""
+    assert cluster_ctx(VirtualCluster(pods=8, chips=1),
+                       opts=("prefetch",)).prefetch == 0
+    if VC2.available():
+        assert cluster_ctx(VC2, opts=("prefetch",)).prefetch == 2
+        assert cluster_ctx(TUPLE, opts=("prefetch=3",)).prefetch == 3
+
+
+# ---------------------------------------------------------------------------
+# step_time bench family wiring
+# ---------------------------------------------------------------------------
+
+def test_step_time_registry_wiring():
+    from repro.bench import step_time  # noqa: F401  (registers schemes)
+    from repro.comm.registry import scheme_names, schemes_for
+    assert {"eager", "prefetch"} <= set(scheme_names())
+    assert [s.name for s in schemes_for("step_time")] == ["eager", "prefetch"]
+
+
+@needs8
+def test_step_time_cases_traffic_recorded():
+    """Case building walks the jaxpr link inventory and records per-cell
+    traffic: both tiers nonzero on a bridged cluster, the replicated
+    3-scalar result on node 0, and one case per (config, scheme)."""
+    from repro.bench import step_time as st
+    cases = list(st.step_time_cases(VC2))
+    assert sorted(c.scheme for c in cases) == ["eager", "eager",
+                                               "prefetch", "prefetch"]
+    for c in cases:
+        assert c.family == "step_time"
+        assert c.traffic.fast_bytes > 0
+        assert c.traffic.slow_bytes > 0
+        assert c.traffic.result_bytes_per_node == 3 * 4 * VC2.chips
+    # the two configs are distinct cells
+    assert len({c.elems for c in cases}) == 2

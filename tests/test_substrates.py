@@ -158,3 +158,76 @@ def test_error_feedback_accumulates_residual():
         total += float(out.sum())
     # with error feedback the long-run average is unbiased
     assert abs(total - 50 * float(g.sum())) / (50 * float(g.sum())) < 0.05
+
+
+def test_error_feedback_residual_bounded_across_pods():
+    """Regression: the residual must be the LOCAL quantization error
+    (g32 - q*scale), not local-minus-psum-total — the total includes the
+    other pods' gradients, so that residual grows ~(P-1)*g per step and
+    the feedback diverges instead of correcting rounding bias."""
+    n = 2
+    if len(jax.devices()) < n:
+        pytest.skip("needs 2 devices")
+    init, compress = make_error_feedback(jnp.zeros((n, 32)))
+    step = jax.pmap(lambda g, e: compress(g, e, "p"), axis_name="p",
+                    devices=jax.devices()[:n])
+    rng = np.random.default_rng(0)
+    # distinct per-pod magnitudes so local != total
+    g = jnp.asarray(rng.normal(size=(n, 32)).astype(np.float32)
+                    * np.asarray([[1.0], [3.0]], np.float32))
+    err = jnp.zeros((n, 32), jnp.float32)
+    total = np.zeros((n, 32), np.float32)
+    for _ in range(12):
+        scale = float(jnp.max(jnp.abs(g + err))) / 127.0
+        out, err = step(g, err)
+        total += np.asarray(out)
+        # one quantization step, every step: the residual never compounds
+        assert float(jnp.max(jnp.abs(err))) <= scale / 2 + 1e-6
+    # and the long-run sum telescopes to the exact psum (minus one residual)
+    exact = 12 * np.broadcast_to(np.asarray(g).sum(0), (n, 32))
+    assert np.abs(total - exact).max() <= float(jnp.max(jnp.abs(err))) * n
+
+
+def test_straggler_evicts_once_and_drops_state():
+    """Regression: an evicted host must be returned exactly once; its EWMA
+    and strike state are dropped so a dead host neither inflates the fleet
+    median nor gets re-flagged every subsequent call."""
+    pol = StragglerPolicy(patience=3)
+    evictions = []
+    for _ in range(20):
+        evictions += pol.observe({0: 1.0, 1: 1.0, 2: 1.0, 3: 9.0})
+    assert evictions == [3]
+    assert 3 in pol.evicted
+    assert 3 not in pol.ewma and 3 not in pol.strikes
+    # the dead host's stale reports no longer move the fleet median
+    assert float(np.median(list(pol.ewma.values()))) == pytest.approx(1.0)
+
+
+def test_restart_resumes_pinned_step(tmp_path):
+    """Regression: resume_or_init must restore the step it validated via
+    latest_step(), not whatever is newest when restore() runs — a
+    concurrent save landing in between must not switch checkpoints."""
+    from repro.runtime.fault_tolerance import RestartManager
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(100, {"w": jnp.full((4,), 100.0)}, blocking=True)
+    rm = RestartManager(ck)
+    validated = ck.latest_step()
+    # a concurrent save lands after latest_step() was read
+    ck.save(200, {"w": jnp.full((4,), 200.0)}, blocking=True)
+    ck.latest_step = lambda: validated
+    state, step = rm.resume_or_init(
+        lambda: {"w": jnp.zeros((4,), jnp.float32)})
+    assert step == 100
+    np.testing.assert_array_equal(np.asarray(state["w"]),
+                                  np.full((4,), 100.0, np.float32))
+
+
+def test_restore_checks_manifest_dtypes(tmp_path):
+    """Restore validates BOTH directions against the manifest: the shard
+    bytes and the caller's template must match the recorded dtype."""
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, {"w": jnp.ones((4,), jnp.float32)}, blocking=True)
+    with pytest.raises(AssertionError, match="dtype"):
+        ck.restore({"w": np.zeros((4,), np.int32)})
+    restored, _ = ck.restore({"w": np.zeros((4,), np.float32)})
+    np.testing.assert_array_equal(restored["w"], np.ones((4,), np.float32))
