@@ -71,6 +71,7 @@ def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False,
             a_src = jnp.where(j == k, a_blk, jnp.zeros_like(a_blk))
             # column broadcast of B[k, :] (owner node k) — bridge tier
             b_src = jnp.where(i == k, b_blk, jnp.zeros_like(b_blk))
+            # raw-collective: pedagogical SUMMA baseline, raw by design
             b_panel = lax.psum(b_src, "node")
             if scheme == "auto":
                 # tuning-table dispatch: shared-class picks come back as a
@@ -90,6 +91,7 @@ def summa(a, b, *, scheme: str, mesh, use_kernel: bool = False,
                     use_kernel=use_kernel)
                 continue
             if scheme == "naive":
+                # raw-collective: pedagogical SUMMA baseline
                 a_panel = lax.psum(a_src, "core")
             else:  # hybrid: one shared panel per node (a window), read at use
                 a_panel = ROW_COMM.reduce_scatter(a_src,

@@ -1,12 +1,22 @@
 #!/usr/bin/env python3
 """API-surface check: collectives go through ``repro.comm``, nowhere else.
 
-Fails (exit 1) if any module outside ``src/repro/comm/`` passes raw
-``fast_axis=`` / ``slow_axis=`` keyword arguments — the old free-function
-calling convention the ``Communicator`` replaced.  A violation means a
-consumer bypassed the scheme registry and would silently miss future
-scheme/validation coverage.  (The ``src/repro/core/collectives.py`` shim
-exemption was dropped when the shim itself was removed.)
+Fails (exit 1) on two kinds of bypass:
+
+1. **Raw tier kwargs** — any module outside ``src/repro/comm/`` passing
+   ``fast_axis=`` / ``slow_axis=`` keyword arguments, the old free-function
+   calling convention the ``Communicator`` replaced.
+2. **Raw collective primitives** — ``lax.psum(`` / ``lax.all_gather(``
+   call sites outside ``repro/comm``, ``repro/substrate`` and
+   ``repro/kernels``.  Raw primitives bypass scheme dispatch AND the
+   step-graph optimizer (``Communicator.record()`` cannot bucket or
+   reorder a collective it never sees).  Known-legitimate sites carry an
+   inline ``# raw-collective: <reason>`` pragma — the tp fast paths
+   (``ag_tokens`` and friends in ``models/parallel.py``, where the single
+   flat tp group has exactly one schedule), the quantized wire formats in
+   ``optim/compression.py`` (int16 payloads the registry does not carry
+   yet), and the sync primitives in ``core/sync.py`` the machinery itself
+   is built from.
 
 Allowed everywhere:
   * ``VirtualCluster(...)`` construction (the substrate's topology spec is
@@ -28,72 +38,119 @@ import sys
 
 KWARG_RE = re.compile(r"\b(?:fast_axis|slow_axis)\s*=(?!=)")
 ALLOWED_LINE_RE = re.compile(r"\b(?:VirtualCluster|Communicator)\s*\(")
+RAW_RE = re.compile(r"\blax\.(?:psum|all_gather)\s*\(")
+RAW_PRAGMA = "raw-collective:"
 
 SCAN_ROOTS = ("src/repro", "benchmarks", "examples")
 ALLOWED_PATHS = (
     "src/repro/comm/",               # the API itself
 )
+RAW_ALLOWED_PATHS = (
+    "src/repro/comm/",               # the primitives live here
+    "src/repro/substrate/",          # compat shims wrap the primitives
+    "src/repro/kernels/",            # Pallas bodies fuse their own wires
+)
 
 
-def violations(repo: pathlib.Path) -> list[str]:
-    out: list[str] = []
+def _scan_files(repo: pathlib.Path):
     for root in SCAN_ROOTS:
         base = repo / root
         if not base.exists():
             continue
         for path in sorted(base.rglob("*.py")):
-            rel = path.relative_to(repo).as_posix()
-            if any(rel.startswith(a) for a in ALLOWED_PATHS):
-                continue
-            depth = 0          # open-paren depth of an allowed call: its
-            for lineno, line in enumerate(  # continuation lines are allowed
-                    path.read_text().splitlines(), start=1):
-                code = line.split("#", 1)[0]
-                m = ALLOWED_LINE_RE.search(code)
-                if depth == 0 and m:
-                    # heuristic: text before the constructor and after its
-                    # same-line close is still checked; only the call's own
-                    # (possibly multi-line) argument list is exempt — a
-                    # violation nested INSIDE a constructor argument would
-                    # slip by, which AST-free grep accepts.
-                    if KWARG_RE.search(code[:m.start()]):
-                        out.append(f"{rel}:{lineno}: {line.strip()}")
-                    d, end = 0, None
-                    for idx in range(m.start(), len(code)):
-                        if code[idx] == "(":
-                            d += 1
-                        elif code[idx] == ")":
-                            d -= 1
-                            if d == 0:
-                                end = idx + 1
-                                break
-                    if end is None:          # call continues on next lines
-                        depth = d
-                        continue
-                    if KWARG_RE.search(code[end:]) and \
-                            not ALLOWED_LINE_RE.search(code[end:]):
-                        out.append(f"{rel}:{lineno}: {line.strip()}")
-                    continue
-                if depth > 0:
-                    depth = max(depth + code.count("(") - code.count(")"), 0)
-                    continue
-                if KWARG_RE.search(code):
+            yield path, path.relative_to(repo).as_posix()
+
+
+def kwarg_violations(repo: pathlib.Path) -> list[str]:
+    out: list[str] = []
+    for path, rel in _scan_files(repo):
+        if any(rel.startswith(a) for a in ALLOWED_PATHS):
+            continue
+        depth = 0          # open-paren depth of an allowed call: its
+        for lineno, line in enumerate(  # continuation lines are allowed
+                path.read_text().splitlines(), start=1):
+            code = line.split("#", 1)[0]
+            m = ALLOWED_LINE_RE.search(code)
+            if depth == 0 and m:
+                # heuristic: text before the constructor and after its
+                # same-line close is still checked; only the call's own
+                # (possibly multi-line) argument list is exempt — a
+                # violation nested INSIDE a constructor argument would
+                # slip by, which AST-free grep accepts.
+                if KWARG_RE.search(code[:m.start()]):
                     out.append(f"{rel}:{lineno}: {line.strip()}")
+                d, end = 0, None
+                for idx in range(m.start(), len(code)):
+                    if code[idx] == "(":
+                        d += 1
+                    elif code[idx] == ")":
+                        d -= 1
+                        if d == 0:
+                            end = idx + 1
+                            break
+                if end is None:          # call continues on next lines
+                    depth = d
+                    continue
+                if KWARG_RE.search(code[end:]) and \
+                        not ALLOWED_LINE_RE.search(code[end:]):
+                    out.append(f"{rel}:{lineno}: {line.strip()}")
+                continue
+            if depth > 0:
+                depth = max(depth + code.count("(") - code.count(")"), 0)
+                continue
+            if KWARG_RE.search(code):
+                out.append(f"{rel}:{lineno}: {line.strip()}")
     return out
+
+
+def raw_violations(repo: pathlib.Path) -> list[str]:
+    """Raw ``lax.psum`` / ``lax.all_gather`` call sites outside the comm
+    layers.  The pragma is checked on the FULL line (it lives in the
+    comment the kwarg scan strips); a pragma on the line directly above
+    also covers the call — the idiom when the call line has no room
+    under the line-length limit."""
+    out: list[str] = []
+    for path, rel in _scan_files(repo):
+        if any(rel.startswith(a) for a in RAW_ALLOWED_PATHS):
+            continue
+        lines = path.read_text().splitlines()
+        for lineno, line in enumerate(lines, start=1):
+            if RAW_PRAGMA in line:
+                continue
+            if lineno >= 2 and RAW_PRAGMA in lines[lineno - 2]:
+                continue
+            if RAW_RE.search(line.split("#", 1)[0]):
+                out.append(f"{rel}:{lineno}: {line.strip()}")
+    return out
+
+
+def violations(repo: pathlib.Path) -> list[str]:
+    return kwarg_violations(repo) + raw_violations(repo)
 
 
 def main(argv=None) -> int:
     args = argv if argv is not None else sys.argv[1:]
     repo = pathlib.Path(args[0]) if args else \
         pathlib.Path(__file__).resolve().parent.parent
-    bad = violations(repo)
-    if bad:
+    bad_kwargs = kwarg_violations(repo)
+    bad_raw = raw_violations(repo)
+    if bad_kwargs:
         print("api-surface check FAILED: raw fast_axis=/slow_axis= kwargs "
               "outside repro/comm — route these call sites through "
               "repro.comm.Communicator (README 'Communicator API'):",
               file=sys.stderr)
-        for v in bad:
+        for v in bad_kwargs:
             print(f"  {v}", file=sys.stderr)
+    if bad_raw:
+        print("api-surface check FAILED: raw lax.psum/lax.all_gather call "
+              "sites outside repro/comm + repro/substrate + repro/kernels "
+              "— dispatch through Communicator (so the scheme registry and "
+              "the step-graph optimizer see them), or justify with an "
+              "inline '# raw-collective: <reason>' pragma:",
+              file=sys.stderr)
+        for v in bad_raw:
+            print(f"  {v}", file=sys.stderr)
+    if bad_kwargs or bad_raw:
         return 1
     print("api-surface check OK: all collective call sites go through "
           "repro.comm")

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Validate SCHEDULE_stepgraph.json — the committed step-graph schedule
+report (``python -m repro.comm.stepgraph``).
+
+Structural and arithmetic checks only, stdlib-only by design (the CI
+``checks`` job runs without jax): the schema is what ``Schedule.report()``
+emits, and the numbers must be internally consistent —
+
+  * byte conservation: bucketing repacks messages, it never changes the
+    payload (``after_bytes == before_bytes``; padding is reported
+    separately per bucket and only ever adds);
+  * message-count reduction: ``after_messages <= before_messages``, and
+    every bucket holds >= 2 members (a singleton "bucket" would be the
+    eager issue with extra steps);
+  * the issue order covers exactly the rewritten schedule: one ``bucket``
+    entry per bucket, one ``single``/``gather`` per surviving eager issue;
+  * on at least one multi-pod topology the optimizer actually reduced the
+    message count (the committed artifact must witness the rewrite, not
+    just parse).
+
+    python scripts/check_schedule_report.py [SCHEDULE_stepgraph.json]
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+SCHEMA = "repro.stepgraph/v1"
+
+REPORT_KEYS = {"schema", "nodes", "allreduce", "gather", "buckets",
+               "singles", "order", "config", "topology", "pods", "chips",
+               "elems"}
+BUCKET_KEYS = {"axes", "dtype", "scheme", "count", "bytes", "padded_bytes",
+               "target_bytes"}
+ORDER_KINDS = {"bucket", "single", "gather"}
+
+
+def check_report(r: dict, where: str) -> list[str]:
+    bad: list[str] = []
+
+    def fail(msg: str) -> None:
+        bad.append(f"{where}: {msg}")
+
+    missing = REPORT_KEYS - set(r)
+    if missing:
+        fail(f"missing keys {sorted(missing)}")
+        return bad
+    if r["schema"] != SCHEMA:
+        fail(f"schema {r['schema']!r} != {SCHEMA!r}")
+    ar, ga = r["allreduce"], r["gather"]
+    if ar["after_bytes"] != ar["before_bytes"]:
+        fail(f"bucketing changed payload bytes: {ar['before_bytes']} -> "
+             f"{ar['after_bytes']} (must conserve)")
+    if ar["after_messages"] > ar["before_messages"]:
+        fail(f"rewrite INCREASED allreduce messages: "
+             f"{ar['before_messages']} -> {ar['after_messages']}")
+    if ga["after_issues"] > ga["before_issues"]:
+        fail(f"dedup INCREASED gather issues: "
+             f"{ga['before_issues']} -> {ga['after_issues']}")
+    for i, b in enumerate(r["buckets"]):
+        miss = BUCKET_KEYS - set(b)
+        if miss:
+            fail(f"bucket[{i}] missing keys {sorted(miss)}")
+            continue
+        if b["count"] < 2:
+            fail(f"bucket[{i}] has {b['count']} member(s); buckets pack "
+                 ">= 2 operands, singletons stay eager")
+        if b["padded_bytes"] < b["bytes"]:
+            fail(f"bucket[{i}] padded_bytes {b['padded_bytes']} < payload "
+                 f"{b['bytes']}")
+    n_bucketed = sum(b["count"] for b in r["buckets"])
+    if n_bucketed + r["singles"] != ar["before_messages"]:
+        fail(f"accounting: {n_bucketed} bucketed + {r['singles']} single "
+             f"!= {ar['before_messages']} recorded allreduces")
+    if len(r["buckets"]) + r["singles"] != ar["after_messages"]:
+        fail(f"accounting: {len(r['buckets'])} buckets + {r['singles']} "
+             f"singles != {ar['after_messages']} issued messages")
+    kinds = [k for k, _ in r["order"]]
+    if not set(kinds) <= ORDER_KINDS:
+        fail(f"unknown order kinds {sorted(set(kinds) - ORDER_KINDS)}")
+    if kinds.count("bucket") != len(r["buckets"]):
+        fail(f"order has {kinds.count('bucket')} bucket issues for "
+             f"{len(r['buckets'])} buckets")
+    if kinds.count("single") != r["singles"]:
+        fail(f"order has {kinds.count('single')} single issues for "
+             f"{r['singles']} singles")
+    if kinds.count("gather") != ga["after_issues"]:
+        fail(f"order has {kinds.count('gather')} gather issues for "
+             f"{ga['after_issues']} deduped gathers")
+    # issue-early: the reorder pass front-loads gathers before reductions
+    if "gather" in kinds and kinds.index("gather") != 0:
+        first_red = min(i for i, k in enumerate(kinds) if k != "gather")
+        if any(k == "gather" for k in kinds[first_red:]):
+            fail("gather issued after a reduction: the sink pass "
+                 "front-loads all gather issues")
+    return bad
+
+
+def main(argv=None) -> int:
+    args = argv if argv is not None else sys.argv[1:]
+    path = pathlib.Path(args[0] if args else "SCHEDULE_stepgraph.json")
+    doc = json.loads(path.read_text())
+    bad: list[str] = []
+    if doc.get("schema") != SCHEMA:
+        bad.append(f"top-level schema {doc.get('schema')!r} != {SCHEMA!r}")
+    reports = doc.get("reports", [])
+    if not reports:
+        bad.append("no reports")
+    for r in reports:
+        bad.extend(check_report(
+            r, f"{r.get('config')}@{r.get('topology')}"))
+    multi = [r for r in reports if r.get("pods", 1) > 1]
+    if multi and not any(
+            r["allreduce"]["after_messages"] < r["allreduce"]
+            ["before_messages"] for r in multi):
+        bad.append("no multi-pod schedule shows a message-count reduction "
+                   "— the artifact does not witness the bucketing pass")
+    if bad:
+        print(f"schedule-report check FAILED ({path}):", file=sys.stderr)
+        for b in bad:
+            print(f"  {b}", file=sys.stderr)
+        return 1
+    n_topo = len({r["topology"] for r in reports})
+    total_before = sum(r["allreduce"]["before_messages"] for r in reports)
+    total_after = sum(r["allreduce"]["after_messages"] for r in reports)
+    print(f"schedule-report check OK: {len(reports)} schedules over "
+          f"{n_topo} topologies, allreduce messages "
+          f"{total_before} -> {total_after}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

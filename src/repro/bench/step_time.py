@@ -16,7 +16,12 @@ and the CI regression gate diffs it like any ``allgather`` cell.
   body at use time and re-issued by the remat bwd;
 * ``prefetch`` — the same step with the ``prefetch`` opt: the unrolled
   ``ParamGroup`` walk (``models.parallel``) that issues the next unit's
-  gathers as ``AsyncCollectiveHandle``s while the current unit computes.
+  gathers as ``AsyncCollectiveHandle``s while the current unit computes;
+* ``stepgraph`` — the same step with the ``stepgraph`` opt: the step's
+  scalar stats and per-leaf gradient reductions recorded into one
+  ``CollectiveGraph`` (``repro.comm.stepgraph``) and re-issued as the
+  bucketed/deduped/reordered schedule — fewer, larger bridge messages,
+  bit-identical outputs.
 
 Both schemes unroll the unit loop, so the measured delta isolates the
 prefetch engine (gather placement and issue order) — rolled-scan vs
@@ -40,6 +45,7 @@ deterministic per config, so quick (CI) and full sweeps land on the same
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from types import MappingProxyType
 from typing import Optional
@@ -105,7 +111,21 @@ def _scan_copies(eqn) -> int:
     return min(int(unroll) or 1, length)
 
 
-def _walk(jaxpr, sizes: dict, pod_names: set, acc: list,
+@dataclasses.dataclass(frozen=True)
+class LinkEntry:
+    """One physical collective message in a traced step's lowering: the
+    unit the inventory sums and the bucketing/dedup tests count."""
+
+    kind: str                   # "ar" | "ag" | "rs" | "a2a" | "perm"
+    names: tuple[str, ...]      # axis names the group spans
+    tier: str                   # "fast" | "slow" (any pod axis -> slow)
+    out_bytes: int              # result payload of the op
+    link_bytes: float           # ring-model per-chip wire bytes, one copy
+    copies: float               # static lowered copies (unrolled scans)
+    group_size: int             # ranks per replica group
+
+
+def _walk(jaxpr, sizes: dict, pod_names: set, entries: list,
           mult: float = 1.0) -> None:
     # within one jaxpr, identical collective eqns over the same operands are
     # one HLO op after CSE — count them once
@@ -134,7 +154,7 @@ def _walk(jaxpr, sizes: dict, pod_names: set, acc: list,
             # body is the one exception (``unroll`` static copies)
             inner_mult = mult * _scan_copies(eqn) if prim == "scan" else mult
             for inner in _inner_jaxprs(eqn):
-                _walk(inner, sizes, pod_names, acc, inner_mult)
+                _walk(inner, sizes, pod_names, entries, inner_mult)
             continue
         if not names:
             continue            # positional-axes only: no wire traffic
@@ -163,10 +183,32 @@ def _walk(jaxpr, sizes: dict, pod_names: set, acc: list,
             link = out_b * (n - 1) / n
         else:                   # ppermute -> collective-permute
             link = float(out_b)
-        if any(a in pod_names for a in names):
-            acc[1] += link * mult   # group spans pods: the bridge tier
-        else:
-            acc[0] += link * mult
+        tier = "slow" if any(a in pod_names for a in names) else "fast"
+        entries.append(LinkEntry(kind=kind, names=names, tier=tier,
+                                 out_bytes=out_b, link_bytes=link,
+                                 copies=mult, group_size=n))
+
+
+def _traced_entries(fn, example_args, vc) -> list[LinkEntry]:
+    closed = jax.make_jaxpr(fn)(*example_args)
+    try:
+        from jax.interpreters.partial_eval import dce_jaxpr
+    except ImportError:                       # pragma: no cover
+        from jax._src.interpreters.partial_eval import dce_jaxpr
+    jaxpr, _ = dce_jaxpr(closed.jaxpr, [True] * len(closed.jaxpr.outvars))
+    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+    entries: list[LinkEntry] = []
+    _walk(jaxpr, sizes, set(vc.slow_names), entries)
+    return entries
+
+
+def link_entries(fn, example_args, vc) -> list[LinkEntry]:
+    """Per-message inventory of ``fn``'s lowering: one ``LinkEntry`` per
+    physical collective (post-DCE, per-jaxpr CSE applied the way jit
+    applies it, ``axis_index_groups``-aware).  This is how the step-graph
+    tests verify bucketing/dedup did what they claim — counting entries
+    counts messages, not bytes."""
+    return _traced_entries(fn, example_args, vc)
 
 
 def link_inventory(fn, example_args, vc) -> tuple[float, float]:
@@ -178,17 +220,16 @@ def link_inventory(fn, example_args, vc) -> tuple[float, float]:
     ``out*(n-1)``, AR ``2*out*(n-1)/n``, A2A ``out*(n-1)/n``, permute
     ``out``.  Loop bodies count once (static module text); size-1 groups are
     skipped; a group naming a slow axis is charged to the bridge tier.
+    Sums ``link_entries`` — the per-message detail the step-graph tests
+    assert on.
     """
-    closed = jax.make_jaxpr(fn)(*example_args)
-    try:
-        from jax.interpreters.partial_eval import dce_jaxpr
-    except ImportError:                       # pragma: no cover
-        from jax._src.interpreters.partial_eval import dce_jaxpr
-    jaxpr, _ = dce_jaxpr(closed.jaxpr, [True] * len(closed.jaxpr.outvars))
-    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
-    acc = [0.0, 0.0]
-    _walk(jaxpr, sizes, set(vc.slow_names), acc)
-    return acc[0], acc[1]
+    fast = slow = 0.0
+    for e in _traced_entries(fn, example_args, vc):
+        if e.tier == "slow":
+            slow += e.link_bytes * e.copies
+        else:
+            fast += e.link_bytes * e.copies
+    return fast, slow
 
 
 # ---------------------------------------------------------------------------
@@ -300,8 +341,21 @@ class StepPrefetchScheme(StepTimeScheme):
     opts = ("prefetch",)
 
 
+class StepStepgraphScheme(StepTimeScheme):
+    """The step-graph-optimized step: scalar stats + per-leaf gradient
+    reductions recorded into one ``CollectiveGraph`` and re-issued as the
+    rewritten schedule (``repro.comm.stepgraph``) — small same-axes
+    allreduces packed into flat buckets sized off the tuning table, issues
+    front-loaded behind one shared ordering token.  Fewer, larger bridge
+    messages; outputs bit-identical to ``eager``."""
+
+    name = "stepgraph"
+    opts = ("stepgraph",)
+
+
 EAGER = register_scheme(StepEagerScheme())
 PREFETCH = register_scheme(StepPrefetchScheme())
+STEPGRAPH = register_scheme(StepStepgraphScheme())
 
 
 # ---------------------------------------------------------------------------

@@ -22,14 +22,21 @@ free functions were removed after their deprecation release):
 * ``tuning``        — the ``scheme="auto"`` backend: the persisted
   ``TuningTable`` (measured winners per family x topology x dtype x size
   bucket, ``TUNING_default.json``) and the ``resolve()`` chain that falls
-  back to the ``core.plans`` closed forms on unmeasured cells.
+  back to the ``core.plans`` closed forms on unmeasured cells;
+* ``stepgraph``     — the step-graph collective optimizer:
+  ``Communicator.record()`` returns a ``GraphRecorder`` that records a
+  whole step's collectives, then buckets / dedups / reorders the schedule
+  before applying it (``record -> rewrite -> apply``).
 """
 
-from repro.comm import handle, pipeline, primitives, registry, tuning, window
+from repro.comm import (handle, pipeline, primitives, registry, stepgraph,
+                        tuning, window)
 from repro.comm.communicator import Communicator
 from repro.comm.handle import AsyncCollectiveHandle
 from repro.comm.registry import (CollectiveScheme, get_scheme,
                                  register_scheme, scheme_names, schemes_for)
+from repro.comm.stepgraph import (CollectiveGraph, Deferred, GraphRecorder,
+                                  Schedule, ScheduleResult)
 from repro.comm.tuning import (Resolution, TuningTable, resolve_scheme,
                                use_table)
 from repro.comm.window import SharedWindow, WindowEpochError
@@ -38,6 +45,8 @@ __all__ = [
     "AsyncCollectiveHandle", "Communicator", "SharedWindow",
     "WindowEpochError", "CollectiveScheme", "get_scheme", "register_scheme",
     "scheme_names", "schemes_for", "handle", "pipeline", "primitives",
-    "registry", "tuning", "window",
+    "registry", "stepgraph", "tuning", "window",
     "Resolution", "TuningTable", "resolve_scheme", "use_table",
+    "CollectiveGraph", "Deferred", "GraphRecorder", "Schedule",
+    "ScheduleResult",
 ]

@@ -104,6 +104,13 @@ class Communicator:
         return self.slow_axis
 
     @property
+    def axes(self) -> tuple[str, ...]:
+        """Every mesh axis this communicator spans, slow tier first (the
+        ``lax.psum`` order of the naive lowering)."""
+        return (p._axes(self.slow_axis) if self.slow_axis else ()) + \
+            tuple(p._axes(self.fast_axis))
+
+    @property
     def num_nodes(self) -> Optional[int]:
         return self.pods
 
@@ -331,3 +338,18 @@ class Communicator:
             return x
         from jax import lax
         return lax.psum(x, p._axes(self.slow_axis))
+
+    # -- step-graph optimizer -------------------------------------------------
+    def record(self, *, table=None):
+        """Open a step-graph recording against this communicator: record
+        collectives (``rec.allreduce``/``rec.gather``), get ``Deferred``
+        refs back, then ``rec.run()`` to bucket/dedup/reorder the whole
+        schedule and resolve the refs (``repro.comm.stepgraph``)."""
+        from repro.comm.stepgraph import GraphRecorder
+        return GraphRecorder(self, table=table)
+
+    def apply_schedule(self, schedule, values: dict) -> dict:
+        """Execute an already-optimized ``stepgraph.Schedule`` against this
+        communicator (``values``: nid -> operand; returns nid -> result)."""
+        from repro.comm import stepgraph
+        return stepgraph.apply_schedule(self, schedule, values)

@@ -187,6 +187,18 @@ class CollectiveScheme:
         Overridden per scheme; 1 = any size fits."""
         return 1
 
+    def bucketable(self, family: str) -> bool:
+        """True when packing several same-axes/same-dtype operands into one
+        flat buffer and running this scheme once over the concatenation is
+        elementwise-equivalent to running it once per operand — the
+        contract the step-graph optimizer's bucketing pass rewrites under.
+        Holds for any replicated elementwise reduction (``psum``: the sum
+        of a concatenation IS the concatenation of the sums); a shared
+        result is a ``SharedWindow`` over the *packed* layout, which the
+        unpack codec cannot slice back per-leaf."""
+        return family == "psum" and self.result_class == "replicated" \
+            and self.supports(family)
+
     # -- model-predicted latency (cold-start for scheme="auto") --------------
     def predicted_time(self, family: str, *, pods: int, chips: int,
                        elems: int, elem_bytes: int = 4,

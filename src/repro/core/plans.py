@@ -419,6 +419,121 @@ def overlap_efficiency(traffic: CollectiveTraffic, *, n_chunks: int,
     return serial / pipe if pipe > 0 else 1.0
 
 
+# ---------------------------------------------------------------------------
+# Schedule-level cost model (the step-graph optimizer's pricing).
+# ---------------------------------------------------------------------------
+
+#: Fixed per-message dispatch cost of the schedule model: collective launch +
+#: rendezvous overhead that the per-byte bandwidth terms cannot see.  This is
+#: the term bucketing amortizes — N tiny allreduces pay N alphas, one packed
+#: bucket pays one.
+SCHEDULE_ALPHA = 5e-6
+
+
+def schedule_time(message_bytes: Sequence[int], *, num_nodes: int,
+                  ranks_per_node: int, scheme: str = "hier",
+                  fast_bw: float = 100e9, slow_bw: float = 25e9,
+                  alpha: float = SCHEDULE_ALPHA) -> float:
+    """Latency of a whole schedule of allreduce messages issued back-to-back.
+
+    Each message is priced by ``collective_time_model`` over its
+    ``allreduce_traffic`` closed form, plus a fixed per-message ``alpha``
+    (launch/rendezvous cost).  The sum is the serial model — the step-graph
+    optimizer compares *schedules* (many small messages vs few packed ones),
+    so the per-message constant is the load-bearing term: bandwidth bytes
+    are conserved by packing, alphas are not.
+    """
+    total = 0.0
+    for m in message_bytes:
+        tr = allreduce_traffic(scheme=scheme, num_nodes=num_nodes,
+                               ranks_per_node=ranks_per_node, msg_bytes=m)
+        total += collective_time_model(tr, num_nodes=num_nodes,
+                                       ranks_per_node=ranks_per_node,
+                                       fast_bw=fast_bw, slow_bw=slow_bw)
+        total += alpha
+    return total
+
+
+def greedy_buckets(sizes: Sequence[int],
+                   target_bytes: int) -> tuple[tuple[int, ...], ...]:
+    """Order-preserving greedy partition of message indices into buckets.
+
+    Items are packed in program order; a bucket closes once its byte total
+    reaches ``target_bytes`` (an item larger than the target gets a bucket
+    of its own).  Order preservation matters: the packed buffer's layout is
+    the issue order, so gradients produced early fill early buckets and the
+    first reduction can issue before the last leaf exists.
+    """
+    if target_bytes < 1:
+        raise ValueError(f"target_bytes must be >= 1, got {target_bytes}")
+    buckets: list[tuple[int, ...]] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for i, s in enumerate(sizes):
+        if s < 0:
+            raise ValueError(f"negative message size {s} at index {i}")
+        cur.append(i)
+        cur_bytes += s
+        if cur_bytes >= target_bytes:
+            buckets.append(tuple(cur))
+            cur, cur_bytes = [], 0
+    if cur:
+        buckets.append(tuple(cur))
+    return tuple(buckets)
+
+
+def _pad_up(nbytes: int, pad_to: int) -> int:
+    if pad_to <= 1:
+        return nbytes
+    return ((nbytes + pad_to - 1) // pad_to) * pad_to
+
+
+def bucket_time_model(sizes: Sequence[int], target_bytes: int, *,
+                      num_nodes: int, ranks_per_node: int,
+                      scheme: str = "hier", pad_to: int = 1,
+                      fast_bw: float = 100e9, slow_bw: float = 25e9,
+                      alpha: float = SCHEDULE_ALPHA) -> float:
+    """``schedule_time`` of the bucketed schedule: the messages are packed
+    by ``greedy_buckets(sizes, target_bytes)``, each bucket padded up to a
+    multiple of ``pad_to`` bytes (the reduction scheme's tiling divisor),
+    and the packed buckets priced as the schedule.  Padding is a real cost
+    the model must see: an oversized target with a coarse ``pad_to`` can
+    lose to smaller buckets."""
+    packed = []
+    for bucket in greedy_buckets(sizes, target_bytes):
+        packed.append(_pad_up(sum(sizes[i] for i in bucket), pad_to))
+    return schedule_time(packed, num_nodes=num_nodes,
+                         ranks_per_node=ranks_per_node, scheme=scheme,
+                         fast_bw=fast_bw, slow_bw=slow_bw, alpha=alpha)
+
+
+#: Candidate bucket targets swept by ``best_bucket_bytes`` — spans the
+#: tuning table's measured size range (2**10..2**22 bytes) so the picked
+#: sweet spot always lands on (or near) a measured cell.
+BUCKET_BYTES_CANDIDATES = (1 << 14, 1 << 16, 1 << 18, 1 << 20, 1 << 22)
+
+
+def best_bucket_bytes(sizes: Sequence[int], *, num_nodes: int,
+                      ranks_per_node: int, scheme: str = "hier",
+                      pad_to: int = 1,
+                      candidates: Sequence[int] = BUCKET_BYTES_CANDIDATES,
+                      fast_bw: float = 100e9, slow_bw: float = 25e9,
+                      alpha: float = SCHEDULE_ALPHA) -> int:
+    """Model-predicted bucket target: argmin of ``bucket_time_model`` over
+    ``candidates`` (ties toward the smaller target — smaller buckets free
+    their operands earlier).  The step-graph optimizer seeds this with the
+    tuning table's measured sweet spot when one exists; the model decides
+    only off-table."""
+    if not candidates:
+        raise ValueError("no bucket-size candidates")
+    return min(candidates,
+               key=lambda t: (bucket_time_model(
+                   sizes, t, num_nodes=num_nodes,
+                   ranks_per_node=ranks_per_node, scheme=scheme,
+                   pad_to=pad_to, fast_bw=fast_bw, slow_bw=slow_bw,
+                   alpha=alpha), t))
+
+
 def best_chunk_count(traffic: CollectiveTraffic, *, num_nodes: int,
                      ranks_per_node: int, candidates: Sequence[int] = (1, 2,
                                                                        4, 8),

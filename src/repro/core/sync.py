@@ -22,7 +22,7 @@ def barrier(token: jax.Array, axis) -> jax.Array:
     """Heavy-weight barrier: a scalar allreduce over ``axis`` (the paper's
     ``MPI_Barrier(sharedmemComm)``).  Returns a value data-dependent on every
     participant — thread it into downstream computation to enforce ordering."""
-    return lax.psum(token, _axes(axis))
+    return lax.psum(token, _axes(axis))  # raw-collective: the barrier primitive itself
 
 
 def flag_chain(token: jax.Array, axis) -> jax.Array:
@@ -43,4 +43,5 @@ def leader_flag(token: jax.Array, *, fast_axis) -> jax.Array:
     are ready — the paper's first barrier, light-weight flavor."""
     me = axis_index(fast_axis)
     contrib = jnp.where(me == 0, jnp.zeros_like(token), token)
+    # raw-collective: the barrier primitive itself
     return lax.psum(contrib, _axes(fast_axis))

@@ -160,7 +160,8 @@ def decode_logits(x: jax.Array, unemb: jax.Array, ctx: ParallelCtx, *,
     if softcap:
         logits = softcap * jnp.tanh(logits / softcap)
     if ctx.tp_axis:
-        logits = lax.all_gather(logits, ctx.tp_axis, axis=-1, tiled=True)
+        logits = lax.all_gather(  # raw-collective: flat tp fast path
+            logits, ctx.tp_axis, axis=-1, tiled=True)
     return logits
 
 

@@ -57,6 +57,10 @@ class ParallelCtx:
     #   prefetch[=N]— async layer-parameter prefetch: issue layer k+1's FSDP
     #                 window gather while layer k computes, <= N groups in
     #                 flight (default 2); hier mode only, see ParamGroup
+    #   stepgraph   — step-graph collective optimizer: record the step's
+    #                 whole collective schedule, then bucket small same-axes
+    #                 allreduces / dedup gathers / issue-early-resolve-late
+    #                 (repro.comm.stepgraph); off by default
     opts: frozenset = frozenset()
     overlap_chunks: int = 2
 
@@ -84,6 +88,14 @@ class ParallelCtx:
             if o.startswith("prefetch="):
                 return max(0, int(o[len("prefetch="):]))
         return 0
+
+    @property
+    def stepgraph(self) -> bool:
+        """Step-graph collective optimizer: the train step records its
+        collectives into a ``CollectiveGraph`` and runs the rewritten
+        (bucketed / deduped / reordered) schedule instead of issuing
+        eagerly.  Bit-identical outputs; off by default."""
+        return "stepgraph" in self.opts
 
     # ---- indices -----------------------------------------------------------
     @property
@@ -155,11 +167,78 @@ class ParallelCtx:
                 return tp_comm.matmul_rs(x, w, axis=dim, n_chunks=nc)
         return self.rs_tokens(x @ w, dim)
 
-    def reduce_grads(self, grads):
+    def grad_reduce_axes(self, meta) -> tuple[str, ...]:
+        """Axes a gradient leaf still needs to be summed over — the single
+        source of truth the step-graph optimizer rewrites under.
+
+        The AD transpose of the hier weight gather already reduce-scattered
+        over the fsdp axes; tp-sharded weights never replicate over the tp
+        axis.  What is left: the bridge (pod) in hier mode — plus the fsdp
+        axes for the tiny fsdp-replicated leaves (norms); the full dp tier
+        in naive mode; plus the tp axis for tp-replicated leaves in both.
+        Bridge axes come FIRST so the naive lowering (``lax.psum`` over
+        slow + fast) matches the axes order exactly."""
+        axes: tuple[str, ...] = ()
+        if self.mode == "hier":
+            if self.pod_axis:
+                axes += (self.pod_axis,)
+            if meta.fsdp_dim is None and self.fsdp_axes:
+                axes += tuple(self.fsdp_axes)
+        else:
+            axes += tuple(self.dp_axes)
+        if meta.tp_dim is None and self.tp_axis:
+            axes += (self.tp_axis,)
+        return axes
+
+    def _axes_comm(self, axes: tuple[str, ...]) -> Communicator:
+        """The two-tier communicator that reduces over EXACTLY ``axes``:
+        pod is the slow tier when present alongside fast axes, else the
+        whole (single-tier) communicator."""
+        fast = tuple(a for a in axes if a != self.pod_axis)
+        slow = self.pod_axis if (self.pod_axis in axes and fast) else None
+        return Communicator(fast_axis=fast or axes, slow_axis=slow)
+
+    def reduce_grads(self, grads, metas=None, *, compress=None,
+                     recorder=None):
         """Bridge gradient reduction.  Gradients already match the param
         layout w.r.t. data (AD transposes the hier window reads into
         intra-pod reduce-scatters); what remains is the cross-pod (bridge)
-        psum in hier mode, or the flat dp allreduce in naive mode."""
+        psum in hier mode, or the flat dp allreduce in naive mode.
+
+        With ``metas`` (a leaf-aligned ``PMeta`` sequence) the reduction is
+        per-leaf over ``grad_reduce_axes(meta)`` through ``Communicator``
+        dispatch — the schedule-driven path.  ``compress`` quantizes
+        bridge-crossing leaves (hier mode) before they hit the slow tier;
+        ``recorder`` (a ``Communicator.record()`` ``GraphRecorder``) defers
+        every uncompressed reduction into the step graph and returns
+        ``Deferred`` leaves — resolve them with the ``ScheduleResult`` of
+        ``recorder.run()``.  Without ``metas``: the legacy whole-tree
+        reduction (every leaf crosses the same axes)."""
+        if metas is not None:
+            leaves = jax.tree.leaves(grads)
+            reduced, comms = [], {}
+            for i, (g, meta) in enumerate(zip(leaves, metas)):
+                axes = self.grad_reduce_axes(meta)
+                if not axes:
+                    reduced.append(g)
+                    continue
+                # bridge compression: the slow-tier (cross-pod) reduction
+                # is quantized; on podless meshes it applies to every dp
+                # reduction (keeps the path exercised at small scale).
+                bridge = (self.pod_axis in axes) if self.pod_axis else True
+                if compress is not None and self.mode == "hier" and bridge:
+                    reduced.append(compress(g, axes))
+                    continue
+                if recorder is not None:
+                    reduced.append(recorder.allreduce(
+                        g, axes=axes, scheme="naive", key=("grad", i)))
+                    continue
+                comm = comms.get(axes)
+                if comm is None:
+                    comm = comms[axes] = self._axes_comm(axes)
+                reduced.append(comm.allreduce(g, scheme="naive",
+                                              result="replicated"))
+            return jax.tree.unflatten(jax.tree.structure(grads), reduced)
         if self.mode == "hier":
             if self.pod_axis is None:
                 return grads
@@ -190,7 +269,8 @@ class ParallelCtx:
         if not self.tp_axis:
             return x
         from jax.ad_checkpoint import checkpoint_name
-        out = lax.all_gather(x, self.tp_axis, axis=dim, tiled=True)
+        out = lax.all_gather(  # raw-collective: ag_tokens tp fast path (allowlisted)
+            x, self.tp_axis, axis=dim, tiled=True)
         return checkpoint_name(out, "ag_out")
 
     def rs_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:
@@ -203,7 +283,7 @@ class ParallelCtx:
     def psum_tp(self, x: jax.Array) -> jax.Array:
         if not self.tp_axis:
             return x
-        return lax.psum(x, self.tp_axis)
+        return lax.psum(x, self.tp_axis)  # raw-collective: psum_tp fast path
 
     def group_all_gather(self, x: jax.Array, *, group: int, dim: int
                          ) -> jax.Array:
@@ -213,15 +293,16 @@ class ParallelCtx:
             return x
         n = self.tp
         groups = [list(range(s, s + group)) for s in range(0, n, group)]
-        return lax.all_gather(x, self.tp_axis, axis=dim, tiled=True,
-                              axis_index_groups=groups)
+        return lax.all_gather(  # raw-collective: grouped tp fast path
+            x, self.tp_axis, axis=dim, tiled=True, axis_index_groups=groups)
 
     def group_psum(self, x: jax.Array, *, group: int) -> jax.Array:
         if not self.tp_axis or group == 1:
             return x
         n = self.tp
         groups = [list(range(s, s + group)) for s in range(0, n, group)]
-        return lax.psum(x, self.tp_axis, axis_index_groups=groups)
+        return lax.psum(  # raw-collective: grouped tp fast path
+            x, self.tp_axis, axis_index_groups=groups)
 
     def pmax_tp(self, x: jax.Array) -> jax.Array:
         """Cross-shard max.  Implemented as all_gather+max rather than pmax:
@@ -229,6 +310,7 @@ class ParallelCtx:
         code (as a softmax stabilizer)."""
         if not self.tp_axis:
             return x
+        # raw-collective: pmax_tp tp fast path
         g = lax.all_gather(x, self.tp_axis)   # (tp, ...)
         return jnp.max(g, axis=0)
 

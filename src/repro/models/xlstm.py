@@ -309,6 +309,7 @@ def slstm_block(x_sp, p, meta, ctx: ParallelCtx, cfg, *,
             full = jnp.zeros((B, d), s.dtype)
             full = lax.dynamic_update_slice_in_dim(
                 full, s * jnp.asarray(primary, s.dtype), seq_idx * bs, 0)
+            # raw-collective: flat tp fast path (one group, one schedule)
             return lax.psum(full, ctx.tp_axis)
         new_state = dict(zip(("h", "c", "n", "m"), map(widen, final)))
 

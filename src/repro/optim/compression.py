@@ -40,6 +40,7 @@ def int8_bridge_psum(g: jax.Array, axes, *, stochastic: bool = False,
     q, scale = _quantize(g32, axes, stochastic=stochastic, key=key)
     # int16 on the wire: exact for <= 256 pods (sum <= 127*256 < 2^15) and
     # half the fp32 bridge bytes; int8 itself would overflow at 2 pods.
+    # raw-collective: int16 wire format, registry has no dtype dispatch
     total = lax.psum(q.astype(jnp.int16), axes)
     return (total.astype(jnp.float32) * scale).astype(g.dtype)
 
@@ -59,6 +60,7 @@ def make_error_feedback(params_like):
         # (P-1)*g per step and the feedback would diverge instead of
         # correcting rounding bias.
         new_err = g32 - q.astype(jnp.float32) * scale
+        # raw-collective: int16 wire format (same as bridge path)
         total = lax.psum(q.astype(jnp.int16), axes)
         out = (total.astype(jnp.float32) * scale).astype(g.dtype)
         return out, new_err

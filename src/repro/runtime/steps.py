@@ -21,7 +21,6 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.substrate.compat import shard_map
@@ -73,22 +72,11 @@ def batch_specs(cfg: ModelConfig, topo: MeshTopology) -> dict:
 def grad_reduce_axes(meta: PMeta, ctx: ParallelCtx) -> tuple[str, ...]:
     """Axes a gradient leaf still needs to be summed over.
 
-    The AD transpose of the hier weight gather already reduce-scattered over
-    ``data``; tp-sharded weights never replicate over ``model``.  What is
-    left: the bridge (pod) in hier mode; (pod, data) in naive mode; plus
-    ``model`` for tp-replicated weights in both.
+    Thin wrapper over ``ParallelCtx.grad_reduce_axes`` — the logic moved
+    there so ``reduce_grads`` and the step-graph optimizer share one source
+    of truth; this spelling stays for existing callers.
     """
-    axes: tuple[str, ...] = ()
-    if ctx.mode == "hier":
-        if ctx.pod_axis:
-            axes += (ctx.pod_axis,)
-        if meta.fsdp_dim is None and ctx.fsdp_axes:
-            axes += tuple(ctx.fsdp_axes)  # tiny replicated leaves (norms)
-    else:
-        axes += tuple(ctx.dp_axes)
-    if meta.tp_dim is None and ctx.tp_axis:
-        axes += (ctx.tp_axis,)
-    return axes
+    return ctx.grad_reduce_axes(meta)
 
 
 # ---------------------------------------------------------------------------
@@ -143,26 +131,28 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
         (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
         # scheme="auto": the tuning table picks the reduction schedule per
         # topology/size; the replicated constraint (not a scheme name)
-        # keeps the result a plain per-rank scalar, never a window
-        loss_g = world.allreduce(loss_sum, result="replicated")
-        cnt_g = world.allreduce(cnt, result="replicated")
-
-        # gradient bridge (the paper's scheme vs the flat pure-MPI reduce)
-        gl = jax.tree.leaves(grads)
-        reduced = []
-        for g, meta in zip(gl, meta_leaves):
-            axes = grad_reduce_axes(meta, ctx)
-            if axes:
-                # bridge compression: the slow-tier (cross-pod) reduction is
-                # quantized; on podless meshes it applies to every dp
-                # reduction (keeps the path exercised at small scale).
-                bridge = (ctx.pod_axis in axes) if ctx.pod_axis else True
-                if compress is not None and ctx.mode == "hier" and bridge:
-                    g = compress(g, axes)
-                else:
-                    g = lax.psum(g, axes)
-            reduced.append(g)
-        grads = jax.tree.unflatten(jax.tree.structure(grads), reduced)
+        # keeps the result a plain per-rank scalar, never a window.
+        # The gradient bridge (the paper's scheme vs the flat pure-MPI
+        # reduce) goes through ctx.reduce_grads; with the stepgraph opt the
+        # whole schedule is recorded first, then bucketed/reordered and run
+        # as one optimized schedule — outputs bit-identical either way.
+        if ctx.stepgraph:
+            rec = world.record()
+            rl = rec.allreduce(loss_sum, axes=world.axes, scheme="auto",
+                               result="replicated", bucketable=False,
+                               key="loss")
+            rc = rec.allreduce(cnt, axes=world.axes, scheme="auto",
+                               result="replicated", bucketable=False,
+                               key="cnt")
+            grads = ctx.reduce_grads(grads, meta_leaves, compress=compress,
+                                     recorder=rec)
+            res = rec.run()
+            loss_g, cnt_g = res[rl], res[rc]
+            grads = res.resolve(grads)
+        else:
+            loss_g = world.allreduce(loss_sum, result="replicated")
+            cnt_g = world.allreduce(cnt, result="replicated")
+            grads = ctx.reduce_grads(grads, meta_leaves, compress=compress)
         grads = jax.tree.map(lambda g: g / cnt_g, grads)
 
         # global grad norm: each leaf is tiled over the axes it is sharded on
@@ -242,7 +232,7 @@ def cluster_ctx(vc, *, mode: str = "hier", compute_dtype=jnp.float32,
 def make_step_bench(cfg: ModelConfig, vc, *, opts=(), unroll: int = 1,
                     lr: float = 3e-4, weight_decay: float = 0.1,
                     clip: float = 1.0, global_batch: int = 8, seq: int = 32,
-                    seed: int = 0):
+                    seed: int = 0, schedule_sink=None):
     """Whole-train-step bench body for one cluster: forward + backward +
     gradient bridge + optimizer, as a ``repro.bench`` case.
 
@@ -258,6 +248,11 @@ def make_step_bench(cfg: ModelConfig, vc, *, opts=(), unroll: int = 1,
     baseline unrolls all units (``unroll=cfg.n_units``) so it differs from
     the prefetch schedule ONLY in gather placement — scan-vs-unroll is an
     orthogonal code-layout effect the family deliberately holds constant.
+
+    With the ``stepgraph`` opt the scalar stats and the per-leaf gradient
+    reductions are recorded into one ``CollectiveGraph`` and run as the
+    bucketed/reordered schedule; ``schedule_sink`` (a list) receives the
+    schedule ``report()`` dict at trace time for inspection.
     """
     ctx = cluster_ctx(vc, opts=opts)
     sizes = dict(zip(vc.axis_names, vc.axis_shapes))
@@ -290,14 +285,22 @@ def make_step_bench(cfg: ModelConfig, vc, *, opts=(), unroll: int = 1,
         # one fixed program per topology (auto would couple the bench body
         # to the tuning table's per-topology winner, and scatter-based
         # winners cannot scatter a 0-d operand anyway)
-        loss_g = world.allreduce(loss_sum, scheme="naive")
-        cnt_g = world.allreduce(cnt, scheme="naive")
-        gl = jax.tree.leaves(grads)
-        reduced = []
-        for g, meta in zip(gl, meta_leaves):
-            axes = grad_reduce_axes(meta, ctx)
-            reduced.append(lax.psum(g, axes) if axes else g)
-        grads = jax.tree.unflatten(jax.tree.structure(grads), reduced)
+        if ctx.stepgraph:
+            rec = world.record()
+            rl = rec.allreduce(loss_sum, axes=world.axes, scheme="naive",
+                               key="loss")
+            rc = rec.allreduce(cnt, axes=world.axes, scheme="naive",
+                               key="cnt")
+            grads = ctx.reduce_grads(grads, meta_leaves, recorder=rec)
+            res = rec.run()
+            if schedule_sink is not None:
+                schedule_sink.append(res.report())
+            loss_g, cnt_g = res[rl], res[rc]
+            grads = res.resolve(grads)
+        else:
+            loss_g = world.allreduce(loss_sum, scheme="naive")
+            cnt_g = world.allreduce(cnt, scheme="naive")
+            grads = ctx.reduce_grads(grads, meta_leaves)
         grads = jax.tree.map(lambda g: g / cnt_g, grads)
         gsq = jnp.float32(0.0)
         for g, meta in zip(jax.tree.leaves(grads), meta_leaves):

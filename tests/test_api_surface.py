@@ -61,3 +61,66 @@ def test_check_allows_constructor_spellings(tmp_path):
         "fast_axis: str = 'data'   # annotated field, not a call kwarg\n")
     assert check_api_surface.violations(tmp_path) == []
     assert check_api_surface.main([str(tmp_path)]) == 0
+
+
+# ---- raw lax.psum / lax.all_gather check ------------------------------------
+def test_raw_collective_caught(tmp_path):
+    bad = tmp_path / "src" / "repro" / "models"
+    bad.mkdir(parents=True)
+    (bad / "rogue.py").write_text(
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    return lax.psum(x, 'data')\n"
+        "def g(x):\n"
+        "    return lax.all_gather(x, 'data', axis=0, tiled=True)\n")
+    hits = check_api_surface.raw_violations(tmp_path)
+    assert len(hits) == 2
+    assert "rogue.py:3" in hits[0] and "rogue.py:5" in hits[1]
+    assert check_api_surface.main([str(tmp_path)]) == 1
+
+
+def test_raw_collective_pragma_allows(tmp_path):
+    ok = tmp_path / "src" / "repro" / "models"
+    ok.mkdir(parents=True)
+    (ok / "fine.py").write_text(
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    return lax.psum(x, 'tp')  # raw-collective: tp fast path\n")
+    assert check_api_surface.raw_violations(tmp_path) == []
+    assert check_api_surface.main([str(tmp_path)]) == 0
+
+
+def test_raw_collective_allowed_paths(tmp_path):
+    for rel in ("src/repro/comm", "src/repro/substrate",
+                "src/repro/kernels"):
+        d = tmp_path / rel
+        d.mkdir(parents=True)
+        (d / "impl.py").write_text(
+            "from jax import lax\n"
+            "def f(x):\n"
+            "    return lax.psum(x, 'data')\n")
+    assert check_api_surface.raw_violations(tmp_path) == []
+
+
+def test_raw_collective_commented_call_not_flagged(tmp_path):
+    ok = tmp_path / "src" / "repro" / "models"
+    ok.mkdir(parents=True)
+    (ok / "doc.py").write_text(
+        "# the old path used lax.psum(x, 'data') directly\n"
+        "def f(x):\n"
+        "    return x\n")
+    assert check_api_surface.raw_violations(tmp_path) == []
+
+
+def test_raw_collective_pragma_on_preceding_line_allows(tmp_path):
+    ok = tmp_path / "src" / "repro" / "models"
+    ok.mkdir(parents=True)
+    (ok / "long.py").write_text(
+        "from jax import lax\n"
+        "def f(x):\n"
+        "    # raw-collective: call line too long for an inline pragma\n"
+        "    return lax.psum(x, ('pod', 'data', 'model', 'extra_axis'))\n"
+        "def g(x):\n"
+        "    return lax.psum(x, 'data')   # two lines below the pragma:\n")
+    hits = check_api_surface.raw_violations(tmp_path)
+    assert len(hits) == 1 and "long.py:6" in hits[0]

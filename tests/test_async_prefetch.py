@@ -199,8 +199,9 @@ def test_cluster_ctx_strips_prefetch_on_size1_store():
 def test_step_time_registry_wiring():
     from repro.bench import step_time  # noqa: F401  (registers schemes)
     from repro.comm.registry import scheme_names, schemes_for
-    assert {"eager", "prefetch"} <= set(scheme_names())
-    assert [s.name for s in schemes_for("step_time")] == ["eager", "prefetch"]
+    assert {"eager", "prefetch", "stepgraph"} <= set(scheme_names())
+    assert [s.name for s in schemes_for("step_time")] == \
+        ["eager", "prefetch", "stepgraph"]
 
 
 @needs8
@@ -210,8 +211,9 @@ def test_step_time_cases_traffic_recorded():
     3-scalar result on node 0, and one case per (config, scheme)."""
     from repro.bench import step_time as st
     cases = list(st.step_time_cases(VC2))
-    assert sorted(c.scheme for c in cases) == ["eager", "eager",
-                                               "prefetch", "prefetch"]
+    assert sorted(c.scheme for c in cases) == \
+        ["eager", "eager", "prefetch", "prefetch",
+         "stepgraph", "stepgraph"]
     for c in cases:
         assert c.family == "step_time"
         assert c.traffic.fast_bytes > 0

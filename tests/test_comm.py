@@ -90,7 +90,7 @@ def test_registry_entries_and_errors():
     # force it so the registry contents don't depend on test order
     from repro.bench import step_time  # noqa: F401
     assert set(scheme_names()) == {"naive", "hier", "shared", "pipelined",
-                                   "eager", "prefetch"}
+                                   "eager", "prefetch", "stepgraph"}
     assert get_scheme("shared").result_class == "shared"
     assert get_scheme("hier").result_class == "replicated"
     assert get_scheme("pipelined").result_class == "replicated"

@@ -1,0 +1,311 @@
+"""The step-graph collective optimizer (``repro.comm.stepgraph``).
+
+Covers the tentpole surface: the pack/unpack codec (bit-exact, padding,
+dtype policing), the three rewrite passes on synthetic graphs (bucketing
+with singleton demotion, same-epoch gather dedup, gather-first issue
+order), the recorder against raw ``lax.psum`` on a live mesh, whole-step
+on-vs-off bit-identity, and the ``link_entries`` jaxpr inventory that
+proves bucketing reduced the physical slow-tier message count (satellite
+coverage: deduped/bucketed jaxprs, ``axis_index_groups`` pricing).
+Codec round-trip *properties* live in ``test_stepgraph_props.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.comm import Communicator
+from repro.comm.stepgraph import (CollectiveGraph, pack_leaves, optimize,
+                                  unpack_leaves, SCHEMA_VERSION)
+from repro.models.meta import PMeta
+from repro.runtime.steps import cluster_ctx, make_step_bench
+from repro.substrate import VirtualCluster, default_matrix
+
+MATRIX = default_matrix()
+VC2 = VirtualCluster(pods=2, chips=4)
+TUPLE = VirtualCluster(pods=2, chips=4, fast_axis=("dp", "tp"),
+                       fast_shape=(2, 2), slow_axis="pod")
+
+needs8 = pytest.mark.skipif(not VC2.available(), reason="needs 8 devices")
+
+
+@pytest.fixture(params=MATRIX, ids=[t.label for t in MATRIX])
+def vc(request) -> VirtualCluster:
+    cluster = request.param
+    if not cluster.available():
+        pytest.skip(f"needs {cluster.num_devices} devices")
+    return cluster
+
+
+# ---------------------------------------------------------------------------
+# pack/unpack codec
+# ---------------------------------------------------------------------------
+
+def test_pack_unpack_roundtrip_bit_exact():
+    rng = np.random.default_rng(3)
+    leaves = [jnp.asarray(rng.normal(size=s).astype(np.float32))
+              for s in [(3, 2), (), (5,), (1, 1, 4)]]
+    buf, spec = pack_leaves(leaves, pad_to=7)
+    assert buf.ndim == 1 and buf.shape[0] % 7 == 0
+    assert spec.total_elems == buf.shape[0]
+    assert spec.leaf_elems == (6, 1, 5, 4)
+    out = unpack_leaves(buf, spec)
+    for a, b in zip(leaves, out):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_pack_rejects_empty_and_mixed_dtypes():
+    with pytest.raises(ValueError):
+        pack_leaves([])
+    with pytest.raises(ValueError):
+        pack_leaves([jnp.zeros(2, jnp.float32), jnp.zeros(2, jnp.bfloat16)])
+
+
+def test_unpack_polices_buffer_shape():
+    leaves = [jnp.arange(4, dtype=jnp.float32)]
+    buf, spec = pack_leaves(leaves)
+    with pytest.raises(ValueError):
+        unpack_leaves(jnp.zeros(spec.total_elems + 1, jnp.float32), spec)
+
+
+# ---------------------------------------------------------------------------
+# the rewrite passes, on synthetic graphs
+# ---------------------------------------------------------------------------
+
+def _ar(g, *, axes=("pod", "data"), dtype="float32", shape=(8,),
+        scheme="naive", bucketable=True, key=None):
+    return g.add(family="allreduce", key=key, axes=axes, dtype=dtype,
+                 shape=shape, elem_bytes=4, scheme=scheme,
+                 bucketable=bucketable)
+
+
+def test_bucketing_groups_by_axes_dtype_scheme():
+    g = CollectiveGraph()
+    for i in range(5):                                   # one bucket
+        _ar(g, key=("a", i))
+    _ar(g, axes=("pod",), key="other-axes")             # singleton -> single
+    _ar(g, dtype="float64", key="other-dtype")          # singleton -> single
+    sched = optimize(g, pods=2, chips=4)
+    assert len(sched.buckets) == 1
+    assert sorted(sched.buckets[0].nids) == list(range(5))
+    assert sorted(sched.singles) == [5, 6]
+    r = sched.report()
+    assert r["schema"] == SCHEMA_VERSION
+    assert r["allreduce"]["before_messages"] == 7
+    assert r["allreduce"]["after_messages"] == 3
+    assert r["allreduce"]["after_bytes"] == r["allreduce"]["before_bytes"]
+
+
+def test_bucketing_skips_nonbucketable_and_auto():
+    g = CollectiveGraph()
+    _ar(g, bucketable=False, key="pinned")
+    _ar(g, bucketable=False, key="pinned2")
+    # a caller forcing bucketable=True with scheme="auto" must not crash
+    # (auto resolves per message size; there is no registry entry for it)
+    _ar(g, scheme="auto", bucketable=True, key="auto1")
+    _ar(g, scheme="auto", bucketable=True, key="auto2")
+    sched = optimize(g, pods=2, chips=4)
+    assert not sched.buckets and len(sched.singles) == 4
+
+
+def test_gather_dedup_same_key_same_epoch_only():
+    g = CollectiveGraph()
+    a = g.add(family="gather", key="w0", axes=("data",), dtype="float32",
+              shape=(4,), elem_bytes=4, epoch=1)
+    b = g.add(family="gather", key="w0", axes=("data",), dtype="float32",
+              shape=(4,), elem_bytes=4, epoch=1)      # dup -> collapses
+    c = g.add(family="gather", key="w0", axes=("data",), dtype="float32",
+              shape=(4,), elem_bytes=4, epoch=2)      # fresh epoch -> kept
+    d = g.add(family="gather", key="w1", axes=("data",), dtype="float32",
+              shape=(4,), elem_bytes=4, epoch=1)      # other window -> kept
+    sched = optimize(g, pods=2, chips=4)
+    assert sched.gather_primary == {a: a, b: a, c: c, d: d}
+    r = sched.report()
+    assert r["gather"]["before_issues"] == 4
+    assert r["gather"]["after_issues"] == 3
+
+
+def test_order_frontloads_gathers():
+    g = CollectiveGraph()
+    _ar(g, key=("a", 0))
+    _ar(g, key=("a", 1))
+    g.add(family="gather", key="w0", axes=("data",), dtype="float32",
+          shape=(4,), elem_bytes=4, epoch=1)
+    sched = optimize(g, pods=2, chips=4)
+    kinds = [k for k, _ in sched.order]
+    assert kinds[0] == "gather" and set(kinds[1:]) <= {"bucket", "single"}
+
+
+# ---------------------------------------------------------------------------
+# recorder vs raw lax.psum on a live mesh
+# ---------------------------------------------------------------------------
+
+def test_recorder_matches_raw_psum(vc):
+    """Recording + the rewritten schedule returns exactly what eager
+    ``lax.psum`` over the same axes returns, on every matrix topology."""
+    world = Communicator.from_cluster(vc)
+    rng = np.random.default_rng(11)
+    xs = [jnp.asarray(rng.normal(size=(vc.num_devices, 6)).astype(
+        np.float32)) for _ in range(3)]
+
+    def body(a, b, c):
+        rec = world.record()
+        refs = [rec.allreduce(v, axes=world.axes, scheme="naive",
+                              key=i) for i, v in enumerate((a, b, c))]
+        res = rec.run()
+        got = [res[r] for r in refs]
+        want = [lax.psum(v, world.axes) for v in (a, b, c)]
+        return jnp.stack([jnp.stack(got), jnp.stack(want)])[None]
+
+    out = np.asarray(vc.run(body, *xs))
+    np.testing.assert_array_equal(out[:, 0], out[:, 1])
+
+
+# ---------------------------------------------------------------------------
+# whole step: stepgraph on vs off
+# ---------------------------------------------------------------------------
+
+def _step_outputs(vc, opts, sink=None):
+    from repro.configs import get_config
+    cfg = get_config("starcoder2-7b").reduced()
+    body, in_specs, out_specs, make_args, _ = make_step_bench(
+        cfg, vc, opts=opts, unroll=cfg.n_units, schedule_sink=sink)
+    fn = jax.jit(vc.smap(body, in_specs, out_specs))
+    return [np.asarray(o) for o in fn(*make_args())]
+
+
+@needs8
+def test_step_outputs_bit_identical_and_report_sane():
+    """On the seed 2x4 shape the optimized step is bit-identical to eager
+    and its schedule report passes the committed artifact's validator."""
+    sink = []
+    on = _step_outputs(VC2, ("stepgraph",), sink)
+    off = _step_outputs(VC2, ())
+    for a, b in zip(on, off):
+        np.testing.assert_array_equal(a, b)
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent
+                           / "scripts"))
+    import check_schedule_report
+    r = dict(sink[-1], config="starcoder2-7b", topology=VC2.label,
+             pods=VC2.pods, chips=VC2.chips, elems=0)
+    assert check_schedule_report.check_report(r, "test") == []
+    ar = r["allreduce"]
+    assert ar["after_messages"] < ar["before_messages"]
+
+
+@pytest.mark.slow
+def test_step_outputs_bit_identical_matrix(vc):
+    """Full-matrix on-vs-off bit-identity of the whole train-step bench
+    body (fwd + bwd + bridge + optimizer)."""
+    for a, b in zip(_step_outputs(vc, ("stepgraph",)),
+                    _step_outputs(vc, ())):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# link_entries: counting physical messages on rewritten jaxprs
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_link_entries_bucketing_reduces_slow_messages():
+    """Bucketing must show up in the *lowering*: fewer slow-tier messages
+    with the opt on, total wire bytes conserved (packing changes message
+    count, never payload)."""
+    from repro.bench.step_time import link_entries
+    from repro.configs import get_config
+    cfg = get_config("starcoder2-7b").reduced()
+    ent = {}
+    for name, opts in (("eager", ()), ("stepgraph", ("stepgraph",))):
+        body, in_specs, out_specs, make_args, _ = make_step_bench(
+            cfg, VC2, opts=opts, unroll=cfg.n_units)
+        avals = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                      for a in make_args())
+        ent[name] = link_entries(vc=VC2, example_args=avals,
+                                 fn=VC2.smap(body, in_specs, out_specs))
+    slow = {k: [e for e in v if e.tier == "slow"] for k, v in ent.items()}
+    assert len(slow["stepgraph"]) < len(slow["eager"])
+    for k, v in ent.items():
+        assert all(e.group_size > 1 for e in v)
+    tot = {k: sum(e.link_bytes * e.copies for e in v if e.tier == "slow")
+           for k, v in slow.items()}
+    assert tot["stepgraph"] == pytest.approx(tot["eager"])
+
+
+@needs8
+def test_link_entries_cse_one_entry_per_physical_message():
+    """Two textually separate psums of the SAME operand are one HLO op
+    after CSE — the inventory counts one message, not two."""
+    from repro.bench.step_time import link_entries
+    from jax.sharding import PartitionSpec as P
+
+    def body(x):
+        a = lax.psum(x, ("pod", "data"))
+        b = lax.psum(x, ("pod", "data"))
+        c = lax.psum(x * 2, ("pod", "data"))    # distinct operand: counted
+        return (a + b + c)[None]
+
+    avals = (jax.ShapeDtypeStruct((VC2.num_devices, 4), jnp.float32),)
+    ent = link_entries(VC2.smap(body, (P(("pod", "data")),),
+                                P(("pod", "data"))), avals, VC2)
+    ars = [e for e in ent if e.kind == "ar"]
+    assert len(ars) == 2
+
+
+@needs8
+def test_link_entries_axis_index_groups_pricing():
+    """Grouped collectives price per replica group: psum over groups of 2
+    on the 8-rank mesh has group_size 2 and the ring-model wire bytes of a
+    2-rank allreduce (2 * out * (n-1)/n = out)."""
+    from repro.bench.step_time import link_entries
+    from jax.sharding import PartitionSpec as P
+
+    groups = [[0, 1], [2, 3], [4, 5], [6, 7]]
+
+    def body(x):
+        return lax.psum(x, "data", axis_index_groups=groups)[None]
+
+    vc = VirtualCluster(pods=1, chips=8)
+    avals = (jax.ShapeDtypeStruct((8, 4), jnp.float32),)
+    ent = link_entries(vc.smap(body, (P("data"),), P("data")),
+                       avals, vc)
+    ars = [e for e in ent if e.kind == "ar"]
+    assert len(ars) == 1
+    e = ars[0]
+    assert e.group_size == 2 and e.tier == "fast"
+    assert e.link_bytes == pytest.approx(e.out_bytes)
+
+
+# ---------------------------------------------------------------------------
+# reduce_grads: recorder routing matches the eager path
+# ---------------------------------------------------------------------------
+
+@needs8
+def test_reduce_grads_recorder_matches_eager():
+    """Routing the per-leaf bridge through the recorder returns exactly
+    the eager ``reduce_grads`` result leaf-for-leaf."""
+    ctx = cluster_ctx(VC2)
+    world = Communicator.from_cluster(VC2)
+    metas = [PMeta((8, 4)), PMeta((4,))]
+    rng = np.random.default_rng(5)
+    gs = [jnp.asarray(rng.normal(size=(VC2.num_devices,) + m.shape)
+                      .astype(np.float32)) for m in metas]
+
+    def body(ga, gb):
+        grads = {"a": ga, "b": gb}
+        eager = ctx.reduce_grads(grads, metas)
+        rec = world.record()
+        deferred = ctx.reduce_grads(grads, metas, recorder=rec)
+        res = rec.run()
+        opt = res.resolve(deferred)
+        return jnp.concatenate(
+            [jnp.stack([eager[k].ravel(), opt[k].ravel()])
+             for k in ("a", "b")], axis=1)[None]
+
+    out = np.asarray(VC2.run(body, *gs))
+    np.testing.assert_array_equal(out[:, 0], out[:, 1])
