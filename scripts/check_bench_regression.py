@@ -33,6 +33,12 @@ forever).
 are noisy, and the gate exists to catch structural regressions (a scheme
 suddenly 3x its old relative cost — e.g. a lost overlap, an extra
 collective), not single-digit-percent drift.
+
+A third pass gates **latency percentiles**: normalized ``timing.p99_us``
+is compared the same way over cells both files carry it (older baselines
+without the field are skipped), at ``2 * tol`` — a serving engine can
+hold its median while its tail collapses, which the median pass alone
+would miss.
 """
 
 from __future__ import annotations
@@ -42,13 +48,19 @@ import json
 import sys
 
 
-def _cells(report: dict) -> dict[tuple, float]:
-    """(family, scheme, topology, elems) -> median_us."""
+def _cells(report: dict, stat: str = "median_us") -> dict[tuple, float]:
+    """(family, scheme, topology, elems) -> ``timing[stat]``.
+
+    Cells whose report predates the stat (older schema wrote no
+    ``p99_us``) are simply absent — the percentile pass compares only
+    cells both files carry, staying backward compatible."""
     out = {}
     for case in report.get("cases", []):
         key = (case["family"], case["scheme"], case["topology"],
                case["elems"])
-        out[key] = float(case["timing"]["median_us"])
+        val = case["timing"].get(stat)
+        if val is not None and float(val) > 0:
+            out[key] = float(val)
     return out
 
 
@@ -111,6 +123,31 @@ def compare(base: dict, fresh: dict, tol: float) -> tuple[list[str],
                 f"{fam}/{sch}/{topo}/e{elems}: reference-scheme raw "
                 f"{raw:.2f}x vs machine factor {factor:.2f}x (raw tol "
                 f"{raw_tol}x) — regression not explained by host speed")
+    # latency-percentile pass: gate p99 the way medians are gated, over
+    # cells where BOTH files carry it (tail tolerance is wider — the p99
+    # of a quick sweep is one sample deep).  A serving engine can hold its
+    # median while its tail collapses; the median pass alone misses that.
+    p99_tol = 2.0 * tol
+    bp, fp = _cells(base, "p99_us"), _cells(fresh, "p99_us")
+    p99_common = sorted(set(bp) & set(fp) & set(common))
+    compared_p99 = 0
+    for key in p99_common:
+        fam, sch, topo, elems = key
+        ref = refs[(fam, topo, elems)]
+        base_ref = bp.get((fam, ref, topo, elems))
+        fresh_ref = fp.get((fam, ref, topo, elems))
+        if not base_ref or not fresh_ref:
+            continue
+        compared_p99 += 1
+        base_norm = bp[key] / base_ref
+        fresh_norm = fp[key] / fresh_ref
+        if fresh_norm > base_norm * p99_tol:
+            failures.append(
+                f"{fam}/{sch}/{topo}/e{elems}: p99 {fresh_norm:.2f}x {ref} "
+                f"vs baseline {base_norm:.2f}x (p99 tol {p99_tol}x)")
+    rows.append(f"  p99 pass: {compared_p99} cells gated at {p99_tol}x"
+                if compared_p99 else
+                "  p99 pass: skipped (baseline carries no p99_us)")
     return rows, failures
 
 

@@ -82,7 +82,8 @@ def main(argv=None) -> int:
                     help="cap the topology matrix (default %(default)s)")
     ap.add_argument("--families", default=None,
                     help="comma list: allgather,broadcast,psum,"
-                         "reduce_scatter,allgatherv,alltoall")
+                         "reduce_scatter,allgatherv,alltoall,"
+                         "step_time,serving")
     ap.add_argument("--schemes", default=None,
                     help="comma list of registry scheme names (fast "
                          "autotune iteration, e.g. pipelined,hier)")

@@ -29,6 +29,13 @@ from repro.bench.suites import ELEM_DTYPE, CaseResult, SuiteResult
 
 def case_record(r: CaseResult) -> dict:
     c = r.case
+    serving = None
+    if c.family == "serving":
+        # open-loop Poisson load model priced by the measured step median:
+        # tokens/sec + p50/p99 per-token latency per matrix topology
+        # (deterministic given the timing — seeded sim, no wall clock)
+        from repro.bench.serving import serving_metrics
+        serving = serving_metrics(r.timing.median_us)
     return {
         "name": c.name,
         "csv_name": c.csv_name,
@@ -47,6 +54,7 @@ def case_record(r: CaseResult) -> dict:
         "hlo": r.hlo,
         "checks": [ch.to_dict() for ch in r.checks],
         "autotune": r.autotune,
+        "serving": serving,
         "ok": all(ch.ok for ch in r.checks),
     }
 

@@ -44,9 +44,22 @@ class TimingResult:
     iqr_us: float       # p75 - p25 over the reps: the dispersion estimate
     reps: int
     inner: int          # calls per timed rep (calibrated; 1 unless tiny)
+    # tail percentiles over the reps (nearest-rank): what the serving
+    # family's latency reporting and the regression gate's p99 pass read.
+    # p50 duplicates median on purpose — consumers address percentiles
+    # uniformly without special-casing the 50th.
+    p50_us: float = 0.0
+    p99_us: float = 0.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def _percentile(sorted_us: list, q: float) -> float:
+    """Nearest-rank percentile of an ascending sample list."""
+    import math as _math
+    n = len(sorted_us)
+    return sorted_us[min(n - 1, max(0, _math.ceil(q * n) - 1))]
 
 
 def calibrate_inner(warm_s: float, min_rep_s: float,
@@ -73,11 +86,14 @@ def summarize(times_us, inner: int = 1) -> TimingResult:
         iqr = q3 - q1
     else:
         iqr = 0.0
+    ordered = sorted(times_us)
     return TimingResult(
         median_us=statistics.median(times_us),
         mean_us=statistics.fmean(times_us),
-        min_us=min(times_us), max_us=max(times_us),
-        iqr_us=iqr, reps=len(times_us), inner=inner)
+        min_us=ordered[0], max_us=ordered[-1],
+        iqr_us=iqr, reps=len(times_us), inner=inner,
+        p50_us=_percentile(ordered, 0.50),
+        p99_us=_percentile(ordered, 0.99))
 
 
 def timed_call(fn, *args, inner: int = 1) -> float:

@@ -1,0 +1,244 @@
+"""``serving`` bench family: continuous-batching decode steps under load.
+
+The ``step_time`` family times whole train steps; this family times the
+serving engine's inner loop — ONE decode step over a full slot batch with
+a heterogeneous per-slot position vector, weights living in the pod's
+one-copy-per-node window store (the ``serve_fsdp`` layout).  Two schemes:
+
+* ``sync``     — issue-at-use baseline: ``model.decode_fn`` with every
+  window gather issued inside the unit body at use time;
+* ``recorded`` — ``repro.serving.recorded.RecordedDecoder``: the step's
+  window gathers recorded into one ``CollectiveGraph``, deduped and
+  front-loaded behind a shared ordering token, replayed per batch
+  signature.  Outputs bit-identical to ``sync`` (asserted in
+  ``tests/test_serving_engine.py``).
+
+Like ``step_time``, a decode step's collective content is whatever the
+model traced, so each scheme carries a per-config jaxpr **link inventory**
+(``link_inventory``) that ``repro.bench.validate`` cross-checks against
+the compiled HLO's ring-model bytes.  Decode token batches come from the
+deterministic ``repro.data.synthetic`` stream.
+
+The measured step median then prices an **open-loop Poisson load model**
+(``serving_metrics``): requests arrive at a fixed offered utilization,
+occupy one of ``slots`` decode lanes for ``max_new`` steps, and every
+emitted token's latency sample is recorded — ``tokens_per_s`` plus
+p50/p99 per-token latency land in the case's report record per matrix
+topology.  The simulation is a pure, seeded function of the measured
+median, so reports stay deterministic given the timing.
+
+Case sizing: ``elems`` is the model's global parameter element count —
+deterministic per config, so quick (CI) and full sweeps land on the same
+(family, topology, dtype, size) cells and stay comparable.
+"""
+
+from __future__ import annotations
+
+from types import MappingProxyType
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.bench.step_time import (StepTimeScheme, _no_dispatch,
+                                   link_inventory)
+from repro.bench.suites import BenchCase, _swept
+from repro.comm import registry
+from repro.comm.registry import register_scheme
+from repro.configs import get_config
+
+#: model-zoo configs the family times (reduced shapes; dense untied
+#: global-attention entry on purpose: pow2 prompt bucketing applies and no
+#: tied-leaf gather is CSE-merged behind the jaxpr inventory's back).
+SERVE_CONFIGS = ("starcoder2-7b",)
+SERVE_SLOTS = 4                 # decode lanes = batch rows per step
+SERVE_SMAX = 32                 # KV page length per lane
+
+#: open-loop load-model constants (pure function of the measured median —
+#: fixed here so every report row is comparable across topologies/runs)
+LOAD_MAX_NEW = 8
+LOAD_REQUESTS = 64
+LOAD_UTILIZATION = 0.8
+LOAD_SEED = 0
+
+
+# ---------------------------------------------------------------------------
+# The two serving schemes
+# ---------------------------------------------------------------------------
+
+class ServingScheme(StepTimeScheme):
+    """Base of the ``serving`` schemes: per-config recorded link inventory
+    (no closed form in (pods, chips, elems) exists for a traced decode)."""
+
+    FAMILY = "serving"
+    ops = MappingProxyType({"serving": _no_dispatch})
+    N_OUT = 2                   # logits + cache checksums: replicated f32
+
+
+class ServeSyncScheme(ServingScheme):
+    """Issue-at-use baseline: ``model.decode_fn`` — every unit's window
+    gather issued inside the unit body when the weight is used."""
+
+    name = "sync"
+
+
+class ServeRecordedScheme(ServingScheme):
+    """The recorded decode step: window gathers recorded into one
+    ``CollectiveGraph`` (``repro.serving.recorded.RecordedDecoder``),
+    same-epoch duplicates deduped, issues front-loaded behind one ordering
+    token, replayed per batch signature.  Bit-identical to ``sync``."""
+
+    name = "recorded"
+
+
+SYNC = register_scheme(ServeSyncScheme())
+RECORDED = register_scheme(ServeRecordedScheme())
+
+
+# ---------------------------------------------------------------------------
+# Open-loop Poisson load model
+# ---------------------------------------------------------------------------
+
+def serving_metrics(step_us: float, *, slots: int = SERVE_SLOTS,
+                    max_new: int = LOAD_MAX_NEW,
+                    n_requests: int = LOAD_REQUESTS,
+                    utilization: float = LOAD_UTILIZATION,
+                    seed: int = LOAD_SEED) -> dict:
+    """Open-loop Poisson serving simulation priced by one measured median.
+
+    Requests arrive as a Poisson process offered at ``utilization`` of the
+    engine's token capacity (``slots`` lanes, each token costing one
+    ``step_us`` engine step); a request occupies one lane for ``max_new``
+    steps and queues FIFO while all lanes are busy.  Every emitted token
+    contributes one latency sample: a request's FIRST token pays its queue
+    wait plus one step (time-to-first-token under load), later tokens pay
+    the inter-token step time.  Deterministic: seeded arrivals, discrete
+    event loop, no wall clock.
+    """
+    if step_us <= 0:
+        raise ValueError("step_us must be positive")
+    step_s = step_us * 1e-6
+    rate = utilization * slots / (max_new * step_s)   # offered requests/s
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_requests))
+    lanes: list[list] = []      # [steps_remaining, last_event_time]
+    t = 0.0
+    nxt = 0
+    latencies: list[float] = []
+    tokens = 0
+    while nxt < n_requests or lanes:
+        if not lanes:           # idle: jump to the next arrival
+            t = max(t, arrivals[nxt])
+        while (nxt < n_requests and len(lanes) < slots
+               and arrivals[nxt] <= t):
+            lanes.append([max_new, arrivals[nxt]])
+            nxt += 1
+        t_end = t + step_s
+        for lane in lanes:
+            latencies.append(t_end - lane[1])
+            lane[1] = t_end
+            lane[0] -= 1
+            tokens += 1
+        lanes = [ln for ln in lanes if ln[0] > 0]
+        t = t_end
+    lat_ms = np.asarray(latencies) * 1e3
+    return {
+        "tokens_per_s": float(tokens / t),
+        "p50_token_ms": float(np.percentile(lat_ms, 50)),
+        "p99_token_ms": float(np.percentile(lat_ms, 99)),
+        "step_us": float(step_us),
+        "slots": slots, "max_new": max_new, "requests": n_requests,
+        "utilization": utilization, "offered_rps": float(rate),
+        "sim_seed": seed,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Case builder
+# ---------------------------------------------------------------------------
+
+def serving_cases(vc, on_skip=None, schemes=None):
+    """One case per (model config, serving scheme) on this cluster.
+
+    Builds the slot-batch decode-step body in the ``serve_fsdp`` layout
+    (weights once per node in the window store), records its jaxpr link
+    inventory on the scheme, and yields a ``BenchCase`` whose HLO the
+    validate layer must match."""
+    from repro.data.synthetic import DataConfig, SyntheticLM
+    from repro.models.transformer import build
+    from repro.runtime.steps import cluster_ctx
+    from repro.serving.recorded import RecordedDecoder
+
+    for cfg_name in SERVE_CONFIGS:
+        cfg = get_config(cfg_name).reduced()
+        ctx = cluster_ctx(vc, opts=("serve_fsdp",))
+        sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+        data = 1
+        for a in ctx.fsdp_axes:
+            data *= sizes[a]
+        model = build(cfg, ctx, data=data)
+        pshapes = jax.eval_shape(model.init_params)
+        _, tdef = jax.tree.flatten(pshapes)
+        elems = 0
+        for leaf in jax.tree.leaves(pshapes):
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            elems += n
+        pspecs = model.param_specs(
+            serve=True, tp_axis=ctx.tp_axis,
+            fsdp_axis=ctx.fsdp_axes[0] if ctx.fsdp_axes else None)
+        from jax.sharding import PartitionSpec as P
+        in_specs = tuple(jax.tree.leaves(pspecs)) + (P(), P())
+        out_specs = (P(), P())
+        axes = vc.axis_names
+
+        def make_args(model=model, cfg=cfg):
+            params = model.init_params(0)
+            stream = SyntheticLM(DataConfig(
+                vocab=cfg.vocab, seq_len=SERVE_SMAX,
+                global_batch=SERVE_SLOTS, seed=7))
+            toks = stream.next_batch()["tokens"]
+            tok = jnp.asarray(toks[:, :1].astype(np.int32))
+            # heterogeneous per-slot positions: the continuous-batching
+            # signature (every lane mid-stream at a different depth)
+            pos = jnp.asarray((np.arange(SERVE_SLOTS) * 5 + 1) % SERVE_SMAX,
+                              jnp.int32)
+            return tuple(jax.tree.leaves(params)) + (tok, pos)
+
+        for sch in _swept(registry.schemes_for("serving"), schemes):
+            decode = RecordedDecoder(model) if sch.name == "recorded" \
+                else model.decode_fn
+
+            def body(*args, _decode=decode, _tdef=tdef, _model=model,
+                     _axes=axes):
+                pl, tok, pos = args[:-2], args[-2], args[-1]
+                p = jax.tree.unflatten(_tdef, pl)
+                cache = _model.cache_init(SERVE_SLOTS, SERVE_SMAX)
+                new_cache, logits = _decode(p, cache, tok, pos)
+                # two replicated f32 scalars keep logits AND the cache
+                # update alive under DCE (psum over the whole mesh: cache
+                # shards are tp-rank-local, the sum is not)
+                # raw-collective: result-liveness checksum reduction
+                chk_l = jax.lax.psum(
+                    jnp.sum(logits.astype(jnp.float32)), _axes)
+                chk_c = jnp.float32(0.0)
+                for leaf in jax.tree.leaves(new_cache):
+                    chk_c += jnp.sum(leaf.astype(jnp.float32))
+                chk_c = jax.lax.psum(chk_c, _axes)  # raw-collective: checksum
+                return chk_l, chk_c
+
+            avals = tuple(jax.ShapeDtypeStruct(a.shape, a.dtype)
+                          for a in make_args())
+            fast_b, slow_b = link_inventory(
+                vc.smap(body, in_specs, out_specs), avals, vc)
+            sch.record(pods=vc.pods, chips=vc.chips,
+                       fast_shape=vc.fast_shape, elems=elems,
+                       fast=fast_b, slow=slow_b)
+            yield BenchCase(
+                "serving", sch.name, vc, elems,
+                body=body, in_specs=in_specs, out_specs=out_specs,
+                make_args=make_args,
+                traffic=sch.traffic_for(pods=vc.pods, chips=vc.chips,
+                                        fast_shape=vc.fast_shape,
+                                        elems=elems))

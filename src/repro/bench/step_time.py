@@ -254,6 +254,7 @@ class StepTimeScheme(CollectiveScheme):
     """
 
     result_class = "replicated"
+    FAMILY = "step_time"        # subclasses re-key (e.g. bench.serving)
     ops = MappingProxyType({"step_time": _no_dispatch})
     opts: tuple = ()            # ParallelCtx opts that select this schedule
     N_OUT = 3                   # loss, gnorm, checksum: replicated f32
@@ -280,8 +281,8 @@ class StepTimeScheme(CollectiveScheme):
             raise ValueError(
                 f"{self.name!r} has no recorded link inventory for "
                 f"{pods}x{chips} (fast {fast_shape}) at {elems} elems — "
-                "step_time expectations are recorded per case by "
-                "step_time_cases, not closed forms")
+                f"{self.FAMILY} expectations are recorded per case by the "
+                "family's case builder, not closed forms")
         return inv
 
     def result_node(self, family, *, pods, chips, elems, elem_bytes=4):
@@ -290,17 +291,17 @@ class StepTimeScheme(CollectiveScheme):
 
     def traffic_for(self, *, pods: int, chips: int, fast_shape, elems: int
                     ) -> CollectiveTraffic:
-        fast, slow = self.links("step_time", pods=pods, chips=chips,
+        fast, slow = self.links(self.FAMILY, pods=pods, chips=chips,
                                 fast_shape=fast_shape, elems=elems)
         R = pods * chips
         return CollectiveTraffic(
             slow_bytes=slow * R, fast_bytes=fast * R,
             result_bytes_per_node=self.result_node(
-                "step_time", pods=pods, chips=chips, elems=elems))
+                self.FAMILY, pods=pods, chips=chips, elems=elems))
 
     def traffic(self, family, *, pods, chips, elems, elem_bytes=4,
                 populations=None):
-        if family != "step_time":
+        if family != self.FAMILY:
             return super().traffic(family, pods=pods, chips=chips,
                                    elems=elems, elem_bytes=elem_bytes,
                                    populations=populations)

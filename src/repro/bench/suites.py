@@ -52,7 +52,10 @@ ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
 ELEM_DTYPE = "float32"  # recorded per case: the tuning table keys by dtype
 
 FAMILIES = ("allgather", "broadcast", "psum", "reduce_scatter",
-            "allgatherv", "alltoall", "step_time")
+            "allgatherv", "alltoall", "step_time", "serving")
+# families that size themselves per cluster (one sweep per topology,
+# outside the message-size loop) and register their schemes on import
+SELF_SIZED = ("step_time", "serving")
 # QUICK_ELEMS must stay a subset of FULL_ELEMS: CI's perf-regression gate
 # compares the quick sweep against a committed full-sweep baseline, and
 # only shared (family, scheme, topology, elems) cells can be compared.
@@ -367,6 +370,14 @@ def step_time_cases(vc: VirtualCluster, elems=None, on_skip=None,
     return st.step_time_cases(vc, on_skip=on_skip, schemes=schemes)
 
 
+def serving_cases(vc: VirtualCluster, elems=None, on_skip=None,
+                  schemes=None):
+    """Bridge to ``repro.bench.serving``: continuous-batching decode-step
+    cases (self-sized per cluster, like ``step_time``)."""
+    from repro.bench import serving as sv
+    return sv.serving_cases(vc, on_skip=on_skip, schemes=schemes)
+
+
 _FAMILY_BUILDERS = {
     "allgather": allgather_cases,
     "broadcast": broadcast_cases,
@@ -375,6 +386,7 @@ _FAMILY_BUILDERS = {
     "allgatherv": allgatherv_cases,
     "alltoall": alltoall_cases,
     "step_time": step_time_cases,
+    "serving": serving_cases,
 }
 
 
@@ -400,6 +412,9 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
     if "step_time" in families:
         from repro.bench import step_time  # noqa: F401  registers its
         # eager/prefetch schemes before the scheme-name validation below
+    if "serving" in families:
+        from repro.bench import serving  # noqa: F401  registers sync/
+        # recorded before the scheme-name validation below
     if schemes is not None:
         if "auto" in schemes:
             raise ValueError(
@@ -412,16 +427,17 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
             raise ValueError(f"unknown schemes {sorted(unknown_s)}; "
                              f"registered: {list(registry.scheme_names())}")
     cases: list[BenchCase] = []
-    per_size = tuple(f for f in families if f != "step_time")
+    per_size = tuple(f for f in families if f not in SELF_SIZED)
     for vc in clusters:
         for e in elems:
             for fam in per_size:
                 cases.extend(_FAMILY_BUILDERS[fam](vc, e, on_skip=on_skip,
                                                    schemes=schemes))
-        if "step_time" in families:
-            # self-sized family: one sweep per cluster, not per message size
-            cases.extend(step_time_cases(vc, on_skip=on_skip,
-                                         schemes=schemes))
+        for fam in SELF_SIZED:
+            if fam in families:
+                # self-sized family: one sweep per cluster, not per size
+                cases.extend(_FAMILY_BUILDERS[fam](vc, on_skip=on_skip,
+                                                   schemes=schemes))
     return cases
 
 

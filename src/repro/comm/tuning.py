@@ -51,14 +51,15 @@ SCHEMA_VERSION = "repro.tuning/v1"
 FALLBACK = {
     None: {"allgather": "shared", "broadcast": "shared", "psum": "shared",
            "reduce_scatter": "shared", "allgatherv": "shared",
-           "alltoall": "hier", "step_time": "prefetch"},
+           "alltoall": "hier", "step_time": "prefetch",
+           "serving": "sync"},
     "shared": {"allgather": "shared", "broadcast": "shared",
                "psum": "shared", "reduce_scatter": "shared",
                "allgatherv": "shared"},
     "replicated": {"allgather": "naive", "broadcast": "naive",
                    "psum": "naive", "reduce_scatter": "naive",
                    "allgatherv": "naive", "alltoall": "hier",
-                   "step_time": "prefetch"},
+                   "step_time": "prefetch", "serving": "sync"},
 }
 
 

@@ -209,13 +209,18 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      ring: bool = False) -> jax.Array:
     """q: (B, 1, H, hd) (all heads, replicated-compute);
     k/v_cache: (B, S/tp, kv, hd) local chunk.  ``pos``: current global
-    position (scalar).  ``ring``: cache is a ring buffer of size ``window``
-    (global kv index = pos - window + 1 .. pos, stored mod window)."""
+    position — a scalar shared by the batch, or a (B,) vector of per-slot
+    positions (continuous batching over heterogeneous sequence lengths).
+    ``ring``: cache is a ring buffer of size ``window`` (global kv index =
+    pos - window + 1 .. pos, stored mod window)."""
     B, _, nH, hd = q.shape
     S_loc, kv = k_cache.shape[1], k_cache.shape[2]
     scale = 1.0 / math.sqrt(hd)
     base = ctx.tp_rank * S_loc
     slot = base + jnp.arange(S_loc)                         # local slots
+    pos = jnp.asarray(pos)
+    if pos.ndim == 1:                    # per-slot positions: (B, 1)
+        pos = pos[:, None]               # broadcasts against slot (S_loc,)
     if ring:
         W = window
         # slot s holds global index: the largest g <= pos with g % W == s
@@ -231,7 +236,8 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     kq = jnp.take(k_cache, kvmap, axis=2).astype(jnp.float32)
     vq = jnp.take(v_cache, kvmap, axis=2).astype(jnp.float32)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kq)
-    s = jnp.where(valid[None, None, None, :], s, NEG)
+    mask = valid if valid.ndim == 2 else valid[None]        # (B | 1, S_loc)
+    s = jnp.where(mask[:, None, None, :], s, NEG)
     m = jnp.max(s, axis=-1)                                 # (B, H, 1)
     M = ctx.pmax_tp(m)
     p = jnp.exp(s - M[..., None])
@@ -244,12 +250,20 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 def cache_write(cache: jax.Array, new: jax.Array, ctx: ParallelCtx, *, pos,
                 window: Optional[int] = None) -> jax.Array:
     """Write (B, 1, kv, hd) into the T-sharded (B, S/tp, kv, hd) cache at
-    global position ``pos`` (ring-buffer when ``window``).  Every chip
-    computes the same ``new``; only the owner's mask hits."""
+    global position ``pos`` — a shared scalar or a (B,) vector of per-slot
+    positions (ring-buffer when ``window``).  Every chip computes the same
+    ``new``; only the owner's mask hits."""
     S_loc = cache.shape[1]
+    pos = jnp.asarray(pos)
     gpos = pos % window if window is not None else pos
     owner = gpos // S_loc
     local = gpos - owner * S_loc
-    hit = (jnp.arange(S_loc) == local) & (ctx.tp_rank == owner) \
-        if ctx.tp_axis else (jnp.arange(S_loc) == local)
-    return jnp.where(hit[None, :, None, None], new.astype(cache.dtype), cache)
+    if pos.ndim == 1:                    # per-slot positions: (B, S_loc)
+        hit = jnp.arange(S_loc)[None, :] == local[:, None]
+        if ctx.tp_axis:
+            hit &= (ctx.tp_rank == owner)[:, None]
+    else:
+        hit = (jnp.arange(S_loc) == local) & (ctx.tp_rank == owner) \
+            if ctx.tp_axis else (jnp.arange(S_loc) == local)
+        hit = hit[None]
+    return jnp.where(hit[:, :, None, None], new.astype(cache.dtype), cache)

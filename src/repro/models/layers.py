@@ -49,6 +49,25 @@ def rope(x: jax.Array, positions: jax.Array, theta: float,
     return out.astype(x.dtype)
 
 
+def rope_decode(x: jax.Array, pos, theta: float,
+                compute_dtype=None) -> jax.Array:
+    """Decode-step rope: x is (B, 1, n, hd); ``pos`` is a position scalar
+    shared by the batch, or a (B,) vector of per-slot positions (continuous
+    batching).  The scalar path matches ``rope(x, pos[None], ...)``."""
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        return rope(x, pos[None], theta, compute_dtype)
+    hd = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = pos.astype(jnp.float32)[:, None] * freqs[None, :]     # (B, hd/2)
+    dt = compute_dtype or jnp.float32
+    cos = jnp.cos(ang)[:, None, None, :].astype(dt)
+    sin = jnp.sin(ang)[:, None, None, :].astype(dt)
+    x1, x2 = jnp.split(x.astype(dt), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
 def sinusoidal_pe(positions: jax.Array, d: int) -> jax.Array:
     """(T,) -> (T, d) classic transformer PE."""
     half = d // 2

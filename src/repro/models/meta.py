@@ -39,14 +39,16 @@ class PMeta:
     dtype: jnp.dtype = jnp.float32
 
 
-def _resolve_fsdp(meta: PMeta, data: int, mode: str, serve: bool) -> PMeta:
+def _resolve_fsdp(meta: PMeta, data: int, mode: str, serve: bool,
+                  force: bool = False) -> PMeta:
     """Pick the FSDP dim: largest dim divisible by the data-axis size,
     excluding tp/data dims.  Serve: only when explicitly requested upstream
-    (meta.fsdp_dim == -2 sentinel)."""
+    (meta.fsdp_dim == -2 sentinel, or ``force`` — the ``serve_fsdp`` opt
+    keeping serve weights in the pod-shared one-copy-per-node store)."""
     if mode != "hier" or data <= 1:
         meta.fsdp_dim = None
         return meta
-    if serve and meta.fsdp_dim != -2:
+    if serve and not force and meta.fsdp_dim != -2:
         meta.fsdp_dim = None
         return meta
     best, best_size = None, 0
@@ -232,8 +234,9 @@ def model_defs(cfg: ModelConfig, tp: int, data: int, mode: str,
     if cfg.remainder_kinds:
         defs["rem"] = {f"r{i}": block_defs(k, cfg, tp, serve, opts)
                        for i, k in enumerate(cfg.remainder_kinds)}
+    force = serve and "serve_fsdp" in opts
     return jax.tree.map(
-        lambda m: _resolve_fsdp(m, data, mode, serve), defs,
+        lambda m: _resolve_fsdp(m, data, mode, serve, force), defs,
         is_leaf=lambda x: isinstance(x, PMeta))
 
 

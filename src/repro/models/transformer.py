@@ -143,6 +143,10 @@ def _decode_attn_2d(x, p, mt, state, ctx, cfg, *, pos, window):
     chip; partial softmax merges within the head group's g_s chips."""
     import math as _math
     from repro.models.attention import _kv_head_map
+    if jnp.ndim(pos) != 0:
+        raise ValueError("decode2d decode attention needs a scalar pos; "
+                         "per-slot position vectors (continuous batching) "
+                         "are only supported on the 1D decode path")
     g_h, g_s = M.decode2d_groups(cfg, ctx.tp)
     H, kv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     Hg, kvg = H // g_h, kv // g_h
@@ -240,11 +244,10 @@ def _block_decode(kind: str, x, p, mt, state, ctx, cfg, *, pos):
                 p["attn"]["k_norm"], mt["attn"]["k_norm"].fsdp_dim),
                 cfg.norm_eps)
         if cfg.pos == "rope":
-            from repro.models.layers import rope
+            from repro.models.layers import rope_decode
             rdt = ctx.compute_dtype if ctx.has("bf16_rope") else None
-            pos_arr = jnp.full((1,), pos)
-            q = rope(q, pos_arr, cfg.rope_theta, rdt)
-            k_new = rope(k_new, pos_arr, cfg.rope_theta, rdt)
+            q = rope_decode(q, pos, cfg.rope_theta, rdt)
+            k_new = rope_decode(k_new, pos, cfg.rope_theta, rdt)
         kc = cache_write(state["k"], k_new, ctx, pos=pos, window=window)
         vc = cache_write(state["v"], v_new, ctx, pos=pos, window=window)
         o = decode_attention(q, kc, vc, ctx, pos=pos, H=H, window=window,
@@ -431,9 +434,11 @@ def _state_to_cache(cfg, ctx, st, T: int, s_max, kind, tdim: int = 1):
 
     Prefill chunks are sharded on the prompt length T; the decode cache is
     sharded on s_max (or the ring window).  Relayout = intra-pod gather (the
-    shared-window read) + local slice — requires T >= window for ring caches
-    (true for all assigned shapes).  ``tdim``: time axis (2 for unit-stacked
-    states).
+    shared-window read) + local slice.  Ring slots whose global position
+    predates the prompt (T < window) are zero-filled — they are masked out
+    of decode attention, but must not hold NaN (an out-of-bounds gather
+    fill), because even a zero-weighted NaN poisons the softmax-weighted
+    sum.  ``tdim``: time axis (2 for unit-stacked states).
     """
     if kind not in ("attn", "local"):
         return st
@@ -447,7 +452,12 @@ def _state_to_cache(cfg, ctx, st, T: int, s_max, kind, tdim: int = 1):
             # ring slot s holds position g = T-W + ((s - (T-W)) mod W)
             s = jnp.arange(W)
             g = T - W + ((s - (T - W)) % W)
-            full = jnp.take(full, g, axis=tdim)    # (..., W, kv, hd)
+            full = jnp.take(full, jnp.maximum(g, 0),
+                            axis=tdim)             # (..., W, kv, hd)
+            shape = [1] * full.ndim
+            shape[tdim] = W
+            full = jnp.where((g >= 0).reshape(shape), full,
+                             jnp.zeros_like(full))
             S_loc = W // tp
             return lax.dynamic_slice_in_dim(full, rank * S_loc, S_loc, tdim)
         S_loc = s_max // tp
@@ -532,7 +542,9 @@ def _prefill(cfg, ctx, defs, params, batch, s_max, *, unroll: int = 1):
 
 def _decode(cfg, ctx, defs, params, cache, token, pos, *, unroll: int = 1):
     """One decode step.  token: (B, 1) int32 (or (B, 1, d_f) frames);
-    pos: scalar current position.  Returns (new_cache, logits (B, 1, V))."""
+    pos: current position — a scalar shared by the batch, or a (B,) vector
+    of per-slot positions (continuous batching over heterogeneous sequence
+    lengths).  Returns (new_cache, logits (B, 1, V))."""
     if cfg.frontend == "encodec":
         w_fe = ctx.gather_w(params["frontend"], defs["frontend"].fsdp_dim)
         x = token.astype(ctx.compute_dtype) @ w_fe
@@ -542,8 +554,11 @@ def _decode(cfg, ctx, defs, params, cache, token, pos, *, unroll: int = 1):
     if cfg.tie_embeddings:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     if cfg.pos == "sinusoidal":
-        x = x + sinusoidal_pe(jnp.full((1,), pos),
-                              cfg.d_model)[None].astype(x.dtype)
+        if jnp.ndim(pos) == 1:           # per-slot positions: (B, 1, d)
+            x = x + sinusoidal_pe(pos, cfg.d_model)[:, None].astype(x.dtype)
+        else:
+            x = x + sinusoidal_pe(jnp.full((1,), pos),
+                                  cfg.d_model)[None].astype(x.dtype)
 
     kinds = cfg.pattern
 

@@ -8,6 +8,7 @@ own position counter; finished slots are refilled (continuous batching).
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Optional
 
 import jax
@@ -82,13 +83,15 @@ def materialize_params_on_mesh(params, cluster, *, scheme: str = "auto"):
                 "materialize_params_on_mesh needs windows with static "
                 "pods/chips counts (construct their Communicator via "
                 "from_cluster/from_topology)")
+        node = comm
         if comm.slow_axis is not None:
-            raise ValueError(
-                "multi-pod windows are pod-replicated — read the node "
-                "window (split_type_shared) instead of the world window")
+            # Multi-pod windows are pod-replicated: every pod holds the
+            # same node copy, so the read is a node-tier gather through
+            # the COMM_TYPE_SHARED split — never a bridge collective.
+            node = comm.split_type_shared()
 
         def body(shard):
-            return comm.allgather(shard, scheme=scheme, axis=axis,
+            return node.allgather(shard, scheme=scheme, axis=axis,
                                   result="replicated")
 
         spec = P(*((None,) * axis + (cluster.axis_names,)))
@@ -104,6 +107,26 @@ class GenResult:
     logprobs: np.ndarray    # (B, max_new)
 
 
+# (model id, s_max) -> (weakref(model), jitted prefill, jitted decode).
+# Model trees hold dicts (unhashable), so the cache keys on identity with
+# a weakref guard against id reuse after collection.
+_JIT_CACHE: dict = {}
+
+
+def compiled_serve_fns(model, s_max: int):
+    """Jitted ``(prefill, decode)`` for ``model`` at context length
+    ``s_max``, cached so repeated generate calls stop re-tracing."""
+    key = (id(model), int(s_max))
+    hit = _JIT_CACHE.get(key)
+    if hit is not None and hit[0]() is model:
+        return hit[1], hit[2]
+    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, s_max))
+    decode = jax.jit(model.decode_fn)
+    ref = weakref.ref(model, lambda _, k=key: _JIT_CACHE.pop(k, None))
+    _JIT_CACHE[key] = (ref, prefill, decode)
+    return prefill, decode
+
+
 def greedy_generate(model, params, prompts: np.ndarray, *, max_new: int,
                     s_max: Optional[int] = None, temperature: float = 0.0,
                     seed: int = 0) -> GenResult:
@@ -115,8 +138,7 @@ def greedy_generate(model, params, prompts: np.ndarray, *, max_new: int,
     s_max = s_max or (T0 + max_new)
     batch = {"tokens": jnp.asarray(
         np.concatenate([prompts, prompts[:, -1:]], axis=1))}
-    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, s_max))
-    decode = jax.jit(model.decode_fn)
+    prefill, decode = compiled_serve_fns(model, s_max)
     cache, logits = prefill(params, batch)
 
     key = jax.random.PRNGKey(seed)

@@ -1,0 +1,146 @@
+"""KV-cache pages as node-``SharedWindow`` state with epoch fences.
+
+The paper's claim is that replicated state should live ONCE per node in a
+shared segment, with integrity guarded by synchronization epochs.  Training
+already applies that to parameters; serving is where replicated KV state
+dominates memory, so the decode cache gets the same treatment: every cache
+leaf is held as a :class:`repro.comm.SharedWindow` on the node communicator
+(one logical copy per node — the C1 invariant), and slot reuse is guarded
+by store epochs — admitting a request *stores* into the pages (opening a
+dirty epoch) and the scheduler may not read the cache again until it
+fences.  A dirty read raises :class:`repro.comm.WindowEpochError` exactly
+as it does for parameter windows.
+
+Cache tree layout (``model.cache_init``): leaves under ``"units"`` carry a
+leading ``n_units`` dim with the slot (batch) axis at position 1; leaves
+under ``"rem"`` have the slot axis at position 0.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import Communicator, SharedWindow
+
+_IS_WIN = lambda x: isinstance(x, SharedWindow)  # noqa: E731
+
+
+def _slot_axis(top_key: str) -> int:
+    return 1 if top_key == "units" else 0
+
+
+@dataclasses.dataclass(frozen=True)
+class KVCachePages:
+    """The decode cache held as per-leaf node windows.
+
+    ``windows`` mirrors ``model.cache_init``'s tree with every array leaf
+    wrapped in a ``SharedWindow`` on ``comm``.  All mutators return a new
+    ``KVCachePages`` (the windows are frozen dataclasses)."""
+
+    windows: dict
+    comm: Communicator
+
+    @classmethod
+    def for_model(cls, model, slots: int, s_max: int,
+                  comm: Optional[Communicator] = None) -> "KVCachePages":
+        """Fresh pages for ``slots`` concurrent requests at context
+        ``s_max``.  ``comm`` defaults to the degenerate one-rank node (the
+        single-device engine); a wider node comm shards each leaf's slot
+        axis across the node's chips."""
+        comm = comm or Communicator(fast_axis="node", slow_axis=None,
+                                    pods=1, chips=1)
+        cache = model.cache_init(slots, s_max)
+        windows = jax.tree.map(
+            lambda a: SharedWindow(comm, a, axis=0, epoch=1), cache)
+        return cls(windows=windows, comm=comm)
+
+    # -- loads ---------------------------------------------------------------
+    @property
+    def cache(self):
+        """The plain cache tree for the decode step.  Raises
+        ``WindowEpochError`` while a store epoch is open (un-fenced admit
+        or commit) — the paper's readers-wait-for-writers rule applied to
+        inference state."""
+        if (self.comm.chips or 1) != 1:
+            raise ValueError(
+                "multi-chip KV windows must be read on the mesh that owns "
+                "them (window.read() inside the decode step)")
+
+        def unwrap(w):
+            w._check_clean()
+            return w.shard
+        return jax.tree.map(unwrap, self.windows, is_leaf=_IS_WIN)
+
+    # -- stores (open an epoch) ----------------------------------------------
+    def admit(self, idx, sub_cache) -> "KVCachePages":
+        """Scatter ``sub_cache`` (a ``len(idx)``-slot cache tree, e.g. a
+        prefill result) into pages ``idx``.  Opens a dirty store epoch:
+        the slots are not readable until :meth:`fence`."""
+        idx = jnp.asarray(idx, jnp.int32)
+        new = {}
+        for top, sub in self.windows.items():
+            ax = _slot_axis(top)
+
+            def put(w, b, ax=ax):
+                a = w.shard
+                scattered = (a.at[:, idx].set(b.astype(a.dtype)) if ax == 1
+                             else a.at[idx].set(b.astype(a.dtype)))
+                return w.store(scattered)
+            new[top] = jax.tree.map(put, sub, sub_cache[top], is_leaf=_IS_WIN)
+        return dataclasses.replace(self, windows=new)
+
+    def commit(self, new_cache) -> "KVCachePages":
+        """Store a decode step's updated cache tree into the pages (dirty
+        until fenced)."""
+        windows = jax.tree.map(lambda w, a: w.store(a), self.windows,
+                               new_cache, is_leaf=_IS_WIN)
+        return dataclasses.replace(self, windows=windows)
+
+    # -- synchronization ------------------------------------------------------
+    def fence(self) -> "KVCachePages":
+        """Close the open store epoch.  On the degenerate one-rank node the
+        barrier is vacuous, so the epoch bookkeeping advances host-side; a
+        wider node comm must fence inside the jitted step
+        (``SharedWindow.fence`` — a real node barrier)."""
+        if (self.comm.chips or 1) != 1:
+            raise NotImplementedError(
+                "multi-chip pages fence on the mesh: map SharedWindow."
+                "fence() over the windows inside the decode step")
+        windows = jax.tree.map(
+            lambda w: dataclasses.replace(w, dirty=False, epoch=w.epoch + 1),
+            self.windows, is_leaf=_IS_WIN)
+        return dataclasses.replace(self, windows=windows)
+
+    # -- C1 accounting --------------------------------------------------------
+    def logical_bytes(self) -> int:
+        """Bytes of ONE logical cache copy."""
+        chips = self.comm.chips or 1
+        return sum(w.shard.nbytes * chips
+                   for w in jax.tree.leaves(self.windows, is_leaf=_IS_WIN))
+
+    def resident_node_bytes(self) -> int:
+        """Physical bytes resident per node: the sum of every rank's window
+        shard (each rank holds 1/chips of each buffer)."""
+        chips = self.comm.chips or 1
+        return sum(w.shard.nbytes * chips
+                   for w in jax.tree.leaves(self.windows, is_leaf=_IS_WIN))
+
+    def assert_c1(self) -> dict:
+        """Assert the paper's C1 invariant for inference state: the node
+        holds exactly ONE logical copy, not the ``chips``-way replication a
+        per-rank cache would cost.  Returns the accounting."""
+        chips = self.comm.chips or 1
+        logical = self.logical_bytes()
+        resident = self.resident_node_bytes()
+        replicated = logical * chips
+        if resident != logical:
+            raise AssertionError(
+                f"C1 violated for KV pages: {resident} bytes resident per "
+                f"node vs {logical} for one copy")
+        return {"logical_bytes": logical, "resident_node_bytes": resident,
+                "replicated_baseline_bytes": replicated,
+                "copies_per_node": resident / logical}

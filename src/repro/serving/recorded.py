@@ -1,0 +1,98 @@
+"""Decode-step collectives routed through a recorded ``CollectiveGraph``.
+
+On a cluster with the ``serve_fsdp`` opt, serve weights stay in the pod's
+one-copy-per-node ``SharedWindow`` store (the paper's C1 layout applied to
+inference) and every decode step gathers them at use.  Issued eagerly,
+each gather is its own collective; :class:`RecordedDecoder` instead
+*records* them once per batch signature through ``Communicator.record()``,
+runs the step-graph optimizer (same-epoch gather dedup, issue
+front-loading behind one ordering token), and on later traces of the same
+signature replays the cached :class:`~repro.comm.stepgraph.Schedule` via
+``apply_schedule`` — the PR 7 passes applied to serving for free, with
+bit-identical outputs.
+
+Live re-tuning plugs in through :meth:`RecordedDecoder.set_table`: handing
+it a fresh ``LiveTuner.overlay()`` re-optimizes subsequent signatures
+under live latency estimates instead of the committed nightly table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.stepgraph import Deferred, ScheduleResult, apply_schedule
+from repro.models.meta import PMeta
+
+_IS_META = lambda x: isinstance(x, PMeta)  # noqa: E731
+
+
+class RecordedDecoder:
+    """A drop-in ``decode_fn`` whose window gathers go through the step
+    graph.  Call signature matches ``model.decode_fn``; falls back to the
+    eager decode when the ctx has no window store (single device, naive
+    mode, or no fsdp axes)."""
+
+    def __init__(self, model, *, table=None,
+                 target_bytes: Optional[int] = None):
+        self.model = model
+        self._table = table
+        self._target_bytes = target_bytes
+        self._schedules: dict[tuple, object] = {}
+
+    def set_table(self, table) -> None:
+        """Install a new tuning table (e.g. a ``LiveTuner.overlay()``) and
+        drop cached schedules so they re-optimize under it."""
+        self._table = table
+        self._schedules.clear()
+
+    @property
+    def schedules(self) -> dict:
+        """Batch signature -> optimized ``Schedule`` (for inspection)."""
+        return dict(self._schedules)
+
+    @staticmethod
+    def _signature(token, pos) -> tuple:
+        return (tuple(token.shape), str(token.dtype), jnp.ndim(pos))
+
+    def __call__(self, params, cache, token, pos, *, unroll: int = 1):
+        model, ctx = self.model, self.model.ctx
+        comm = ctx.comm
+        if comm is None or ctx.mode != "hier" or not ctx.fsdp_axes:
+            return model.decode_fn(params, cache, token, pos, unroll=unroll)
+        from repro.models.transformer import _decode
+
+        defs = model.serve_defs
+        metas = jax.tree_util.tree_leaves_with_path(defs, is_leaf=_IS_META)
+        leaves, treedef = jax.tree.flatten(params)
+        rec = comm.record(table=self._table)
+        refs = []
+        for (path, m), w in zip(metas, leaves):
+            if m.fsdp_dim is None:
+                refs.append(w)
+                continue
+            # 'units' metas are per-layer; the leaf carries a stacked
+            # leading dim, shifting the window axis by one.
+            off = 1 if getattr(path[0], "key", None) == "units" else 0
+            win = comm.window(w.astype(ctx.compute_dtype),
+                              axis=m.fsdp_dim + off, epoch=1)
+            refs.append(rec.gather(win, key=jax.tree_util.keystr(path)))
+
+        sig = self._signature(token, pos)
+        sched = self._schedules.get(sig)
+        if sched is None:
+            res = rec.run(target_bytes=self._target_bytes)
+            self._schedules[sig] = res.schedule
+        else:                             # replay: skip the optimizer
+            values = apply_schedule(comm, sched, rec._values)
+            res = ScheduleResult(values, sched)
+
+        full = jax.tree.unflatten(
+            treedef, [res[r] if isinstance(r, Deferred) else r for r in refs])
+        # every window already read: the inner decode's gather_w is a cast
+        inner = dataclasses.replace(ctx, fsdp_axes=())
+        return _decode(model.cfg, inner, defs, full, cache, token, pos,
+                       unroll=unroll)

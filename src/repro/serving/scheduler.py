@@ -1,0 +1,239 @@
+"""Continuous / in-flight batching over heterogeneous sequence lengths.
+
+The scheduler owns a fixed array of ``slots`` decode lanes.  Each step it
+
+1. **refills** finished slots: drains a length-bucketed group from the
+   :class:`repro.serving.queue.RequestQueue`, prefills the group's prompts
+   in one padded batch, and *admits* the resulting per-request caches into
+   the KV pages (a ``SharedWindow`` store epoch — the pages are unreadable
+   until the fence closes it);
+2. runs **one decode step over the whole batch** with a per-slot position
+   vector (heterogeneous lengths decode together — no lane waits for its
+   neighbours), commits + fences the updated cache;
+3. **samples** the next token per active slot host-side and retires slots
+   whose budget is spent.
+
+Prefill admission protocol: prefill consumes ``prompt[:-1]``; a slot is
+admitted with ``(next_token, pos) = (prompt[-1], T0 - 1)``, so its first
+decode step re-feeds the last prompt token and produces the logits for the
+first generated token.  Prompts are right-padded to the group's bucket on
+pure global-attention models: a padded KV position is only attendable once
+``pos`` has passed it, by which point the decode loop has overwritten it
+(write-before-read induction) — recurrent / sliding-window models use
+exact-length buckets instead, because padded prefill steps would corrupt
+carried state.
+
+Sampling is keyed per request (``fold_in(seed, rid)``) and per token
+index, never per slot or per step — the token stream of a request is
+independent of which slot it lands in and of its batch neighbours.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.engine import GenResult, materialize_params
+from repro.serving.kv_cache import KVCachePages
+from repro.serving.queue import Request, RequestQueue, bucket_len
+
+DecodeFn = Callable[..., tuple]
+
+
+def _bucket_mode(cfg) -> str:
+    kinds = set(cfg.pattern) | set(cfg.remainder_kinds)
+    return "pow2" if kinds <= {"attn"} and cfg.window is None else "exact"
+
+
+@dataclasses.dataclass
+class StepStats:
+    """Telemetry for one scheduler step."""
+
+    decode_us: float
+    active: int
+    admitted: int
+    finished: int
+
+
+class ContinuousBatchingScheduler:
+    """Fixed-slot continuous batching engine (single-device decode).
+
+    ``decode_fn`` defaults to a jitted ``model.decode_fn``; pass a
+    :class:`repro.serving.recorded.RecordedDecoder`-style callable to
+    route the decode step's collectives through a recorded
+    ``CollectiveGraph``.  ``tuner`` (a
+    :class:`repro.serving.live_tuning.LiveTuner`) receives per-step
+    latencies keyed by the decode batch signature.
+    """
+
+    def __init__(self, model, params, *, slots: int, s_max: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 queue: Optional[RequestQueue] = None,
+                 decode_fn: Optional[DecodeFn] = None,
+                 tuner=None):
+        if slots < 1:
+            raise ValueError("need at least one slot")
+        self.model = model
+        self.params = materialize_params(params)
+        self.slots = slots
+        self.s_max = s_max
+        self.temperature = temperature
+        self.seed = seed
+        self.queue = queue if queue is not None else RequestQueue()
+        self.tuner = tuner
+        self.bucket_mode = _bucket_mode(model.cfg)
+        self.pages = KVCachePages.for_model(model, slots, s_max)
+        self._decode = decode_fn if decode_fn is not None \
+            else jax.jit(model.decode_fn)
+        self._prefills: dict[tuple[int, int], Callable] = {}
+        # live-tuning feed: decode-step latencies land in the same
+        # (family="serving", topo, dtype, size-bucket) cells the nightly
+        # bench sweep measures — nbytes is the model's global parameter
+        # byte count (the serving family's case-sizing convention), the
+        # scheme label whichever decode path this engine runs.
+        comm = model.ctx.comm
+        self._tuner_key = dict(
+            pods=(comm.pods if comm is not None and comm.pods else 1),
+            chips=(comm.chips if comm is not None and comm.chips else 1),
+            nbytes=4 * sum(
+                int(np.prod(leaf.shape)) for leaf in
+                jax.tree.leaves(jax.eval_shape(model.init_params))),
+            scheme=("recorded" if hasattr(self._decode, "set_table")
+                    else "sync"))
+
+        # host-side slot map
+        self.active = np.zeros(slots, bool)
+        self.pos = np.zeros(slots, np.int32)
+        self.next_tok = np.zeros(slots, np.int32)
+        self.remaining = np.zeros(slots, np.int32)
+        self.rid = np.full(slots, -1, np.int64)
+        self.emitted = np.zeros(slots, np.int32)
+        self._bufs: dict[int, tuple[list, list]] = {}   # rid -> (toks, lps)
+        self.results: dict[int, GenResult] = {}
+        self.stats: list[StepStats] = []
+
+    # -- admission -----------------------------------------------------------
+    def _prefill_fn(self, n: int, tb: int) -> Callable:
+        key = (n, tb)
+        fn = self._prefills.get(key)
+        if fn is None:
+            fn = jax.jit(lambda p, b: self.model.prefill_fn(p, b, self.s_max))
+            self._prefills[key] = fn
+        return fn
+
+    def _admit(self, group: list[Request]) -> None:
+        n = len(group)
+        tb = bucket_len(group[0].prompt.size - 1, self.bucket_mode)
+        if tb > 0:
+            toks = np.zeros((n, tb + 1), np.int32)
+            for i, req in enumerate(group):
+                toks[i, :req.prompt.size - 1] = req.prompt[:-1]
+            sub_cache, _ = self._prefill_fn(n, tb)(
+                self.params, {"tokens": jnp.asarray(toks)})
+        else:
+            sub_cache = self.model.cache_init(n, self.s_max)
+        idx = np.flatnonzero(~self.active)[:n]
+        self.pages = self.pages.admit(idx, sub_cache).fence()
+        for slot, req in zip(idx, group):
+            self.active[slot] = True
+            self.pos[slot] = req.prompt.size - 1
+            self.next_tok[slot] = req.prompt[-1]
+            self.remaining[slot] = req.max_new
+            self.rid[slot] = req.rid
+            self.emitted[slot] = 0
+            self._bufs[req.rid] = ([], [])
+
+    # -- sampling ------------------------------------------------------------
+    def _sample(self, lp_row: np.ndarray, rid: int, tok_idx: int) -> int:
+        if self.temperature <= 0:
+            return int(np.argmax(lp_row))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), rid), tok_idx)
+        return int(jax.random.categorical(
+            key, jnp.asarray(lp_row) / self.temperature))
+
+    # -- the step ------------------------------------------------------------
+    def step(self) -> bool:
+        """One scheduler iteration.  Returns False when fully idle."""
+        admitted = 0
+        free = int(np.sum(~self.active))
+        if free and len(self.queue):
+            group = self.queue.take_group(free, bucket=self.bucket_mode)
+            if group:
+                self._admit(group)
+                admitted = len(group)
+        if not self.active.any():
+            return False
+
+        cache = self.pages.cache
+        tok = jnp.asarray(self.next_tok[:, None])
+        posv = jnp.asarray(self.pos)
+        t0 = time.perf_counter()
+        new_cache, logits = self._decode(self.params, cache, tok, posv)
+        lp = jax.nn.log_softmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        lp = np.asarray(lp)
+        decode_us = (time.perf_counter() - t0) * 1e6
+        if self.tuner is not None:
+            self.tuner.observe("serving", us=decode_us, **self._tuner_key)
+        self.pages = self.pages.commit(new_cache).fence()
+
+        finished = 0
+        for slot in np.flatnonzero(self.active):
+            rid = int(self.rid[slot])
+            tok_i = self._sample(lp[slot], rid, int(self.emitted[slot]))
+            toks, lps = self._bufs[rid]
+            toks.append(tok_i)
+            lps.append(float(lp[slot, tok_i]))
+            self.next_tok[slot] = tok_i
+            self.pos[slot] += 1
+            self.emitted[slot] += 1
+            self.remaining[slot] -= 1
+            if self.remaining[slot] <= 0 or self.pos[slot] >= self.s_max:
+                self.results[rid] = GenResult(
+                    tokens=np.asarray([toks], np.int32),
+                    logprobs=np.asarray([lps], np.float32))
+                del self._bufs[rid]
+                self.active[slot] = False
+                self.rid[slot] = -1
+                finished += 1
+
+        self.stats.append(StepStats(decode_us=decode_us,
+                                    active=int(self.active.sum()),
+                                    admitted=admitted, finished=finished))
+        return True
+
+    def run(self, *, max_steps: Optional[int] = None) -> dict[int, GenResult]:
+        """Drive steps until queue + slots drain (or ``max_steps``)."""
+        steps = 0
+        while max_steps is None or steps < max_steps:
+            busy = self.step()
+            steps += 1
+            if not busy and not len(self.queue):
+                break
+        return self.results
+
+
+def generate(model, params, prompts, *, max_new: int, slots: int = 4,
+             s_max: Optional[int] = None, temperature: float = 0.0,
+             seed: int = 0, decode_fn: Optional[DecodeFn] = None
+             ) -> GenResult:
+    """Batch-generate via the continuous-batching scheduler.
+
+    ``prompts`` is a list of 1-D int32 arrays (heterogeneous lengths are
+    fine).  Returns tokens/logprobs stacked in request order — drop-in for
+    ``greedy_generate`` on same-length prompts."""
+    prompts = [np.asarray(p, np.int32) for p in prompts]
+    s_max = s_max or (max(p.size for p in prompts) + max_new)
+    sched = ContinuousBatchingScheduler(
+        model, params, slots=min(slots, len(prompts)), s_max=s_max,
+        temperature=temperature, seed=seed, decode_fn=decode_fn)
+    rids = [sched.queue.submit(p, max_new) for p in prompts]
+    results = sched.run()
+    return GenResult(
+        tokens=np.concatenate([results[r].tokens for r in rids], axis=0),
+        logprobs=np.concatenate([results[r].logprobs for r in rids], axis=0))

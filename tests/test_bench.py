@@ -89,9 +89,9 @@ _TOP_KEYS = {"schema", "generated_by", "jax_version", "backend",
 _CASE_KEYS = {"name", "csv_name", "family", "scheme", "topology", "pods",
               "chips", "elems", "bytes_per_rank", "dtype", "fast_axes",
               "populations", "timing", "traffic", "hlo", "checks",
-              "autotune", "ok"}
+              "autotune", "serving", "ok"}
 _TIMING_KEYS = {"median_us", "mean_us", "min_us", "max_us", "iqr_us",
-                "reps", "inner"}
+                "p50_us", "p99_us", "reps", "inner"}
 _TRAFFIC_KEYS = {"slow_bytes", "fast_bytes", "result_bytes_per_node"}
 _HLO_KEYS = {"fast_link_bytes_per_chip", "slow_link_bytes_per_chip",
              "fast_link_bytes_total", "slow_link_bytes_total", "by_op",
@@ -317,6 +317,51 @@ def test_regression_gate_requires_overlap(tmp_path):
     base = {("allgather", "naive", "2x4", 256): 10.0}
     fresh = {("allgather", "naive", "2x4", 1024): 10.0}
     assert _gate(tmp_path, base, fresh) == 1
+
+
+def _fake_report_p99(cells: dict) -> dict:
+    """cells: (family, scheme, topology, elems) -> (median_us, p99_us)."""
+    return {"schema": SCHEMA_VERSION,
+            "cases": [{"family": f, "scheme": s, "topology": t, "elems": e,
+                       "timing": {"median_us": med, "p99_us": p99}}
+                      for (f, s, t, e), (med, p99) in cells.items()]}
+
+
+def _gate_reports(tmp_path, base, fresh, *extra):
+    import sys
+    sys.path.insert(0, str(REPO_SCRIPTS))
+    import check_bench_regression as gate
+    b, f = tmp_path / "base.json", tmp_path / "fresh.json"
+    b.write_text(json.dumps(base))
+    f.write_text(json.dumps(fresh))
+    return gate.main([str(b), str(f), *extra])
+
+
+def test_regression_gate_p99_catches_tail_collapse(tmp_path):
+    """Medians hold while a scheme's p99 explodes 10x relative to its
+    reference ('recorded' — lexicographic first with no 'naive' present) —
+    the median pass is blind, the percentile pass is not."""
+    key_s = ("serving", "sync", "2x4", 1024)
+    key_r = ("serving", "recorded", "2x4", 1024)
+    base = _fake_report_p99({key_s: (100.0, 110.0), key_r: (80.0, 90.0)})
+    ok = _fake_report_p99({key_s: (100.0, 130.0), key_r: (80.0, 90.0)})
+    assert _gate_reports(tmp_path, base, ok) == 0
+    bad = _fake_report_p99({key_s: (100.0, 9000.0), key_r: (80.0, 90.0)})
+    assert _gate_reports(tmp_path, base, bad) == 1
+    # the tail band is 2 * tol: widening --tol clears it
+    assert _gate_reports(tmp_path, base, bad, "--tol", "100") == 0
+
+
+def test_regression_gate_p99_skips_legacy_baselines(tmp_path):
+    """A baseline predating p99_us (or carrying p99_us: 0.0 from a default
+    TimingResult) must skip the percentile pass, not crash or fail."""
+    key_n = ("allgather", "naive", "2x4", 1024)
+    key_p = ("allgather", "pipelined", "2x4", 1024)
+    legacy = _fake_report({key_n: 100.0, key_p: 80.0})
+    fresh = _fake_report_p99({key_n: (100.0, 9000.0), key_p: (80.0, 9000.0)})
+    assert _gate_reports(tmp_path, legacy, fresh) == 0
+    zeroed = _fake_report_p99({key_n: (100.0, 0.0), key_p: (80.0, 0.0)})
+    assert _gate_reports(tmp_path, zeroed, fresh) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -86,11 +86,13 @@ def test_from_topology_matches_tiers():
 # ---------------------------------------------------------------------------
 
 def test_registry_entries_and_errors():
-    # the step_time family registers its schemes lazily on first import —
-    # force it so the registry contents don't depend on test order
-    from repro.bench import step_time  # noqa: F401
+    # the step_time/serving families register their schemes lazily on
+    # first import — force them so registry contents don't depend on
+    # test order
+    from repro.bench import serving, step_time  # noqa: F401
     assert set(scheme_names()) == {"naive", "hier", "shared", "pipelined",
-                                   "eager", "prefetch", "stepgraph"}
+                                   "eager", "prefetch", "stepgraph",
+                                   "sync", "recorded"}
     assert get_scheme("shared").result_class == "shared"
     assert get_scheme("hier").result_class == "replicated"
     assert get_scheme("pipelined").result_class == "replicated"

@@ -1,0 +1,130 @@
+"""Live collective re-tuning: the session-local ``TuningTable`` overlay.
+
+The acceptance claim pinned here: an injected latency shift observed by
+the :class:`repro.serving.live_tuning.LiveTuner` flips a scheme winner
+through ``tuning.resolve_for`` — WITHOUT touching the base table object or
+the committed ``TUNING_default.json``.
+"""
+
+import copy
+
+import pytest
+
+from repro.comm import Communicator, tuning
+from repro.comm.tuning import Choice, TuningEntry, TuningTable
+from repro.core.plans import size_bucket
+from repro.serving.live_tuning import LiveTuner
+from repro.substrate import VirtualCluster
+
+VC2 = VirtualCluster(pods=2, chips=4)
+
+
+def _base() -> TuningTable:
+    """One measured cell: psum on 2x4, naive (100us) beats shared (120us)."""
+    return TuningTable(entries=(TuningEntry(
+        family="psum", topo="2x4", dtype="float32", nbytes=4096,
+        source="measured",
+        ranking=(Choice("naive", median_us=100.0),
+                 Choice("shared", median_us=120.0)),
+    ),), meta={})
+
+
+def test_observe_ewma_and_estimate():
+    t = LiveTuner(_base(), alpha=0.5)
+    t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive", us=200.0)
+    assert t.estimate("psum", "2x4", "float32", 4096, "naive") == 200.0
+    t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive", us=400.0)
+    # EWMA with alpha=0.5: 0.5*200 + 0.5*400
+    assert t.estimate("psum", "2x4", "float32", 4096, "naive") == 300.0
+    # unobserved scheme / cell: no estimate
+    assert t.estimate("psum", "2x4", "float32", 4096, "shared") is None
+    assert t.estimate("psum", "4x2", "float32", 4096, "naive") is None
+    with pytest.raises(ValueError):
+        t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive",
+                  us=0.0)
+    with pytest.raises(ValueError):
+        LiveTuner(alpha=0.0)
+
+
+def test_min_count_gates_single_outliers():
+    t = LiveTuner(_base(), min_count=2)
+    t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive", us=500.0)
+    # one outlier is not trusted: estimate withheld, overlay keeps base
+    assert t.estimate("psum", "2x4", "float32", 4096, "naive") is None
+    ov = t.overlay()
+    assert ov.entries[0].ranking[0].scheme == "naive"
+    assert ov.entries[0].ranking[0].median_us == 100.0
+
+
+def test_latency_shift_flips_winner_without_touching_tables():
+    """The acceptance-criteria scenario: live traffic shows 'naive' is now
+    5x its swept latency; the overlay re-ranks and ``resolve_for`` picks
+    'shared' — base table object and committed default stay untouched."""
+    base = _base()
+    base_snapshot = copy.deepcopy(base)
+    committed_snapshot = copy.deepcopy(tuning.default_table())
+    comm = Communicator.from_cluster(VC2)
+    elems = 1024                            # 4096 B: the measured cell
+
+    before = tuning.resolve_for(comm, "psum", elems=elems, table=base)
+    assert before.scheme == "naive" and before.source == "measured"
+
+    t = LiveTuner(base, min_count=2)
+    for _ in range(2):                      # min_count satisfied
+        t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive",
+                  us=500.0)
+    after = tuning.resolve_for(comm, "psum", elems=elems, table=t.overlay())
+    assert after.scheme == "shared" and after.source == "measured"
+
+    # the shift lives ONLY in the overlay
+    assert base == base_snapshot
+    assert tuning.default_table() == committed_snapshot
+    assert tuning.resolve_for(comm, "psum", elems=elems,
+                              table=base).scheme == "naive"
+    # overlay metadata records the live provenance
+    ov = t.overlay()
+    assert ov.meta["live_overlay"]["cells"] == 1
+    # base median fills the scheme live never re-measured
+    cell = ov.entries[0]
+    assert {c.scheme: c.median_us for c in cell.ranking} == \
+        {"shared": 120.0, "naive": pytest.approx(500.0)}
+
+
+def test_overlay_synthesizes_unmeasured_cells():
+    """A cell the nightly sweep never measured is synthesized from live
+    data alone and becomes resolvable at its size bucket."""
+    t = LiveTuner(_base())
+    t.observe("allgather", pods=4, chips=2, nbytes=1 << 20, scheme="shared",
+              us=80.0)
+    t.observe("allgather", pods=4, chips=2, nbytes=1 << 20, scheme="naive",
+              us=300.0)
+    ov = t.overlay()
+    synth = [e for e in ov.entries if e.family == "allgather"]
+    assert len(synth) == 1
+    e = synth[0]
+    assert e.topo == "4x2" and e.source == "measured" and e.label == "live"
+    assert e.bucket == size_bucket(1 << 20)
+    assert [c.scheme for c in e.ranking] == ["shared", "naive"]
+    # the base cell rode along untouched
+    assert _base().entries[0] in ov.entries
+
+
+def test_observe_comm_keys_by_communicator_topology():
+    t = LiveTuner(_base())
+    comm = Communicator.from_cluster(VC2)
+    t.observe_comm(comm, "psum", nbytes=4096, scheme="shared", us=50.0)
+    assert t.estimate("psum", "2x4", "float32", 4096, "shared") == 50.0
+    loose = Communicator(fast_axis="x", slow_axis=None, pods=None, chips=None)
+    with pytest.raises(ValueError, match="static"):
+        t.observe_comm(loose, "psum", nbytes=4096, scheme="shared", us=50.0)
+
+
+def test_use_installs_overlay_session_locally():
+    t = LiveTuner(_base(), min_count=1)
+    t.observe("psum", pods=2, chips=4, nbytes=4096, scheme="naive", us=500.0)
+    comm = Communicator.from_cluster(VC2)
+    with t.use():
+        inside = tuning.resolve_for(comm, "psum", elems=1024)
+        assert inside.scheme == "shared"
+    outside = tuning.resolve_for(comm, "psum", elems=1024, table=_base())
+    assert outside.scheme == "naive"

@@ -1,0 +1,402 @@
+"""Production serving subsystem: queue admission, shared-window KV pages,
+continuous batching, recorded decode collectives, and the serving bench
+family.
+
+The load-bearing claims, each pinned here:
+
+* the continuous-batching scheduler's token streams are IDENTICAL to
+  per-request generation — across heterogeneous prompt lengths, slot
+  refill, temperature sampling, and slot count;
+* KV-cache pages are node-``SharedWindow`` state: an open store epoch is
+  unreadable (``WindowEpochError``) until the fence closes it, and the C1
+  accounting (one node copy) holds for inference state;
+* ``RecordedDecoder`` routes decode-step window gathers through a recorded
+  ``CollectiveGraph`` with BIT-IDENTICAL logits (recorder on vs off) and
+  replays the cached schedule per batch signature;
+* ``materialize_params_on_mesh`` reads pod-replicated multi-pod windows
+  through the node tier (never a bridge collective);
+* ``greedy_generate`` compiles once per (model, s_max) — no re-jit per
+  call;
+* the ``serving`` bench family reports tokens/sec + p50/p99 per-token
+  latency per topology and its schemes pass the link-inventory
+  cross-check.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.comm import Communicator, SharedWindow, WindowEpochError
+from repro.models import build_by_name
+from repro.serving.engine import compiled_serve_fns, greedy_generate
+from repro.serving.kv_cache import KVCachePages
+from repro.serving.queue import AdmissionError, RequestQueue, bucket_len
+from repro.serving.scheduler import (ContinuousBatchingScheduler, generate,
+                                     _bucket_mode)
+from repro.substrate import VirtualCluster
+
+VC2 = VirtualCluster(pods=2, chips=4)
+VC42 = VirtualCluster(pods=4, chips=2)
+TUPLE = VirtualCluster(pods=2, chips=4, fast_axis=("dp", "tp"),
+                       fast_shape=(2, 2), slow_axis="pod")
+needs8 = pytest.mark.skipif(not VC2.available(), reason="needs 8 devices")
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    return build_by_name("qwen3-0.6b", reduced=True)
+
+
+def _prompts(model, lengths, seed=3):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, model.cfg.vocab, size=n).astype(np.int32)
+            for n in lengths]
+
+
+# ---------------------------------------------------------------------------
+# Request queue + admission control
+# ---------------------------------------------------------------------------
+
+def test_queue_validates_and_backpressures():
+    q = RequestQueue(max_pending=2, max_prompt_len=8)
+    with pytest.raises(AdmissionError, match="empty"):
+        q.submit(np.zeros(0, np.int32), 4)
+    with pytest.raises(AdmissionError, match="1-D"):
+        q.submit(np.zeros((2, 3), np.int32), 4)
+    with pytest.raises(AdmissionError, match="prompt"):
+        q.submit(np.zeros(9, np.int32), 4)
+    with pytest.raises(AdmissionError, match="max_new"):
+        q.submit(np.zeros(3, np.int32), 0)
+    q.submit(np.zeros(3, np.int32), 4)
+    q.submit(np.zeros(3, np.int32), 4)
+    with pytest.raises(AdmissionError, match="pending"):
+        q.submit(np.zeros(3, np.int32), 4)
+    assert len(q) == 2
+
+
+def test_take_group_buckets_head_of_line_and_keeps_fifo():
+    q = RequestQueue(lookahead=8)
+    # prefill lengths (prompt - 1): 5->8, 9->16, 6->8, 3->4
+    r0 = q.submit(np.zeros(6, np.int32), 1)    # bucket 8
+    q.submit(np.zeros(10, np.int32), 1)        # bucket 16
+    r2 = q.submit(np.zeros(7, np.int32), 1)    # bucket 8
+    q.submit(np.zeros(4, np.int32), 1)         # bucket 4
+    group = q.take_group(3, bucket="pow2")
+    # head-of-line bucket is 8: picks r0 and r2, skips the 16 and the 4
+    assert [r.rid for r in group] == [r0, r2]
+    # FIFO preserved for the rest: one bucket per drain
+    nxt = q.take_group(4, bucket="pow2")
+    assert [bucket_len(r.prompt.size - 1, "pow2") for r in nxt] == [16]
+    last = q.take_group(4, bucket="pow2")
+    assert [bucket_len(r.prompt.size - 1, "pow2") for r in last] == [4]
+    assert len(q) == 0
+
+
+def test_bucket_len_modes():
+    assert [bucket_len(n, "pow2") for n in (0, 1, 2, 3, 5, 8, 9)] == \
+        [0, 1, 2, 4, 8, 8, 16]
+    assert [bucket_len(n, "exact") for n in (0, 1, 5, 9)] == [0, 1, 5, 9]
+    with pytest.raises(ValueError):
+        bucket_len(3, "nope")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: no re-jit per generate call
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_compiled_serve_fns_cached_per_model_and_smax(qwen):
+    p1, d1 = compiled_serve_fns(qwen, 24)
+    p2, d2 = compiled_serve_fns(qwen, 24)
+    assert p1 is p2 and d1 is d2          # same (model, s_max): cache hit
+    p3, _ = compiled_serve_fns(qwen, 32)
+    assert p3 is not p1                   # different s_max: new entry
+
+    params = qwen.init_params(0)
+    prompts = _prompts(qwen, [8, 8])
+    a = greedy_generate(qwen, params, np.stack(prompts), max_new=3, s_max=24)
+    traced_p, traced_d = p1._cache_size(), d1._cache_size()
+    assert traced_p > 0                   # generate used the cached fns
+    b = greedy_generate(qwen, params, np.stack(prompts), max_new=3, s_max=24)
+    assert p1._cache_size() == traced_p   # second call re-traced nothing
+    assert d1._cache_size() == traced_d
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache pages: epoch fences + C1 accounting
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_kv_pages_epoch_guard_and_c1(qwen):
+    pages = KVCachePages.for_model(qwen, slots=2, s_max=16)
+    _ = pages.cache                       # clean: readable
+    sub = qwen.cache_init(1, 16)
+    dirty = pages.admit(np.array([0]), sub)
+    with pytest.raises(WindowEpochError):
+        _ = dirty.cache                   # open epoch: dirty reads raise
+    fenced = dirty.fence()
+    _ = fenced.cache                      # fence closed the epoch
+    e0 = next(iter(jax.tree.leaves(
+        pages.windows, is_leaf=lambda x: isinstance(x, SharedWindow)))).epoch
+    e1 = next(iter(jax.tree.leaves(
+        fenced.windows, is_leaf=lambda x: isinstance(x, SharedWindow)))).epoch
+    assert e1 == e0 + 1                   # slot reuse is epoch-guarded
+    acct = fenced.assert_c1()
+    assert acct["copies_per_node"] == 1   # paper C1 for inference state
+    assert acct["resident_node_bytes"] == acct["logical_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: refill + per-request identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_scheduler_matches_greedy_on_uniform_prompts(qwen):
+    params = qwen.init_params(0)
+    prompts = _prompts(qwen, [9, 9, 9])
+    want = greedy_generate(qwen, params, np.stack(prompts), max_new=5)
+    got = generate(qwen, params, prompts, max_new=5, slots=3)
+    np.testing.assert_array_equal(got.tokens, want.tokens)
+    np.testing.assert_allclose(got.logprobs, want.logprobs,
+                               rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_slot_refill_heterogeneous_identity(qwen):
+    """5 heterogeneous requests through 2 slots: finished slots are
+    refilled mid-flight and every request's stream equals its solo run."""
+    params = qwen.init_params(0)
+    prompts = _prompts(qwen, [3, 9, 5, 1, 6])
+    s_max = 16
+
+    sched = ContinuousBatchingScheduler(qwen, params, slots=2, s_max=s_max)
+    rids = [sched.queue.submit(p, 4) for p in prompts]
+    results = sched.run()
+    assert set(results) == set(rids)
+    # refill actually happened: more admissions than slots, and some step
+    # admitted while another lane was still decoding
+    assert sum(s.admitted for s in sched.stats) == len(prompts)
+    assert any(s.admitted and s.active > s.admitted for s in sched.stats)
+    # per-slot position counters advanced per lane, not in lockstep
+    assert not sched.active.any()
+
+    for rid, p in zip(rids, prompts):
+        solo = generate(qwen, params, [p], max_new=4, slots=1, s_max=s_max)
+        np.testing.assert_array_equal(results[rid].tokens, solo.tokens)
+        np.testing.assert_allclose(results[rid].logprobs, solo.logprobs,
+                                   rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_temperature_sampling_is_slot_independent(qwen):
+    """temperature > 0: the sampled stream of a request is a function of
+    (seed, rid, token index) — not of slot count or batch neighbours."""
+    params = qwen.init_params(0)
+    prompts = _prompts(qwen, [4, 7, 5], seed=11)
+    a = generate(qwen, params, prompts, max_new=4, slots=2,
+                 temperature=1.0, seed=7)
+    b = generate(qwen, params, prompts, max_new=4, slots=3,
+                 temperature=1.0, seed=7)
+    np.testing.assert_array_equal(a.tokens, b.tokens)
+    c = generate(qwen, params, prompts, max_new=4, slots=2,
+                 temperature=1.0, seed=8)
+    assert not np.array_equal(a.tokens, c.tokens)
+    # greedy ties out with temperature=0 regardless of seed
+    g0 = generate(qwen, params, prompts, max_new=4, slots=2, seed=1)
+    g1 = generate(qwen, params, prompts, max_new=4, slots=2, seed=2)
+    np.testing.assert_array_equal(g0.tokens, g1.tokens)
+
+
+@pytest.mark.slow
+def test_recurrent_model_uses_exact_buckets_and_finite_decode():
+    """Recurrent/sliding-window models must not pad prefill (carried state)
+    — and a prompt SHORTER than the attention window must decode finite
+    (regression: the ring relayout's out-of-bounds gather used to leave
+    NaN in never-written ring slots, poisoning decode attention)."""
+    model = build_by_name("recurrentgemma-9b", reduced=True)
+    assert _bucket_mode(model.cfg) == "exact"
+    params = model.init_params(0)
+    prompts = _prompts(model, [5, 5])     # 5 < window: the NaN regression
+    res = greedy_generate(model, params, np.stack(prompts), max_new=3)
+    assert np.isfinite(res.logprobs).all()
+    got = generate(model, params, prompts, max_new=3, slots=2)
+    np.testing.assert_array_equal(got.tokens, res.tokens)
+
+
+@pytest.mark.slow
+def test_scheduler_feeds_live_tuner(qwen):
+    """Each decode step lands one latency observation in the LiveTuner,
+    keyed like the nightly serving sweep's cells."""
+    from repro.comm.tuning import topo_signature
+    from repro.serving.live_tuning import LiveTuner
+    tuner = LiveTuner(min_count=1)
+    params = qwen.init_params(0)
+    sched = ContinuousBatchingScheduler(qwen, params, slots=2, s_max=16,
+                                        tuner=tuner)
+    for p in _prompts(qwen, [4, 6]):
+        sched.queue.submit(p, 3)
+    sched.run()
+    n_steps = len(sched.stats)
+    assert n_steps > 0
+    key = sched._tuner_key
+    topo = topo_signature(key["pods"], key["chips"])
+    est = tuner.estimate("serving", topo, "float32", key["nbytes"], "sync")
+    assert est is not None and est > 0
+    (cell_key, cell), = tuner._cells.items()
+    assert cell_key[0] == "serving"
+    assert cell.count["sync"] == n_steps
+
+
+# ---------------------------------------------------------------------------
+# Recorded decode collectives: bit-identity + schedule replay
+# ---------------------------------------------------------------------------
+
+def _cluster_model(vc, cfg_name="qwen3-0.6b"):
+    from repro.configs import get_config
+    from repro.models.transformer import build
+    from repro.runtime.steps import cluster_ctx
+    cfg = get_config(cfg_name).reduced()
+    ctx = cluster_ctx(vc, opts=("serve_fsdp",))
+    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+    data = 1
+    for a in ctx.fsdp_axes:
+        data *= sizes[a]
+    return build(cfg, ctx, data=data)
+
+
+@needs8
+@pytest.mark.slow
+def test_recorded_decoder_bit_identical_and_replays():
+    from repro.comm.stepgraph import Schedule
+    from repro.serving.recorded import RecordedDecoder
+    vc = VC2
+    model = _cluster_model(vc)
+    ctx = model.ctx
+    params = model.init_params(0)
+    leaves, tdef = jax.tree.flatten(params)
+    pspecs = model.param_specs(serve=True, tp_axis=ctx.tp_axis,
+                               fsdp_axis=ctx.fsdp_axes[0])
+    in_specs = tuple(jax.tree.leaves(pspecs))
+    B, s_max = 3, 16
+    tok = jnp.asarray([[5], [9], [2]], jnp.int32)
+    posv = jnp.asarray([0, 3, 1], jnp.int32)
+    dec = RecordedDecoder(model)
+
+    def run(fn):
+        def body(*pl):
+            p = jax.tree.unflatten(tdef, pl)
+            _, lg = fn(p, model.cache_init(B, s_max), tok, posv)
+            return lg
+        return np.asarray(vc.run(body, *leaves, in_specs=in_specs,
+                                 out_specs=P()))
+
+    off = run(model.decode_fn)
+    on = run(dec)
+    np.testing.assert_array_equal(off, on)          # bit-identical
+    assert np.isfinite(off).all()
+
+    (sig, sched), = dec.schedules.items()
+    assert isinstance(sched, Schedule)
+    n_fsdp = sum(m.fsdp_dim is not None for m in jax.tree.leaves(
+        model.serve_defs, is_leaf=lambda x: hasattr(x, "fsdp_dim")))
+    gathers = [n for n in sched.graph.nodes if n.family == "gather"]
+    assert len(gathers) == n_fsdp > 0   # every window leaf went via graph
+
+    on2 = run(dec)                      # same signature: replay path
+    np.testing.assert_array_equal(off, on2)
+    assert len(dec.schedules) == 1
+
+    dec.set_table(None)                 # new table drops cached schedules
+    assert dec.schedules == {}
+
+
+@pytest.mark.slow
+def test_recorded_decoder_single_device_fallback(qwen):
+    """No window store (ctx single): RecordedDecoder IS model.decode_fn."""
+    from repro.serving.recorded import RecordedDecoder
+    params = qwen.init_params(0)
+    cache = qwen.cache_init(2, 8)
+    tok = jnp.asarray([[1], [2]], jnp.int32)
+    dec = RecordedDecoder(qwen)
+    _, a = dec(params, cache, tok, jnp.asarray([0, 3], jnp.int32))
+    _, b = qwen.decode_fn(params, cache, tok, jnp.asarray([0, 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert dec.schedules == {}          # nothing recorded on the fallback
+
+
+# ---------------------------------------------------------------------------
+# Satellite: pod-replicated multi-pod windows materialize node-side
+# ---------------------------------------------------------------------------
+
+@needs8
+@pytest.mark.slow
+@pytest.mark.parametrize("vc", [VC2, VC42, TUPLE],
+                         ids=lambda c: c.label)
+def test_materialize_params_on_mesh_pod_replicated_windows(vc):
+    """A multi-pod window is pod-replicated (one node copy per pod); the
+    mesh-side read must gather through the node tier and hand back the
+    NODE buffer — not a bridge collective over the pod stack."""
+    from repro.serving.engine import materialize_params_on_mesh
+    comm = Communicator.from_cluster(vc)
+    assert comm.slow_axis is not None and comm.pods > 1
+    buf = np.arange(8 * 3, dtype=np.float32).reshape(8, 3)
+    # rank-major global: identical node buffers stacked slow-major
+    w = jnp.asarray(np.concatenate([buf] * vc.pods, axis=0))
+    out = materialize_params_on_mesh(
+        {"w": SharedWindow(comm, w, axis=0, epoch=1), "b": jnp.ones(3)}, vc)
+    np.testing.assert_array_equal(np.asarray(out["w"]), buf)
+    np.testing.assert_array_equal(np.asarray(out["b"]), 1.0)
+    # dirty multi-pod windows stay rejected on the mesh path
+    with pytest.raises(ValueError, match="dirty"):
+        materialize_params_on_mesh(
+            {"w": SharedWindow(comm, w, epoch=1, dirty=True)}, vc)
+
+
+# ---------------------------------------------------------------------------
+# The serving bench family
+# ---------------------------------------------------------------------------
+
+def test_serving_schemes_registered_with_fallbacks():
+    from repro.bench import serving  # noqa: F401  registers sync/recorded
+    from repro.comm import registry, tuning
+    assert {"sync", "recorded"} <= set(registry.scheme_names())
+    for sch in registry.schemes_for("serving"):
+        assert sch.result_class == "replicated"
+    assert tuning.FALLBACK[None]["serving"] == "sync"
+    assert tuning.FALLBACK["replicated"]["serving"] == "sync"
+
+
+def test_serving_metrics_deterministic_and_monotone():
+    from repro.bench.serving import serving_metrics
+    a = serving_metrics(1000.0)
+    b = serving_metrics(1000.0)
+    assert a == b                        # pure function of the median
+    slow = serving_metrics(2000.0)
+    assert slow["tokens_per_s"] < a["tokens_per_s"]
+    assert slow["p99_token_ms"] > a["p99_token_ms"]
+    assert a["p99_token_ms"] >= a["p50_token_ms"] > 0
+    with pytest.raises(ValueError):
+        serving_metrics(0.0)
+
+
+@needs8
+@pytest.mark.slow
+def test_serving_family_end_to_end_on_seed_shape():
+    """Both serving schemes on 2x4: link-inventory cross-check passes and
+    the report record carries tokens/sec + latency percentiles."""
+    from repro.bench import report, suites
+    cases = suites.build_cases(clusters=(VC2,), families=("serving",),
+                               elems=(1024,))
+    assert {c.scheme for c in cases} == {"sync", "recorded"}
+    suite = suites.run_suite(cases, reps=2, log=None)
+    for r in suite.cases:
+        rec = report.case_record(r)
+        assert rec["ok"], [c for c in rec["checks"] if not c["ok"]]
+        sv = rec["serving"]
+        assert sv["tokens_per_s"] > 0
+        assert sv["p99_token_ms"] >= sv["p50_token_ms"] > 0
+        assert rec["timing"]["p99_us"] >= rec["timing"]["p50_us"] > 0
