@@ -17,11 +17,20 @@ Fails (exit 1) on two kinds of bypass:
    ``optim/compression.py`` (int16 payloads the registry does not carry
    yet), and the sync primitives in ``core/sync.py`` the machinery itself
    is built from.
+3. **Bare ``Communicator(...)`` in the rebuild paths** — ``src/repro/
+   runtime/`` and ``src/repro/launch/`` must construct communicators only
+   via ``Communicator.from_cluster`` / ``Communicator.from_topology``: a
+   bare constructor there carries no static pods/chips counts, so after an
+   elastic rebuild the tuning signature is unresolvable and ``scheme=
+   "auto"`` silently degrades to the static fallback instead of re-tuning
+   for the surviving topology.
 
 Allowed everywhere:
   * ``VirtualCluster(...)`` construction (the substrate's topology spec is
     where the axis names legitimately live);
-  * ``Communicator(...)`` construction (same: the tier spec, not a call);
+  * ``Communicator(...)`` construction outside the rebuild paths (the tier
+    spec, not a call) — inside ``repro/comm`` itself, ``models/``
+    (trace-time axis wrappers), etc.;
   * annotated attribute/field definitions (``fast_axis: Axis = "data"``)
     never match the kwarg pattern.
 
@@ -49,6 +58,15 @@ RAW_ALLOWED_PATHS = (
     "src/repro/comm/",               # the primitives live here
     "src/repro/substrate/",          # compat shims wrap the primitives
     "src/repro/kernels/",            # Pallas bodies fuse their own wires
+)
+
+# bare Communicator() ctor: matches ``Communicator(`` and qualified
+# ``comm.Communicator(`` but NOT the blessed ``Communicator.from_cluster(``
+# / ``Communicator.from_topology(`` classmethods (a ``.`` follows the name)
+CTOR_RE = re.compile(r"\bCommunicator\s*\(")
+CTOR_SCAN_PATHS = (
+    "src/repro/runtime/",            # elastic rebuild paths
+    "src/repro/launch/",             # production launchers
 )
 
 
@@ -124,8 +142,25 @@ def raw_violations(repo: pathlib.Path) -> list[str]:
     return out
 
 
+def ctor_violations(repo: pathlib.Path) -> list[str]:
+    """Bare ``Communicator(...)`` constructions inside the rebuild paths
+    (``runtime/``, ``launch/``) — these must go through ``from_cluster`` /
+    ``from_topology`` so the static pods/chips counts (and with them the
+    tuning-table signature) survive every elastic rebuild."""
+    out: list[str] = []
+    for path, rel in _scan_files(repo):
+        if not any(rel.startswith(a) for a in CTOR_SCAN_PATHS):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(),
+                                      start=1):
+            if CTOR_RE.search(line.split("#", 1)[0]):
+                out.append(f"{rel}:{lineno}: {line.strip()}")
+    return out
+
+
 def violations(repo: pathlib.Path) -> list[str]:
-    return kwarg_violations(repo) + raw_violations(repo)
+    return kwarg_violations(repo) + raw_violations(repo) \
+        + ctor_violations(repo)
 
 
 def main(argv=None) -> int:
@@ -134,6 +169,7 @@ def main(argv=None) -> int:
         pathlib.Path(__file__).resolve().parent.parent
     bad_kwargs = kwarg_violations(repo)
     bad_raw = raw_violations(repo)
+    bad_ctor = ctor_violations(repo)
     if bad_kwargs:
         print("api-surface check FAILED: raw fast_axis=/slow_axis= kwargs "
               "outside repro/comm — route these call sites through "
@@ -150,7 +186,16 @@ def main(argv=None) -> int:
               file=sys.stderr)
         for v in bad_raw:
             print(f"  {v}", file=sys.stderr)
-    if bad_kwargs or bad_raw:
+    if bad_ctor:
+        print("api-surface check FAILED: bare Communicator(...) "
+              "construction in the rebuild paths (src/repro/runtime, "
+              "src/repro/launch) — use Communicator.from_cluster / "
+              "Communicator.from_topology so static pods/chips counts "
+              "(the tuning signature) survive elastic rebuilds:",
+              file=sys.stderr)
+        for v in bad_ctor:
+            print(f"  {v}", file=sys.stderr)
+    if bad_kwargs or bad_raw or bad_ctor:
         return 1
     print("api-surface check OK: all collective call sites go through "
           "repro.comm")

@@ -21,12 +21,26 @@ import json
 import os
 import threading
 import time
+import warnings
+import zipfile
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 MANIFEST = "manifest.json"
+
+#: What a torn (half-written / truncated / lost) step looks like when read
+#: back: missing files, truncated npz archives, corrupt manifest JSON,
+#: missing leaf keys.  Template/manifest MISMATCHES (shape, dtype, tree
+#: structure) are deliberately NOT here — those are caller bugs and still
+#: raise.  (json.JSONDecodeError is a ValueError subclass.)
+TORN_ERRORS = (OSError, ValueError, KeyError, zipfile.BadZipFile, zlib.error)
+
+
+class CheckpointSaveError(RuntimeError):
+    """An async save failed terminally (every IO retry exhausted)."""
 
 
 def _leaf_paths(tree) -> list[tuple[str, Any]]:
@@ -35,19 +49,29 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
 
 
 class Checkpointer:
-    def __init__(self, root: str, *, keep: int = 3):
+    def __init__(self, root: str, *, keep: int = 3, io_retries: int = 3,
+                 retry_backoff_s: float = 0.05):
         self.root = root
         self.keep = keep
+        self.io_retries = io_retries
+        self.retry_backoff_s = retry_backoff_s
         os.makedirs(root, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state, *, blocking: bool = False) -> None:
-        """Device-get now (cheap snapshot), write on a worker thread."""
+        """Device-get now (cheap snapshot), write on a worker thread.
+
+        Transient IO failures are retried with bounded exponential backoff
+        (``io_retries`` x ``retry_backoff_s`` doubling); a save that fails
+        every retry is TERMINAL and raises ``CheckpointSaveError`` from the
+        next ``wait()``/``save()`` — never silently dropped, so a train
+        loop cannot sail past its last durable state unaware."""
         host = jax.tree.map(np.asarray, jax.device_get(state))
         self.wait()
-        t = threading.Thread(target=self._write, args=(step, host),
-                             daemon=True)
+        t = threading.Thread(target=self._write_with_retries,
+                             args=(step, host), daemon=True)
         t.start()
         self._thread = t
         if blocking:
@@ -57,6 +81,24 @@ class Checkpointer:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointSaveError(
+                f"async checkpoint save failed after "
+                f"{self.io_retries + 1} attempts: {err}") from err
+
+    def _write_with_retries(self, step: int, host_state) -> None:
+        delay = self.retry_backoff_s
+        for attempt in range(self.io_retries + 1):
+            try:
+                self._write(step, host_state)
+                return
+            except OSError as e:
+                if attempt == self.io_retries:
+                    self._error = e      # terminal: surfaced by wait()
+                    return
+                time.sleep(delay)
+                delay *= 2
 
     def _write(self, step: int, host_state) -> None:
         tmp = os.path.join(self.root, f".tmp-{step}-{os.getpid()}")
@@ -80,13 +122,29 @@ class Checkpointer:
             os.rename(tmp, final)  # atomic commit
         self._gc()
 
+    def _remove_step(self, step: int) -> None:
+        path = os.path.join(self.root, f"step_{step:08d}")
+        for fn in os.listdir(path):
+            os.remove(os.path.join(path, fn))
+        os.rmdir(path)
+
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[:-self.keep]:
-            path = os.path.join(self.root, f"step_{s:08d}")
-            for fn in os.listdir(path):
-                os.remove(os.path.join(path, fn))
-            os.rmdir(path)
+            self._remove_step(s)
+
+    def discard_after(self, step: int) -> list[int]:
+        """Drop every checkpoint NEWER than ``step``.
+
+        The elastic-recovery invalidation rule: after restoring step ``s``
+        onto a rebuilt mesh, saves from the aborted timeline (steps > s,
+        taken on the pre-failure topology's float trajectory) are stale —
+        a later restore must see the recovered run's own saves, not them.
+        Returns the dropped steps."""
+        dropped = [s for s in self.all_steps() if s > step]
+        for s in dropped:
+            self._remove_step(s)
+        return dropped
 
     # --------------------------------------------------------------- restore
     def all_steps(self) -> list[int]:
@@ -106,10 +164,39 @@ class Checkpointer:
         """Restore into the structure of ``like``; re-shard to the current
         mesh if ``shardings`` (a matching tree of NamedSharding) is given —
         this is the elastic path: the checkpoint layout is logical, the mesh
-        is whatever survives."""
-        step = step if step is not None else self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        is whatever survives.
+
+        A torn step (truncated shard file, corrupt manifest — a writer that
+        died mid-commit or post-commit corruption) is DISCARDED with a
+        warning naming it, and the restore falls back to the previous
+        intact step: the newest checkpoint being unreadable must cost one
+        save interval, not the run.  ``step=`` pins the newest step the
+        caller will accept (the validated-step protocol of
+        ``RestartManager``); the fallback walks strictly OLDER steps, never
+        newer ones."""
+        steps = self.all_steps()
+        if step is not None:
+            steps = [s for s in steps if s <= step]
+        if not steps:
+            raise FileNotFoundError(f"no checkpoints under {self.root}"
+                                    + (f" at step <= {step}"
+                                       if step is not None else ""))
+        last_err: Optional[BaseException] = None
+        for s in reversed(steps):
+            try:
+                return self._load_step(like, s, shardings)
+            except TORN_ERRORS as e:
+                warnings.warn(
+                    f"checkpoint step {s} is torn "
+                    f"({type(e).__name__}: {e}); discarding it and falling "
+                    "back to the previous intact step", RuntimeWarning,
+                    stacklevel=2)
+                last_err = e
+        raise FileNotFoundError(
+            f"no intact checkpoint under {self.root}: every candidate step "
+            f"{steps} is torn") from last_err
+
+    def _load_step(self, like, step: int, shardings):
         path = os.path.join(self.root, f"step_{step:08d}")
         with open(os.path.join(path, MANIFEST)) as f:
             manifest = json.load(f)

@@ -125,6 +125,17 @@ class Communicator:
         return self.pods * self.chips
 
     @property
+    def signature(self) -> Optional[str]:
+        """Tuning-table topology signature (``None`` without static
+        pods/chips counts).  An elastic rebuild changes this key — the
+        re-resolution of ``scheme="auto"`` against the tuning table hangs
+        off it (``repro.comm.tuning.retune_for``)."""
+        if self.pods is None or self.chips is None:
+            return None
+        from repro.comm import tuning
+        return tuning.signature_for(self)
+
+    @property
     def node_map(self) -> NodeMap:
         """SMP rank->node assignment (``core.plans`` algebra)."""
         if self.pods is None or self.chips is None:

@@ -36,6 +36,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import json
+import logging
 import os
 import pathlib
 from typing import Iterable, Mapping, Optional, Sequence
@@ -431,6 +432,79 @@ def resolve_for(comm, family: str, *, elems: int, elem_bytes: int = 4,
                    elem_bytes=elem_bytes, dtype=dtype,
                    n_fast_axes=len(p._axes(comm.fast_axis)),
                    result_class=result_class, table=table)
+
+
+# ---------------------------------------------------------------------------
+# Signature re-resolution (the elastic-rebuild surface)
+# ---------------------------------------------------------------------------
+
+logger = logging.getLogger("repro.comm.tuning")
+
+
+def signature_for(comm) -> str:
+    """The tuning-table topology signature of a ``Communicator`` — the key
+    that changes when an elastic rebuild shrinks or grows the cluster."""
+    from repro.comm import primitives as p
+    if comm.pods is None or comm.chips is None:
+        raise ValueError("topology signature needs static pods/chips counts "
+                         "— build the communicator via from_cluster/"
+                         "from_topology")
+    return topo_signature(comm.pods, comm.chips,
+                          len(p._axes(comm.fast_axis)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetuneReport:
+    """What ``scheme="auto"`` now resolves to on a (possibly brand-new)
+    topology signature: one row per (family, elems) the caller is about to
+    dispatch.  ``sources`` summarizes the measured/modeled/fallback mix —
+    after a shrink onto a signature the bench never swept, every row is
+    ``modeled`` (closed-form pricing), which is the designed degradation,
+    not an error."""
+
+    signature: str
+    rows: tuple[tuple[str, int, Resolution], ...]   # (family, elems, res)
+
+    @property
+    def sources(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for _, _, res in self.rows:
+            out[res.source] = out.get(res.source, 0) + 1
+        return out
+
+    def scheme_for(self, family: str) -> Optional[str]:
+        for fam, _, res in self.rows:
+            if fam == family:
+                return res.scheme
+        return None
+
+
+def retune_for(comm, families: Sequence[str], elems_list: Sequence[int], *,
+               elem_bytes: int = 4, dtype: str = "float32",
+               result_class: Optional[str] = None,
+               table: Optional[TuningTable] = None) -> RetuneReport:
+    """Re-resolve ``scheme="auto"`` for a rebuilt communicator and LOG every
+    decision — the elastic runtime calls this right after a communicator
+    rebuild so the measured -> modeled fallback for an unseen signature is
+    visible in the recovery record instead of silently changing schedules.
+    Resolution itself is exactly the dispatch-time ``resolve_for`` chain;
+    this surface only batches and reports it."""
+    sig = signature_for(comm)
+    known = (table if table is not None else active_table()).signatures()
+    if sig not in known:
+        logger.info("retune %s: signature not in tuning table %s — "
+                    "expect modeled (closed-form) resolutions", sig,
+                    list(known))
+    rows = []
+    for family in families:
+        for elems in elems_list:
+            res = resolve_for(comm, family, elems=elems,
+                              elem_bytes=elem_bytes, dtype=dtype,
+                              result_class=result_class, table=table)
+            logger.info("retune %s: %s elems=%d -> scheme=%s (%s)",
+                        sig, family, elems, res.scheme, res.source)
+            rows.append((family, int(elems), res))
+    return RetuneReport(signature=sig, rows=tuple(rows))
 
 
 def modeled_entries(families: Iterable[str], *, pods: int, chips: int,

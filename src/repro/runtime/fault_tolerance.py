@@ -70,13 +70,37 @@ class StragglerPolicy:
 # Elastic topology: rebuild the mesh from surviving resources
 # ---------------------------------------------------------------------------
 
-def elastic_topology(n_chips: int, *, model: int = 16):
+def elastic_topology(n_chips: int, *, model: int | None = None, prev=None):
     """Largest (pod, data, model) topology that fits ``n_chips``: model is
     fixed (TP degree is a model property), pods shrink first, then data.
-    Returns a MeshTopology; raises if fewer than one model group survives."""
+
+    The model degree is derived from ``prev`` — the topology the run was on
+    before the failure — so a run launched with any TP degree keeps it
+    through every shrink; an explicit ``model=`` overrides, and only with
+    neither does the production default of 16 apply.  Survivors that do not
+    factor into whole model groups are an ERROR naming the stranded chips
+    (silently dropping them would strand live hardware *and* change the
+    data-parallel arithmetic without anyone deciding to): the caller evicts
+    down to a clean multiple or re-pools a spare.
+
+    Returns a MeshTopology; raises if fewer than one model group survives.
+    """
     from repro.core.topology import MeshTopology
+    if model is None:
+        if prev is not None and "model" in prev.axis_sizes:
+            model = prev.size("model")
+        else:
+            model = 16
     if n_chips < model:
         raise ValueError(f"need >= {model} chips, have {n_chips}")
+    stranded = n_chips % model
+    if stranded:
+        raise ValueError(
+            f"{stranded} stranded chip(s): {n_chips} survivors do not "
+            f"factor into model={model} groups ({n_chips // model} whole "
+            f"groups + {stranded} extra) — evict down to "
+            f"{n_chips - stranded} chips or re-pool {model - stranded} "
+            "spares")
     data = n_chips // model
     pods = 1
     # prefer 256-chip pods (16 data x 16 model), extras become pods

@@ -229,6 +229,107 @@ def cluster_ctx(vc, *, mode: str = "hier", compute_dtype=jnp.float32,
         mode=mode, compute_dtype=compute_dtype, opts=frozenset(opts))
 
 
+def make_cluster_train_step(cfg: ModelConfig, vc, *, mode: str = "hier",
+                            lr: float = 3e-4, weight_decay: float = 0.1,
+                            clip: float = 1.0, unroll: int = 1,
+                            global_batch: int = 8, opts=(),
+                            compute_dtype=jnp.float32) -> TrainStepBundle:
+    """``make_train_step`` over a ``VirtualCluster``'s OWN mesh and axis
+    names — the elastic runtime's step builder.
+
+    After a pod loss the runtime calls this again with the SURVIVING
+    cluster: ``cluster_ctx`` re-maps the tiers, the world communicator is
+    rebuilt via ``Communicator.from_cluster`` (the blessed constructor —
+    static pods/chips counts feed the tuning-table signature), and
+    ``scheme="auto"`` re-resolves against the new signature at trace time.
+    When ``global_batch`` does not divide the surviving data-parallel rank
+    count (e.g. 8 ranks -> 7 after a node loss), the batch is REPLICATED
+    instead of sharded — every rank computes the full batch and the
+    ``cnt`` normalization absorbs the overcount, so the update math is
+    unchanged and no topology is unreachable after a shrink.
+    """
+    if cfg.frontend not in (None, "", "tokens"):
+        raise ValueError(f"cluster train step only drives the token "
+                         f"frontend, not {cfg.frontend!r}")
+    ctx = cluster_ctx(vc, mode=mode, compute_dtype=compute_dtype, opts=opts)
+    sizes = dict(zip(vc.axis_names, vc.axis_shapes))
+    data = 1
+    for a in (ctx.fsdp_axes or tuple(a for a in ctx.dp_axes
+                                     if a != ctx.pod_axis)):
+        data *= sizes[a]
+    model = build(cfg, ctx, data=data)
+    defs = model.defs
+    pspecs = model.param_specs(tp_axis=ctx.tp_axis,
+                               fsdp_axis=ctx.fsdp_axes[0]
+                               if ctx.fsdp_axes else None)
+    state_specs = {"params": pspecs, "m": pspecs, "v": pspecs, "step": P()}
+    n_dp = 1
+    for a in ctx.dp_axes:
+        n_dp *= sizes[a]
+    shard_batch = global_batch % n_dp == 0
+    bspec = {"tokens": P(ctx.dp_axes) if shard_batch else P()}
+    meta_leaves = jax.tree.leaves(defs,
+                                  is_leaf=lambda x: isinstance(x, PMeta))
+    world = Communicator.from_cluster(vc)
+    node = world.split_type_shared()
+
+    from repro.models.transformer import _loss  # local-body entry
+
+    def body(state, batch):
+        params = state["params"]
+
+        def lf(p):
+            return _loss(cfg, ctx, defs, p, batch, unroll=unroll)
+
+        (loss_sum, cnt), grads = jax.value_and_grad(lf, has_aux=True)(params)
+        # scheme="auto" + replicated constraint, exactly as the production
+        # train step: post-shrink this re-resolves against the NEW topology
+        # signature (measured entries where the bench swept it, modeled
+        # closed forms where it did not).
+        if ctx.stepgraph:
+            rec = world.record()
+            rl = rec.allreduce(loss_sum, axes=world.axes, scheme="auto",
+                               result="replicated", bucketable=False,
+                               key="loss")
+            rc = rec.allreduce(cnt, axes=world.axes, scheme="auto",
+                               result="replicated", bucketable=False,
+                               key="cnt")
+            grads = ctx.reduce_grads(grads, meta_leaves, recorder=rec)
+            res = rec.run()
+            loss_g, cnt_g = res[rl], res[rc]
+            grads = res.resolve(grads)
+        else:
+            loss_g = world.allreduce(loss_sum, result="replicated")
+            cnt_g = world.allreduce(cnt, result="replicated")
+            grads = ctx.reduce_grads(grads, meta_leaves)
+        grads = jax.tree.map(lambda g: g / cnt_g, grads)
+        gsq = jnp.float32(0.0)
+        for g, meta in zip(jax.tree.leaves(grads), meta_leaves):
+            repl = 1.0
+            if meta.tp_dim is None and ctx.tp_axis:
+                repl *= ctx.tp
+            if meta.fsdp_dim is None or ctx.mode != "hier":
+                repl *= data
+            gsq += jnp.sum(jnp.square(g.astype(jnp.float32))) / repl
+        gsq = node.allreduce(gsq, result="replicated")
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+        new_params, new_m, new_v = adamw_update(
+            params, grads, state["m"], state["v"], state["step"] + 1,
+            lr=lr, weight_decay=weight_decay)
+        new_state = {"params": new_params, "m": new_m, "v": new_v,
+                     "step": state["step"] + 1}
+        metrics = {"loss": loss_g / cnt_g, "gnorm": gnorm, "tokens": cnt_g}
+        return new_state, metrics
+
+    smapped = vc.smap(body, in_specs=(state_specs, bspec),
+                      out_specs=(state_specs,
+                                 {"loss": P(), "gnorm": P(), "tokens": P()}))
+    return TrainStepBundle(fn=smapped, state_specs=state_specs,
+                           batch_spec=bspec, model=model)
+
+
 def make_step_bench(cfg: ModelConfig, vc, *, opts=(), unroll: int = 1,
                     lr: float = 3e-4, weight_decay: float = 0.1,
                     clip: float = 1.0, global_batch: int = 8, seq: int = 32,

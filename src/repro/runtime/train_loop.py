@@ -69,3 +69,15 @@ def train(bundle, *, steps: int, data_cfg: DataConfig,
     return TrainReport(steps=steps, final_loss=losses[-1] if losses else
                        float("nan"), losses=losses, step_times=times,
                        resumed_from=start, state=state)
+
+
+def train_elastic(cfg, cluster, *, steps: int, ckpt_dir: str, plan=None,
+                  **kw):
+    """Supervised elastic training over a ``VirtualCluster``: the
+    ``ElasticRuntime`` loop (fault injection, communicator rebuild,
+    tuning re-resolution, checkpointed recovery) behind a one-call entry
+    point.  Returns an ``ElasticReport``; extra kwargs go to the runtime
+    (``global_batch``, ``seq``, ``save_every``, ``opts``, ...)."""
+    from repro.runtime.elastic import ElasticRuntime
+    rt = ElasticRuntime(cfg, cluster, ckpt_dir=ckpt_dir, plan=plan, **kw)
+    return rt.run(steps)

@@ -153,6 +153,40 @@ class VirtualCluster:
             base += "-" + ".".join(self.axis_names)
         return base
 
+    # -- elastic shrink / grow ----------------------------------------------
+    def with_pods(self, pods: int) -> "VirtualCluster":
+        """This cluster re-shaped to ``pods`` nodes (same chips per node).
+
+        The paper's two-tier layout makes failure node-granular: losing a
+        host removes ONE pod (one bridge participant, one shared window),
+        never an arbitrary slice of ranks — so elastic resize is a change
+        of the slow-tier extent only.  A factored slow tier has no single
+        extent to rewrite and is rejected."""
+        if pods < 1:
+            raise ValueError(f"cannot shrink below one node (pods={pods})")
+        if len(self.slow_names) > 1:
+            raise ValueError(
+                f"cannot resize a factored slow tier {self.slow_names}: "
+                "no single pod extent to rewrite")
+        if pods > 1 and not self.slow_names:
+            raise ValueError("single-node cluster has no slow axis to grow "
+                             "over — build a multi-pod VirtualCluster")
+        return dataclasses.replace(
+            self, pods=pods,
+            slow_shape=(pods,) if self.slow_names else None)
+
+    def without_pod(self, pod: int = -1) -> "VirtualCluster":
+        """The surviving cluster after losing one node.  ``pod`` is the
+        index of the lost node (identity only matters to the caller's
+        bookkeeping: survivors renumber densely, exactly like ranks after
+        ``MPI_Comm_split`` drops the failed members)."""
+        if self.pods == 1:
+            raise ValueError("cannot lose the last node: no survivors to "
+                             "rebuild a cluster from")
+        if not -self.pods <= pod < self.pods:
+            raise ValueError(f"pod {pod} out of range for {self.pods} nodes")
+        return self.with_pods(self.pods - 1)
+
     # -- device state --------------------------------------------------------
     def available(self) -> bool:
         return jax.device_count() >= self.num_devices

@@ -30,7 +30,8 @@ def test_check_catches_a_violation(tmp_path):
 
 
 def test_check_catches_violation_before_constructor_same_line(tmp_path):
-    bad = tmp_path / "src" / "repro" / "runtime"
+    # models/: outside the ctor-scan paths, so only the kwarg rule fires
+    bad = tmp_path / "src" / "repro" / "models"
     bad.mkdir(parents=True)
     (bad / "mixed.py").write_text(
         "y = p.naive_all_gather(x, fast_axis='d'); "
@@ -40,7 +41,7 @@ def test_check_catches_violation_before_constructor_same_line(tmp_path):
 
 
 def test_check_catches_violation_after_constructor_same_line(tmp_path):
-    bad = tmp_path / "src" / "repro" / "runtime"
+    bad = tmp_path / "src" / "repro" / "models"
     bad.mkdir(parents=True)
     (bad / "trailing.py").write_text(
         "c = Communicator(fast_axis='d'); "
@@ -50,7 +51,7 @@ def test_check_catches_violation_after_constructor_same_line(tmp_path):
 
 
 def test_check_allows_constructor_spellings(tmp_path):
-    ok = tmp_path / "src" / "repro" / "runtime"
+    ok = tmp_path / "src" / "repro" / "models"
     ok.mkdir(parents=True)
     (ok / "fine.py").write_text(
         "from repro.comm import Communicator\n"
@@ -61,6 +62,42 @@ def test_check_allows_constructor_spellings(tmp_path):
         "fast_axis: str = 'data'   # annotated field, not a call kwarg\n")
     assert check_api_surface.violations(tmp_path) == []
     assert check_api_surface.main([str(tmp_path)]) == 0
+
+
+# ---- bare-Communicator() check on the rebuild paths -------------------------
+def test_ctor_caught_in_runtime_and_launch(tmp_path):
+    for rel in ("src/repro/runtime", "src/repro/launch"):
+        d = tmp_path / rel
+        d.mkdir(parents=True)
+        (d / "rogue.py").write_text(
+            "from repro.comm import Communicator\n"
+            "world = Communicator(fast_axis='data', slow_axis='pod')\n")
+    hits = check_api_surface.ctor_violations(tmp_path)
+    assert len(hits) == 2
+    assert all("rogue.py:2" in h for h in hits)
+    assert check_api_surface.main([str(tmp_path)]) == 1
+
+
+def test_ctor_blessed_classmethods_allowed(tmp_path):
+    ok = tmp_path / "src" / "repro" / "runtime"
+    ok.mkdir(parents=True)
+    (ok / "fine.py").write_text(
+        "from repro.comm import Communicator\n"
+        "world = Communicator.from_cluster(vc)\n"
+        "topo_world = Communicator.from_topology(topo)\n"
+        "node = world.split_type_shared()\n"
+        "# a comment naming Communicator(fast_axis='d') is not a call\n")
+    assert check_api_surface.ctor_violations(tmp_path) == []
+    assert check_api_surface.main([str(tmp_path)]) == 0
+
+
+def test_ctor_bare_allowed_outside_rebuild_paths(tmp_path):
+    ok = tmp_path / "src" / "repro" / "models"
+    ok.mkdir(parents=True)
+    (ok / "wrapper.py").write_text(
+        "from repro.comm import Communicator\n"
+        "tp_comm = Communicator(fast_axis='model')\n")
+    assert check_api_surface.ctor_violations(tmp_path) == []
 
 
 # ---- raw lax.psum / lax.all_gather check ------------------------------------

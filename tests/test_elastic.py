@@ -1,0 +1,202 @@
+"""Elastic fault-tolerant runtime: fault injection, communicator rebuild,
+checkpointed recovery (``repro.runtime.elastic``).
+
+Lane split (CI): the unmarked tests are the fast lane's fault-injection
+smoke — plan grammar, event registration, one end-to-end pod-loss recovery
+on the seed 2x4 shape.  The ``slow``-marked tests are the kill-a-pod-mid-
+step matrix: over every multi-pod cluster of the topology matrix, lose a
+node mid-run and prove the continued loss trajectory is BIT-IDENTICAL to a
+reference run that started on the shrunk topology at the restored step —
+plus the straggler-eviction and torn-checkpoint recovery interactions.
+"""
+
+import logging
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.elastic import (EVENT_HANDLERS, ElasticRuntime,
+                                   FaultEvent, FaultPlan, register_event,
+                                   reference_run)
+from repro.runtime.fault_tolerance import StragglerPolicy
+from repro.runtime.train_loop import train_elastic
+from repro.substrate.cluster import VirtualCluster, default_matrix
+
+
+def tiny_cfg():
+    return get_config("qwen3-0.6b").reduced(n_layers=2, d_model=64,
+                                            n_heads=4)
+
+
+def _require(vc):
+    if jax.device_count() < vc.num_devices:
+        pytest.skip(f"needs {vc.num_devices} devices")
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan grammar (pure python, no jax)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultPlan((FaultEvent(kind="asteroid", step=3),))
+
+
+def test_fault_plan_rejects_negative_step():
+    with pytest.raises(ValueError, match="step"):
+        FaultPlan((FaultEvent.pod_loss(-1),))
+
+
+def test_fault_plan_fires_each_event_once():
+    plan = FaultPlan((FaultEvent.pod_loss(3), FaultEvent.torn_checkpoint(3),
+                      FaultEvent.host_slowdown(5, 1, factor=2.0)))
+    fired = set()
+    first = plan.pending(3, fired)
+    assert [ev.kind for _, ev in first] == ["pod_loss", "torn_checkpoint"]
+    for idx, _ in first:
+        fired.add(idx)
+    # a recovery replaying step 3 must not re-fire consumed events
+    assert plan.pending(3, fired) == []
+    assert [ev.kind for _, ev in plan.pending(5, fired)] == \
+        ["host_slowdown"]
+
+
+def test_event_constructors_fill_kind_fields():
+    ev = FaultEvent.host_slowdown(7, 2, factor=3.0, duration=4)
+    assert (ev.kind, ev.step, ev.host, ev.factor, ev.duration) == \
+        ("host_slowdown", 7, 2, 3.0, 4)
+    assert FaultEvent.pod_loss(1, pod=0).pod == 0
+    assert FaultEvent.torn_checkpoint(2).kind == "torn_checkpoint"
+
+
+def test_new_failure_kind_is_one_registration():
+    """The extension contract: a new failure kind is ONE ``@register_event``
+    — the plan validates it and the dispatch loop routes it, no other
+    change anywhere."""
+    calls = []
+
+    @register_event("power_blip")
+    def _blip(rt, ev):
+        calls.append(ev.step)
+
+    try:
+        plan = FaultPlan((FaultEvent(kind="power_blip", step=4),))
+        fired = set()
+        for idx, ev in plan.pending(4, fired):
+            fired.add(idx)
+            EVENT_HANDLERS[ev.kind](None, ev)
+        assert calls == [4]
+        assert plan.pending(4, fired) == []
+    finally:
+        EVENT_HANDLERS.pop("power_blip", None)
+
+
+# ---------------------------------------------------------------------------
+# Fast-lane fault-injection smoke: one pod-loss recovery, end to end
+# ---------------------------------------------------------------------------
+
+def test_pod_loss_recovery_smoke(tmp_path, caplog):
+    vc = VirtualCluster(pods=2, chips=4)
+    _require(vc)
+    plan = FaultPlan((FaultEvent.pod_loss(3, pod=1),))
+    with caplog.at_level(logging.INFO, logger="repro.comm.tuning"):
+        rep = train_elastic(tiny_cfg(), vc, steps=6,
+                            ckpt_dir=str(tmp_path / "ckpt"), plan=plan,
+                            save_every=2, global_batch=8, seq=16)
+    assert len(rep.recoveries) == 1
+    rec = rep.recoveries[0]
+    assert rec.cause == "pod_loss" and rec.lost_pod == 1
+    assert (rec.old_signature, rec.new_signature) == ("2x4", "1x4")
+    assert rec.restored_step == 2
+    # the shrunk signature is unseen: re-tune degrades to modeled, logged,
+    # never a crash
+    assert rec.retune.sources.get("modeled", 0) > 0
+    assert "signature not in tuning table" in caplog.text
+    # the loop replayed 2..5 on the survivor and finished
+    assert sorted(rep.losses) == list(range(6))
+    assert rep.cluster_label == "1x4" and rep.signature == "1x4"
+
+
+# ---------------------------------------------------------------------------
+# Slow lane: kill-a-pod-mid-step over the topology matrix, bit-identity
+# ---------------------------------------------------------------------------
+
+MULTI_POD = [vc for vc in default_matrix() if vc.pods > 1]
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("vc", MULTI_POD, ids=[vc.label for vc in MULTI_POD])
+def test_kill_a_pod_mid_step_bit_identity(vc, tmp_path):
+    """Lose the last pod mid-run; the recovered trajectory must equal — as
+    exact floats — a reference run that STARTED on the shrunk topology at
+    the restored step.  Identical restored state re-sharded onto the same
+    mesh + identical re-recorded program + pure-function-of-step data
+    stream leaves no room for drift."""
+    _require(vc)
+    cfg = tiny_cfg()
+    plan = FaultPlan((FaultEvent.pod_loss(5, pod=vc.pods - 1),))
+    rep = train_elastic(cfg, vc, steps=8, ckpt_dir=str(tmp_path / "ckpt"),
+                        plan=plan, save_every=2, global_batch=8, seq=16)
+    assert len(rep.recoveries) == 1
+    rec = rep.recoveries[0]
+    assert rec.old_signature != rec.new_signature
+    # every shrunk signature is outside TUNING_default.json's sweep: the
+    # re-resolution must fall to modeled pricing (and say so), not crash
+    assert rec.retune.sources.get("modeled", 0) > 0
+    assert rec.retune.signature == rec.new_signature
+
+    survivor = vc.without_pod(vc.pods - 1)
+    ref = reference_run(cfg, survivor, ckpt_dir=str(tmp_path / "ckpt"),
+                        from_step=rec.restored_step, steps=8,
+                        global_batch=8, seq=16)
+    assert ref.start_step == rec.restored_step
+    for s in sorted(ref.losses):
+        assert rep.losses[s] == ref.losses[s], \
+            f"step {s}: {rep.losses[s]} != {ref.losses[s]}"
+
+
+@pytest.mark.slow
+def test_straggler_eviction_triggers_elastic_shrink(tmp_path):
+    """StragglerPolicy -> elastic-shrink interaction: a scripted slowdown
+    drives the watchdog to evict a host; the evicted host's pod leaves the
+    cluster, the signature changes, and tuning falls to modeled without
+    error."""
+    vc = VirtualCluster(pods=4, chips=2)
+    _require(vc)
+    plan = FaultPlan((FaultEvent.host_slowdown(2, 3, factor=8.0,
+                                               duration=10),))
+    rt = ElasticRuntime(tiny_cfg(), vc, ckpt_dir=str(tmp_path / "ckpt"),
+                        plan=plan, save_every=2, global_batch=8, seq=16,
+                        straggler_factory=lambda: StragglerPolicy(
+                            patience=2))
+    rep = rt.run(6)
+    assert len(rep.recoveries) == 1
+    rec = rep.recoveries[0]
+    assert rec.cause == "straggler" and rec.lost_pod == 3
+    assert (rec.old_signature, rec.new_signature) == ("4x2", "3x2")
+    assert rec.retune.sources.get("modeled", 0) > 0
+    assert sorted(rep.losses) == list(range(6))
+    assert rep.cluster_label == "3x2"
+
+
+@pytest.mark.slow
+def test_torn_checkpoint_falls_back_during_recovery(tmp_path):
+    """A torn newest checkpoint discovered during recovery costs one save
+    interval, not the run: restore discards it with a warning, falls back
+    to the previous intact step, and the recovery record names both the
+    torn step and the stale saves invalidated after the fallback."""
+    vc = VirtualCluster(pods=2, chips=4)
+    _require(vc)
+    plan = FaultPlan((FaultEvent.torn_checkpoint(5),
+                      FaultEvent.pod_loss(5, pod=0)))
+    rt = ElasticRuntime(tiny_cfg(), vc, ckpt_dir=str(tmp_path / "ckpt"),
+                        plan=plan, save_every=2, global_batch=8, seq=16)
+    rep = rt.run(7)
+    assert len(rep.recoveries) == 1
+    rec = rep.recoveries[0]
+    assert rec.torn_discarded == (4,)        # the torn step, by name
+    assert rec.restored_step == 2            # previous intact step
+    assert 4 in rec.stale_dropped            # torn step invalidated on disk
+    # replay 2..6 completed on the survivor
+    assert sorted(rep.losses) == list(range(7))

@@ -76,6 +76,91 @@ def test_checkpoint_atomic_no_partial(tmp_path):
     assert ck.all_steps() == [5]
 
 
+def _tear(root, step):
+    """Truncate a committed step's shard file (post-commit corruption)."""
+    with open(os.path.join(str(root), f"step_{step:08d}", "shard_0.npz"),
+              "wb") as f:
+        f.write(b"torn")
+
+
+def test_restore_falls_back_past_torn_newest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        ck.save(s, {"w": jnp.full((4,), float(s))}, blocking=True)
+    _tear(tmp_path, 3)
+    with pytest.warns(RuntimeWarning, match="checkpoint step 3 is torn"):
+        restored, step = ck.restore({"w": np.zeros((4,), np.float32)})
+    assert step == 2
+    np.testing.assert_array_equal(restored["w"],
+                                  np.full((4,), 2.0, np.float32))
+
+
+def test_restore_every_step_torn_raises(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (1, 2):
+        ck.save(s, {"w": jnp.zeros((4,))}, blocking=True)
+        _tear(tmp_path, s)
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="every candidate"):
+            ck.restore({"w": np.zeros((4,), np.float32)})
+
+
+def test_restore_torn_fallback_respects_pinned_step(tmp_path):
+    """The fallback walks strictly OLDER steps than the pinned one — a
+    newer checkpoint must never be substituted for a validated step."""
+    ck = Checkpointer(str(tmp_path), keep=5)
+    for s in (1, 2, 3):
+        ck.save(s, {"w": jnp.full((4,), float(s))}, blocking=True)
+    _tear(tmp_path, 2)
+    with pytest.warns(RuntimeWarning, match="step 2 is torn"):
+        restored, step = ck.restore({"w": np.zeros((4,), np.float32)},
+                                    step=2)
+    assert step == 1
+    np.testing.assert_array_equal(restored["w"],
+                                  np.full((4,), 1.0, np.float32))
+
+
+def test_save_retries_transient_io(tmp_path):
+    ck = Checkpointer(str(tmp_path), io_retries=3, retry_backoff_s=0.001)
+    orig, calls = ck._write, {"n": 0}
+
+    def flaky(step, host_state):
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient NFS hiccup")
+        orig(step, host_state)
+
+    ck._write = flaky
+    ck.save(1, {"w": jnp.ones((4,))}, blocking=True)  # wait() inside
+    assert calls["n"] == 3
+    restored, step = ck.restore({"w": np.zeros((4,), np.float32)})
+    assert step == 1
+
+
+def test_save_terminal_failure_surfaces_on_wait(tmp_path):
+    from repro.checkpoint.checkpointer import CheckpointSaveError
+    ck = Checkpointer(str(tmp_path), io_retries=1, retry_backoff_s=0.001)
+
+    def broken(step, host_state):
+        raise OSError("disk on fire")
+
+    ck._write = broken
+    ck.save(1, {"w": jnp.ones((4,))})
+    with pytest.raises(CheckpointSaveError, match="after 2 attempts"):
+        ck.wait()
+    # the error is surfaced once, not re-raised forever
+    ck.wait()
+
+
+def test_discard_after_drops_newer_steps(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=10)
+    for s in (2, 4, 6, 8):
+        ck.save(s, {"w": jnp.full((2,), float(s))}, blocking=True)
+    assert ck.discard_after(4) == [6, 8]
+    assert ck.all_steps() == [2, 4]
+    assert ck.discard_after(4) == []
+
+
 # ---------------------------------------------------------------------------
 # fault tolerance
 # ---------------------------------------------------------------------------
@@ -109,6 +194,69 @@ def test_elastic_topology_shrinks():
     assert t.axis_sizes == {"data": 15, "model": 16}
     with pytest.raises(ValueError):
         elastic_topology(8)
+
+
+def test_elastic_topology_derives_model_from_prev():
+    """A run launched with a non-default TP degree keeps it through every
+    shrink: the model degree comes from the surviving run's own topology,
+    not the hard-coded production 16."""
+    prev = elastic_topology(256, model=8)
+    assert prev.size("model") == 8
+    shrunk = elastic_topology(248, prev=prev)  # lost one 8-chip group
+    assert shrunk.size("model") == 8
+    assert shrunk.size("data") == 31
+    # explicit model= still overrides prev
+    assert elastic_topology(248, model=4, prev=prev).size("model") == 4
+
+
+def test_elastic_topology_stranded_chips_error():
+    with pytest.raises(ValueError, match="2 stranded chip"):
+        elastic_topology(250, model=8)  # 250 = 31*8 + 2
+    # the message tells the operator both ways out
+    with pytest.raises(ValueError, match="evict down to 248"):
+        elastic_topology(250, model=8)
+
+
+# ---------------------------------------------------------------------------
+# elastic cluster shrink (VirtualCluster.without_pod / with_pods)
+# ---------------------------------------------------------------------------
+
+def test_cluster_without_pod_shrinks_and_drops_bridge():
+    from repro.substrate.cluster import VirtualCluster
+    vc = VirtualCluster(pods=2, chips=4)
+    sv = vc.without_pod(1)
+    assert (sv.pods, sv.chips) == (1, 4)
+    assert sv.slow is None           # single node: no bridge tier at all
+    assert sv.label == "1x4"
+    big = VirtualCluster(pods=4, chips=2).without_pod()
+    assert (big.pods, big.chips) == (3, 2) and big.label == "3x2"
+    with pytest.raises(ValueError, match="last node"):
+        sv.without_pod()
+    with pytest.raises(ValueError, match="out of range"):
+        vc.without_pod(5)
+
+
+def test_cluster_with_pods_rejects_unresizable_tiers():
+    from repro.substrate.cluster import VirtualCluster
+    factored = VirtualCluster(pods=4, chips=2, slow_axis=("p0", "p1"),
+                              slow_shape=(2, 2))
+    with pytest.raises(ValueError, match="factored slow tier"):
+        factored.with_pods(3)
+    single = VirtualCluster(pods=1, chips=8)
+    with pytest.raises(ValueError, match="no slow axis to grow"):
+        single.with_pods(2)
+    with pytest.raises(ValueError, match="below one node"):
+        single.with_pods(0)
+
+
+def test_cluster_shrink_keeps_factored_fast_tier():
+    from repro.substrate.cluster import VirtualCluster
+    vc = VirtualCluster(pods=2, chips=4, fast_axis=("dp", "tp"),
+                        fast_shape=(2, 2), slow_axis="pod")
+    sv = vc.without_pod(0)
+    assert (sv.pods, sv.chips) == (1, 4)
+    assert sv.fast_names == ("dp", "tp") and sv.fast_shape == (2, 2)
+    assert sv.slow is None
 
 
 # ---------------------------------------------------------------------------
