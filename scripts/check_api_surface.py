@@ -13,11 +13,16 @@ Fails (exit 1) on two kinds of bypass:
    reorder a collective it never sees).  Known-legitimate sites carry an
    inline ``# raw-collective: <reason>`` pragma — the tp fast paths
    (``ag_tokens`` and friends in ``models/parallel.py``, where the single
-   flat tp group has exactly one schedule), the quantized wire formats in
-   ``optim/compression.py`` (int16 payloads the registry does not carry
-   yet), and the sync primitives in ``core/sync.py`` the machinery itself
-   is built from.
-3. **Bare ``Communicator(...)`` in the rebuild paths** — ``src/repro/
+   flat tp group has exactly one schedule) and the sync primitives in
+   ``core/sync.py`` the machinery itself is built from.  (The quantized
+   wire formats moved INTO the registry — ``comm/quantize.py`` bodies
+   behind the ``q8_hier``/``qbf16_hier``/``q4_shared`` schemes.)
+3. **Deprecated compression free functions** — ``int8_bridge_psum(`` call
+   sites outside ``src/repro/comm/`` and ``src/repro/optim/``: the shim
+   is one-release only; new call sites go through
+   ``Communicator.allreduce(..., precision="lossy")`` /
+   ``reduce_grads(..., precision="lossy")``.
+4. **Bare ``Communicator(...)`` in the rebuild paths** — ``src/repro/
    runtime/`` and ``src/repro/launch/`` must construct communicators only
    via ``Communicator.from_cluster`` / ``Communicator.from_topology``: a
    bare constructor there carries no static pods/chips counts, so after an
@@ -58,6 +63,14 @@ RAW_ALLOWED_PATHS = (
     "src/repro/comm/",               # the primitives live here
     "src/repro/substrate/",          # compat shims wrap the primitives
     "src/repro/kernels/",            # Pallas bodies fuse their own wires
+)
+
+# deprecated one-release shims: no NEW call sites outside the shim's own
+# module and the comm layer that implements the replacement
+DEPRECATED_RE = re.compile(r"\bint8_bridge_psum\s*\(")
+DEPRECATED_ALLOWED_PATHS = (
+    "src/repro/comm/",
+    "src/repro/optim/",
 )
 
 # bare Communicator() ctor: matches ``Communicator(`` and qualified
@@ -142,6 +155,21 @@ def raw_violations(repo: pathlib.Path) -> list[str]:
     return out
 
 
+def deprecated_violations(repo: pathlib.Path) -> list[str]:
+    """Call sites of the deprecated ``optim.compression`` free functions
+    outside ``repro/comm`` and ``repro/optim`` — those must migrate to the
+    ``precision="lossy"`` Communicator dispatch before the shim goes."""
+    out: list[str] = []
+    for path, rel in _scan_files(repo):
+        if any(rel.startswith(a) for a in DEPRECATED_ALLOWED_PATHS):
+            continue
+        for lineno, line in enumerate(path.read_text().splitlines(),
+                                      start=1):
+            if DEPRECATED_RE.search(line.split("#", 1)[0]):
+                out.append(f"{rel}:{lineno}: {line.strip()}")
+    return out
+
+
 def ctor_violations(repo: pathlib.Path) -> list[str]:
     """Bare ``Communicator(...)`` constructions inside the rebuild paths
     (``runtime/``, ``launch/``) — these must go through ``from_cluster`` /
@@ -160,7 +188,7 @@ def ctor_violations(repo: pathlib.Path) -> list[str]:
 
 def violations(repo: pathlib.Path) -> list[str]:
     return kwarg_violations(repo) + raw_violations(repo) \
-        + ctor_violations(repo)
+        + deprecated_violations(repo) + ctor_violations(repo)
 
 
 def main(argv=None) -> int:
@@ -169,6 +197,7 @@ def main(argv=None) -> int:
         pathlib.Path(__file__).resolve().parent.parent
     bad_kwargs = kwarg_violations(repo)
     bad_raw = raw_violations(repo)
+    bad_deprecated = deprecated_violations(repo)
     bad_ctor = ctor_violations(repo)
     if bad_kwargs:
         print("api-surface check FAILED: raw fast_axis=/slow_axis= kwargs "
@@ -186,6 +215,14 @@ def main(argv=None) -> int:
               file=sys.stderr)
         for v in bad_raw:
             print(f"  {v}", file=sys.stderr)
+    if bad_deprecated:
+        print("api-surface check FAILED: deprecated int8_bridge_psum( call "
+              "sites outside repro/comm + repro/optim — migrate to "
+              "Communicator.allreduce(..., precision='lossy') / "
+              "reduce_grads(..., precision='lossy') (the shim is "
+              "one-release only):", file=sys.stderr)
+        for v in bad_deprecated:
+            print(f"  {v}", file=sys.stderr)
     if bad_ctor:
         print("api-surface check FAILED: bare Communicator(...) "
               "construction in the rebuild paths (src/repro/runtime, "
@@ -195,7 +232,7 @@ def main(argv=None) -> int:
               file=sys.stderr)
         for v in bad_ctor:
             print(f"  {v}", file=sys.stderr)
-    if bad_kwargs or bad_raw or bad_ctor:
+    if bad_kwargs or bad_raw or bad_deprecated or bad_ctor:
         return 1
     print("api-surface check OK: all collective call sites go through "
           "repro.comm")

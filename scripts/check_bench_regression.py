@@ -39,6 +39,15 @@ is compared the same way over cells both files carry it (older baselines
 without the field are skipped), at ``2 * tol`` — a serving engine can
 hold its median while its tail collapses, which the median pass alone
 would miss.
+
+A fourth pass gates the **quantization error model**: every
+``error/bound`` check the fresh report carries (one per quantized-scheme
+case — measured max-abs error vs the scheme's declared ceiling) must
+hold, and a fresh report that contains quantized cases but zero
+``error/bound`` checks fails outright — a validator that silently stops
+emitting the check would otherwise pass forever.  This pass reads only
+the fresh report: error bounds are absolute statements about the scheme,
+not relative to the baseline machine.
 """
 
 from __future__ import annotations
@@ -151,6 +160,43 @@ def compare(base: dict, fresh: dict, tol: float) -> tuple[list[str],
     return rows, failures
 
 
+def error_bound_pass(fresh: dict) -> tuple[list[str], list[str]]:
+    """Gate the quantized schemes' error model on the FRESH report.
+
+    Every ``error/bound`` check (measured max-abs quantization error vs
+    the scheme's declared ceiling, one-sided) must be ``ok``.  Quantized
+    cases are recognized by carrying such a check; if the report has
+    none at all but names a ``q``-prefixed scheme, the validator stopped
+    emitting the check and the gate fails rather than passing silently.
+    """
+    rows, failures = [], []
+    n_bound = 0
+    quantized_cases = 0
+    for case in fresh.get("cases", []):
+        bound_checks = [ch for ch in case.get("checks", [])
+                        if ch.get("name") == "error/bound"]
+        if str(case.get("scheme", "")).startswith("q"):
+            quantized_cases += 1
+        for ch in bound_checks:
+            n_bound += 1
+            if not ch.get("ok", False):
+                failures.append(
+                    f"{case['family']}/{case['scheme']}/{case['topology']}"
+                    f"/e{case['elems']}: measured quantization error "
+                    f"{ch.get('measured')} exceeds declared bound "
+                    f"{ch.get('expected')}")
+    if quantized_cases and not n_bound:
+        failures.append(
+            f"fresh report has {quantized_cases} quantized cases but no "
+            "error/bound checks — the validator stopped emitting the "
+            "error-model check")
+    rows.append(f"  error-bound pass: {n_bound} checks over "
+                f"{quantized_cases} quantized cases"
+                if n_bound or quantized_cases else
+                "  error-bound pass: skipped (no quantized cases in sweep)")
+    return rows, failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="compare fresh bench medians against the committed "
@@ -173,6 +219,9 @@ def main(argv=None) -> int:
             return 1
 
     rows, failures = compare(base, fresh, args.tol)
+    eb_rows, eb_failures = error_bound_pass(fresh)
+    rows += eb_rows
+    failures += eb_failures
     print(f"bench-regression: {len(rows)} compared cells "
           f"(tol {args.tol}x, normalized within-run):")
     for r in rows:

@@ -90,6 +90,12 @@ def main(argv=None) -> int:
     ap.add_argument("--elems", default=None,
                     help="comma list of message sizes in elems, overriding "
                          "the quick/full defaults (e.g. 1024,65536)")
+    ap.add_argument("--dtypes", default="float32",
+                    help="comma list of payload dtypes; non-float32 "
+                         "entries sweep only the wire-format-sensitive "
+                         "families (allgather, psum) so the tuning table "
+                         "can discriminate by dtype "
+                         "(e.g. float32,bfloat16; default %(default)s)")
     ap.add_argument("--reps", type=int, default=None,
                     help="timed reps per case (default 30, quick 5)")
     ap.add_argument("--min-rep-s", type=float, default=0.0,
@@ -128,14 +134,15 @@ def main(argv=None) -> int:
     else:
         elems = suites.QUICK_ELEMS if args.quick else suites.FULL_ELEMS
     reps = args.reps if args.reps is not None else (5 if args.quick else 30)
+    dtypes = tuple(args.dtypes.split(","))
 
     cases = suites.build_cases(
         families=families, elems=elems, max_devices=args.max_devices,
-        schemes=schemes,
+        schemes=schemes, dtypes=dtypes,
         on_skip=lambda msg: print(f"repro.bench: {msg}", file=sys.stderr))
     print(f"repro.bench: {len(cases)} cases over "
           f"{len({c.topology for c in cases})} topologies x {elems} elems "
-          f"(reps={reps})", file=sys.stderr)
+          f"x dtypes {dtypes} (reps={reps})", file=sys.stderr)
     try:
         suite = suites.run_suite(cases, reps=reps,
                                  min_rep_s=args.min_rep_s,
@@ -146,7 +153,7 @@ def main(argv=None) -> int:
         return 1
 
     rep = report.to_report(suite, quick=args.quick, reps=reps,
-                           families=families, elems=elems)
+                           families=families, elems=elems, dtypes=dtypes)
     report.write_report(rep, args.out)
     if args.csv:
         for row in report.csv_rows(suite):

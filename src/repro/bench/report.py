@@ -24,7 +24,7 @@ import json
 from typing import Sequence
 
 from repro.bench import SCHEMA_VERSION
-from repro.bench.suites import ELEM_DTYPE, CaseResult, SuiteResult
+from repro.bench.suites import CaseResult, SuiteResult
 
 
 def case_record(r: CaseResult) -> dict:
@@ -45,8 +45,8 @@ def case_record(r: CaseResult) -> dict:
         "pods": c.cluster.pods,
         "chips": c.cluster.chips,
         "elems": c.elems,
-        "bytes_per_rank": c.elems * 4,
-        "dtype": ELEM_DTYPE,
+        "bytes_per_rank": c.elems * c.elem_bytes,
+        "dtype": c.dtype,
         "fast_axes": len(c.cluster.fast_names),
         "populations": list(c.populations) if c.populations else None,
         "timing": r.timing.to_dict(),
@@ -64,18 +64,19 @@ def copies_per_node(r: CaseResult) -> int:
     a node holds (naive: one per rank; shared: one — paper C1).  The seed
     bench divided by per-rank bytes and printed rank counts instead."""
     c = r.case
+    eb = c.elem_bytes
     if c.family in ("allgather", "alltoall"):
         # alltoall: the "full result" is one rank's R*m receive buffer —
         # rank-private in every scheme, so copies_per_node == ranks_per_node
-        full = c.cluster.num_devices * c.elems * 4
+        full = c.cluster.num_devices * c.elems * eb
     elif c.family == "allgatherv":
-        full = sum(c.populations) * c.elems * 4
+        full = sum(c.populations) * c.elems * eb
     elif c.family == "reduce_scatter":
         # unit = the node's flat share of the scattered result; the shared
         # window keeps the whole reduced message (num_nodes shares) once
-        full = c.elems * 4 // c.cluster.pods
+        full = c.elems * eb // c.cluster.pods
     else:                       # broadcast / psum: the message itself
-        full = c.elems * 4
+        full = c.elems * eb
     return c.traffic.result_bytes_per_node // full
 
 
@@ -92,7 +93,8 @@ def csv_rows(suite: SuiteResult) -> list[str]:
 
 
 def to_report(suite: SuiteResult, *, quick: bool, reps: int,
-              families: Sequence[str], elems: Sequence[int]) -> dict:
+              families: Sequence[str], elems: Sequence[int],
+              dtypes: Sequence[str] = ("float32",)) -> dict:
     import jax
     matrix = sorted({r.case.topology for r in suite.cases})
     n_checks = sum(len(r.checks) for r in suite.cases) + \
@@ -104,7 +106,8 @@ def to_report(suite: SuiteResult, *, quick: bool, reps: int,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "sweep": {"quick": quick, "reps": reps,
-                  "families": list(families), "elems": list(elems)},
+                  "families": list(families), "elems": list(elems),
+                  "dtypes": list(dtypes)},
         "matrix": matrix,
         "cases": [case_record(r) for r in suite.cases],
         "cross_checks": [ch.to_dict() for ch in suite.cross_checks],

@@ -275,7 +275,8 @@ class StepTimeScheme(CollectiveScheme):
                 return v
         return None
 
-    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4):
+    def links(self, family, *, pods, chips, fast_shape, elems, elem_bytes=4,
+              opts=None, dtype="float32"):
         inv = self._inventory.get((pods, chips, tuple(fast_shape), elems))
         if inv is None:
             raise ValueError(

@@ -47,9 +47,56 @@ from repro.comm import Communicator, SharedWindow, registry
 from repro.core.plans import CollectiveTraffic, GatherPlan, NodeMap
 from repro.substrate import VirtualCluster, default_matrix
 
-ELEM_BYTES = 4  # all payloads are float32 (NOT float64 — the x64-disabled
+ELEM_BYTES = 4  # the default float32 payload (NOT float64 — the x64-disabled
                 # downcast warning of the seed bench came from f64 arange)
 ELEM_DTYPE = "float32"  # recorded per case: the tuning table keys by dtype
+
+# families swept at extra dtypes (``--dtypes float32,bfloat16``): the
+# gradient-reduction and weight-window payloads whose wire format the
+# quantized schemes compress — a bf16 sweep lets the tuning table
+# discriminate by dtype (an int8 wire buys ~4x over f32 but only ~2x over
+# bf16, so the ranking can legitimately flip).
+DTYPE_SWEPT = ("allgather", "psum")
+
+
+def _dtype_bytes(dtype: str) -> int:
+    """Per-element bytes of a named jnp dtype (handles bfloat16, which
+    plain ``np.dtype(str)`` does not know)."""
+    return int(np.dtype(getattr(jnp, dtype)).itemsize)
+
+
+def _wire_bytes(dtype: str) -> int:
+    """Per-element bytes the payload occupies ON THE WIRE in the compiled
+    artifact.  XLA's CPU backend normalizes sub-f32 *float* collectives to
+    f32 (``convert -> f32 collective -> convert``), so a bf16 payload
+    crosses links at 4 bytes there — the link-byte expectations must price
+    the artifact, not the logical dtype.  Integer wires (the quantized
+    schemes' codes, incl. the bitcast-u16 bf16 wire) lower natively on
+    every backend and are priced inside each scheme's ``links`` closed
+    form, independent of this payload width."""
+    eb = _dtype_bytes(dtype)
+    if eb < 4 and jax.default_backend() == "cpu" and \
+            jnp.issubdtype(getattr(jnp, dtype), jnp.floating):
+        return 4
+    return eb
+
+def _case_traffic(sch, family: str, vc, elems: int, dtype: str,
+                  **kw) -> CollectiveTraffic:
+    """The scheme's traffic model for one case: wire bytes priced at the
+    COMPILED width (``_wire_bytes`` — the HLO cross-check target), the
+    resident result at the LOGICAL dtype width (output shards really are
+    e.g. bf16 even when the CPU backend widens the wire)."""
+    web, eb = _wire_bytes(dtype), _dtype_bytes(dtype)
+    tr = sch.traffic(family, pods=vc.pods, chips=vc.chips, elems=elems,
+                     elem_bytes=web, **kw)
+    if eb == web:
+        return tr
+    res = sch.traffic(family, pods=vc.pods, chips=vc.chips, elems=elems,
+                      elem_bytes=eb, **kw)
+    return CollectiveTraffic(
+        slow_bytes=tr.slow_bytes, fast_bytes=tr.fast_bytes,
+        result_bytes_per_node=res.result_bytes_per_node)
+
 
 FAMILIES = ("allgather", "broadcast", "psum", "reduce_scatter",
             "allgatherv", "alltoall", "step_time", "serving")
@@ -96,19 +143,35 @@ class BenchCase:
     populations: Optional[tuple] = None      # allgatherv only
     body_with: Optional[Callable[[dict], Callable]] = None
     tunable_grid: tuple = ({},)
+    dtype: str = ELEM_DTYPE          # payload dtype (wire-format sweeps)
 
     @property
     def topology(self) -> str:
         return self.cluster.label
 
     @property
+    def elem_bytes(self) -> int:
+        """Logical per-element bytes (result layouts, tuning-table keys)."""
+        return _dtype_bytes(self.dtype)
+
+    @property
+    def wire_elem_bytes(self) -> int:
+        """Per-element bytes on the compiled wire (see ``_wire_bytes``)."""
+        return _wire_bytes(self.dtype)
+
+    @property
     def name(self) -> str:
-        return f"{self.family}/{self.scheme}/{self.topology}/e{self.elems}"
+        # f32 names stay unsuffixed so the CI regression gate's committed
+        # baseline cells keep matching across the dtype-sweep introduction
+        base = f"{self.family}/{self.scheme}/{self.topology}/e{self.elems}"
+        return base if self.dtype == ELEM_DTYPE else f"{base}/{self.dtype}"
 
     @property
     def csv_name(self) -> str:
-        return slug(f"{self.family}_{self.scheme}_{self.topology}"
-                    f"_{self.elems}")
+        base = f"{self.family}_{self.scheme}_{self.topology}_{self.elems}"
+        if self.dtype != ELEM_DTYPE:
+            base = f"{base}_{self.dtype}"
+        return slug(base)
 
     def compile(self, tunable: Optional[dict] = None):
         """AOT-compile on the cluster mesh (one tunable candidate).
@@ -127,6 +190,12 @@ class BenchCase:
 
 def _ranked_f32(num: int) -> jax.Array:
     return jnp.arange(num, dtype=jnp.float32)
+
+
+def _ranked(num: int, dtype: str) -> jax.Array:
+    """Ranked payload in the case dtype (built in f32, downcast once, so
+    the bf16 sweep measures a bf16 wire, not an f32 arange side effect)."""
+    return _ranked_f32(num).astype(getattr(jnp, dtype))
 
 
 # ---------------------------------------------------------------------------
@@ -166,12 +235,12 @@ def _grid_or_skip(sch, family: str, vc: VirtualCluster, elems: int,
 
 
 def allgather_cases(vc: VirtualCluster, elems: int, on_skip=None,
-                    schemes=None):
+                    schemes=None, dtype: str = ELEM_DTYPE):
     comm = Communicator.from_cluster(vc)
     R = vc.num_devices
 
     def args():
-        return (_ranked_f32(R * elems),)
+        return (_ranked(R * elems, dtype),)
 
     for sch in _swept(registry.schemes_for("allgather"), schemes):
         grid = _grid_or_skip(sch, "allgather", vc, elems, on_skip)
@@ -179,26 +248,28 @@ def allgather_cases(vc: VirtualCluster, elems: int, on_skip=None,
             continue
         out_specs = P(None) if sch.result_class == "replicated" else vc.spec
 
-        def body_with(opts, s=sch.name):
-            return lambda v: _raw(comm.allgather(v, scheme=s, **opts))
+        # a concretely-named lossy scheme must opt in (Communicator raises
+        # otherwise); exact schemes keep the default constraint
+        def body_with(opts, s=sch.name, p=sch.precision):
+            return lambda v: _raw(comm.allgather(v, scheme=s, precision=p,
+                                                 **opts))
 
         yield BenchCase(
             "allgather", sch.name, vc, elems,
             body=body_with({}),
             in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
-            traffic=sch.traffic("allgather", pods=vc.pods, chips=vc.chips,
-                                elems=elems, elem_bytes=ELEM_BYTES),
-            body_with=body_with, tunable_grid=grid)
+            traffic=_case_traffic(sch, "allgather", vc, elems, dtype),
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def broadcast_cases(vc: VirtualCluster, elems: int, on_skip=None,
-                    schemes=None):
+                    schemes=None, dtype: str = ELEM_DTYPE):
     comm = Communicator.from_cluster(vc)
     R = vc.num_devices
     root = R // 2          # a non-zero, non-leader root: the flat-root API
 
     def args():
-        return (_ranked_f32(R * elems).reshape(R, elems),)
+        return (_ranked(R * elems, dtype).reshape(R, elems),)
 
     for sch in _swept(registry.schemes_for("broadcast"), schemes):
         grid = _grid_or_skip(sch, "broadcast", vc, elems, on_skip)
@@ -207,27 +278,28 @@ def broadcast_cases(vc: VirtualCluster, elems: int, on_skip=None,
         out_specs = P(None) if sch.result_class == "replicated" \
             else P(vc.fast)
 
-        def body_with(opts, s=sch.name):
+        def body_with(opts, s=sch.name, p=sch.precision):
             return lambda v: _raw(comm.broadcast(v[0], root=root, scheme=s,
-                                                 **opts))
+                                                 precision=p, **opts))
 
         yield BenchCase(
             "broadcast", sch.name, vc, elems,
             body=body_with({}),
             in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
-            traffic=sch.traffic("broadcast", pods=vc.pods, chips=vc.chips,
-                                elems=elems, elem_bytes=ELEM_BYTES),
-            body_with=body_with, tunable_grid=grid)
+            traffic=_case_traffic(sch, "broadcast", vc, elems, dtype),
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def psum_cases(vc: VirtualCluster, elems: int, on_skip=None,
-               schemes=None):
+               schemes=None, dtype: str = ELEM_DTYPE):
     comm = Communicator.from_cluster(vc)
     R = vc.num_devices
 
     def args():
-        # scaled so the reduction stays well inside f32 range
-        return (_ranked_f32(R * elems).reshape(R, elems) / (R * elems),)
+        # scaled so the reduction stays well inside f32 range (built in
+        # f32, then downcast to the case dtype)
+        return ((_ranked_f32(R * elems).reshape(R, elems) / (R * elems))
+                .astype(getattr(jnp, dtype)),)
 
     for sch in _swept(registry.schemes_for("psum"), schemes):
         grid = _grid_or_skip(sch, "psum", vc, elems, on_skip)
@@ -236,20 +308,20 @@ def psum_cases(vc: VirtualCluster, elems: int, on_skip=None,
         out_specs = P(None) if sch.result_class == "replicated" \
             else P(vc.fast)
 
-        def body_with(opts, s=sch.name):
-            return lambda v: _raw(comm.allreduce(v[0], scheme=s, **opts))
+        def body_with(opts, s=sch.name, p=sch.precision):
+            return lambda v: _raw(comm.allreduce(v[0], scheme=s,
+                                                 precision=p, **opts))
 
         yield BenchCase(
             "psum", sch.name, vc, elems,
             body=body_with({}),
             in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
-            traffic=sch.traffic("psum", pods=vc.pods, chips=vc.chips,
-                                elems=elems, elem_bytes=ELEM_BYTES),
-            body_with=body_with, tunable_grid=grid)
+            traffic=_case_traffic(sch, "psum", vc, elems, dtype),
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def reduce_scatter_cases(vc: VirtualCluster, elems: int, on_skip=None,
-                         schemes=None):
+                         schemes=None, dtype: str = ELEM_DTYPE):
     """Every rank contributes a full ``elems`` buffer; the global sum is
     scattered.  ``naive``/``pipelined`` end with flat 1/R slices
     (rank-major); ``shared`` keeps the node's reduced message once,
@@ -258,7 +330,8 @@ def reduce_scatter_cases(vc: VirtualCluster, elems: int, on_skip=None,
     R = vc.num_devices
 
     def args():
-        return (_ranked_f32(R * elems).reshape(R, elems) / (R * elems),)
+        return ((_ranked_f32(R * elems).reshape(R, elems) / (R * elems))
+                .astype(getattr(jnp, dtype)),)
 
     for sch in _swept(registry.schemes_for("reduce_scatter"), schemes):
         grid = _grid_or_skip(sch, "reduce_scatter", vc, elems, on_skip)
@@ -267,45 +340,43 @@ def reduce_scatter_cases(vc: VirtualCluster, elems: int, on_skip=None,
         out_specs = P(vc.axis_names) if sch.result_class == "replicated" \
             else P(vc.fast)
 
-        def body_with(opts, s=sch.name):
+        def body_with(opts, s=sch.name, p=sch.precision):
             return lambda v: _raw(comm.reduce_scatter(v[0], scheme=s,
-                                                      **opts))
+                                                      precision=p, **opts))
 
         yield BenchCase(
             "reduce_scatter", sch.name, vc, elems,
             body=body_with({}),
             in_specs=(vc.spec,), out_specs=out_specs, make_args=args,
-            traffic=sch.traffic("reduce_scatter", pods=vc.pods,
-                                chips=vc.chips, elems=elems,
-                                elem_bytes=ELEM_BYTES),
-            body_with=body_with, tunable_grid=grid)
+            traffic=_case_traffic(sch, "reduce_scatter", vc, elems,
+                                  dtype),
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def alltoall_cases(vc: VirtualCluster, elems: int, on_skip=None,
-                   schemes=None):
+                   schemes=None, dtype: str = ELEM_DTYPE):
     """Personalized exchange: every rank holds R rank-ordered chunks of
     ``elems`` each; chunk *s* goes to rank *s* (flat vs node-aware)."""
     comm = Communicator.from_cluster(vc)
     R = vc.num_devices
 
     def args():
-        return (_ranked_f32(R * R * elems),)
+        return (_ranked(R * R * elems, dtype),)
 
     for sch in _swept(registry.schemes_for("alltoall"), schemes):
         grid = _grid_or_skip(sch, "alltoall", vc, elems, on_skip)
         if not grid:
             continue
 
-        def body_with(opts, s=sch.name):
-            return lambda v: comm.alltoall(v, scheme=s, **opts)
+        def body_with(opts, s=sch.name, p=sch.precision):
+            return lambda v: comm.alltoall(v, scheme=s, precision=p, **opts)
 
         yield BenchCase(
             "alltoall", sch.name, vc, elems,
             body=body_with({}),
             in_specs=(vc.spec,), out_specs=vc.spec, make_args=args,
-            traffic=sch.traffic("alltoall", pods=vc.pods, chips=vc.chips,
-                                elems=elems, elem_bytes=ELEM_BYTES),
-            body_with=body_with, tunable_grid=grid)
+            traffic=_case_traffic(sch, "alltoall", vc, elems, dtype),
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def bench_populations(pods: int, chips: int) -> tuple[int, ...]:
@@ -315,7 +386,8 @@ def bench_populations(pods: int, chips: int) -> tuple[int, ...]:
 
 
 def allgatherv_cases(vc: VirtualCluster, max_elems: int,
-                     populations=None, on_skip=None, schemes=None):
+                     populations=None, on_skip=None, schemes=None,
+                     dtype: str = ELEM_DTYPE):
     comm = Communicator.from_cluster(vc)
     R = vc.num_devices
     pops = tuple(populations) if populations is not None \
@@ -333,7 +405,8 @@ def allgatherv_cases(vc: VirtualCluster, max_elems: int,
                 valid[r, 0] = max_elems if i < pops[pd] else 0
                 if i >= pops[pd]:
                     data[r] = 0.0
-        return jnp.asarray(data), jnp.asarray(valid)
+        return (jnp.asarray(data).astype(getattr(jnp, dtype)),
+                jnp.asarray(valid))
 
     # the naive scheme gathers the padded blocks AND the counts flat (an MPI
     # allgatherv still exchanges counts), so the two schemes move the same
@@ -345,19 +418,19 @@ def allgatherv_cases(vc: VirtualCluster, max_elems: int,
         out_specs = (P(None), P(None)) if sch.result_class == "replicated" \
             else (P(None, vc.fast), P(None, vc.fast))
 
-        def body_with(opts, s=sch.name):
-            return lambda v, val: comm.allgatherv(v, val, scheme=s, **opts)
+        def body_with(opts, s=sch.name, p=sch.precision):
+            return lambda v, val: comm.allgatherv(v, val, scheme=s,
+                                                  precision=p, **opts)
 
         yield BenchCase(
             "allgatherv", sch.name, vc, max_elems,
             body=body_with({}),
             in_specs=(vc.spec, vc.spec), out_specs=out_specs,
             make_args=args,
-            traffic=sch.traffic("allgatherv", pods=vc.pods, chips=vc.chips,
-                                elems=max_elems, elem_bytes=ELEM_BYTES,
-                                populations=pops),
+            traffic=_case_traffic(sch, "allgatherv", vc, max_elems, dtype,
+                                  populations=pops),
             plan=plan, populations=pops,
-            body_with=body_with, tunable_grid=grid)
+            body_with=body_with, tunable_grid=grid, dtype=dtype)
 
 
 def step_time_cases(vc: VirtualCluster, elems=None, on_skip=None,
@@ -395,13 +468,17 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
                 elems: Sequence[int] = FULL_ELEMS,
                 max_devices: int = 8,
                 schemes: Optional[Sequence[str]] = None,
+                dtypes: Sequence[str] = (ELEM_DTYPE,),
                 on_skip=None) -> list[BenchCase]:
-    """The sweep: topology matrix x families x message sizes.
+    """The sweep: topology matrix x families x message sizes (x dtypes).
 
     ``schemes`` filters to a subset of registry entries (fast autotune
     iteration: ``--schemes pipelined,hier``); ``on_skip`` receives one
     message per (family, scheme, topology, size) cell whose size does not
     tile for that scheme — such cells are skipped, never raised.
+    ``dtypes`` widens the sweep beyond float32 for the ``DTYPE_SWEPT``
+    families only (the wire-format-sensitive payloads); other families run
+    at float32 regardless.
     """
     if clusters is None:
         clusters = default_matrix(max_devices)
@@ -409,6 +486,10 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
     if unknown:
         raise ValueError(f"unknown families {sorted(unknown)}; "
                          f"pick from {list(_FAMILY_BUILDERS)}")
+    for dt in dtypes:
+        if not hasattr(jnp, dt):
+            raise ValueError(f"unknown dtype {dt!r}: not a jax.numpy "
+                             f"dtype name (try float32, bfloat16)")
     if "step_time" in families:
         from repro.bench import step_time  # noqa: F401  registers its
         # eager/prefetch schemes before the scheme-name validation below
@@ -429,10 +510,13 @@ def build_cases(*, clusters: Optional[Sequence[VirtualCluster]] = None,
     cases: list[BenchCase] = []
     per_size = tuple(f for f in families if f not in SELF_SIZED)
     for vc in clusters:
-        for e in elems:
-            for fam in per_size:
-                cases.extend(_FAMILY_BUILDERS[fam](vc, e, on_skip=on_skip,
-                                                   schemes=schemes))
+        for dt in dict.fromkeys(dtypes):   # de-duped, order-preserving
+            fams = per_size if dt == ELEM_DTYPE else \
+                tuple(f for f in per_size if f in DTYPE_SWEPT)
+            for e in elems:
+                for fam in fams:
+                    cases.extend(_FAMILY_BUILDERS[fam](
+                        vc, e, on_skip=on_skip, schemes=schemes, dtype=dt))
         for fam in SELF_SIZED:
             if fam in families:
                 # self-sized family: one sweep per cluster, not per size
@@ -517,8 +601,9 @@ def run_suite(cases: Sequence[BenchCase], *, reps: int = 30,
     # preserve input order while grouping into comparison cells
     groups: dict[tuple, list[BenchCase]] = {}
     for case in cases:
-        groups.setdefault((case.family, case.topology, case.elems),
-                          []).append(case)
+        groups.setdefault(
+            (case.family, case.topology, case.elems, case.dtype),
+            []).append(case)
 
     results_by_id: dict[int, CaseResult] = {}
     done = 0
@@ -540,7 +625,8 @@ def run_suite(cases: Sequence[BenchCase], *, reps: int = 30,
                 outputs = runner.block_all(compiled(*args))
                 warm_s = time.perf_counter() - t0
                 hlo_text = compiled.as_text()
-                hlo_meas, checks = V.inspect_case(case, hlo_text, outputs)
+                hlo_meas, checks = V.inspect_case(case, hlo_text, outputs,
+                                                  opts=cand)
                 entries.append(_Entry(
                     case=case, cand=cand, compiled=compiled, args=args,
                     hlo=hlo_meas, checks=checks,

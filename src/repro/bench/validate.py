@@ -38,7 +38,7 @@ from typing import Sequence
 import jax
 
 from repro.analysis.roofline import parse_collectives
-from repro.bench.suites import ELEM_BYTES, BenchCase, CaseResult
+from repro.bench.suites import BenchCase, CaseResult
 from repro.comm import registry
 
 
@@ -55,27 +55,38 @@ class Check:
     # link-byte expectations are exact under the ring model; tolerance only
     # absorbs float accumulation in the parser and int truncation in plans.
     tol: float = 2.0
+    # one-sided checks assert measured <= expected (+tol): error bounds are
+    # ceilings, not equalities — beating the bound is a pass.
+    one_sided: bool = False
 
     @property
     def ok(self) -> bool:
-        return abs(self.measured - self.expected) <= \
-            max(self.tol, 1e-9 * abs(self.expected))
+        slack = max(self.tol, 1e-9 * abs(self.expected))
+        if self.one_sided:
+            return self.measured <= self.expected + slack
+        return abs(self.measured - self.expected) <= slack
 
     def to_dict(self) -> dict:
-        return {"name": self.name, "expected": self.expected,
-                "measured": self.measured, "ok": self.ok, "note": self.note}
+        d = {"name": self.name, "expected": self.expected,
+             "measured": self.measured, "ok": self.ok, "note": self.note}
+        if self.one_sided:
+            d["one_sided"] = True
+        return d
 
 
 # ---------------------------------------------------------------------------
 # Registry-supplied expectations
 # ---------------------------------------------------------------------------
 
-def expected_links(case: BenchCase) -> tuple[float, float]:
-    """Expected (fast, slow) per-chip link bytes of the case's lowering."""
+def expected_links(case: BenchCase, opts: dict = None) -> tuple[float, float]:
+    """Expected (fast, slow) per-chip link bytes of the case's lowering.
+    ``opts`` is the tunable candidate being inspected: quantized schemes
+    price the wire per ``block``, so their closed form is candidate-aware."""
     vc = case.cluster
     return registry.get_scheme(case.scheme).links(
         case.family, pods=vc.pods, chips=vc.chips, fast_shape=vc.fast_shape,
-        elems=case.elems, elem_bytes=ELEM_BYTES)
+        elems=case.elems, elem_bytes=case.wire_elem_bytes, opts=opts,
+        dtype=case.dtype)
 
 
 def expected_result_node(case: BenchCase) -> int:
@@ -85,7 +96,7 @@ def expected_result_node(case: BenchCase) -> int:
     vc = case.cluster
     return registry.get_scheme(case.scheme).result_node(
         case.family, pods=vc.pods, chips=vc.chips, elems=case.elems,
-        elem_bytes=ELEM_BYTES)
+        elem_bytes=case.elem_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -110,10 +121,12 @@ def measured_result_node(case: BenchCase, outputs) -> int:
     return total
 
 
-def inspect_case(case: BenchCase, hlo_text: str, outputs
-                 ) -> tuple[dict, list[Check]]:
+def inspect_case(case: BenchCase, hlo_text: str, outputs,
+                 opts: dict = None) -> tuple[dict, list[Check]]:
     """Parse the compiled HLO + output shards; return (measurements,
-    per-case checks)."""
+    per-case checks).  ``opts`` is the tunable candidate the inspected
+    executable was compiled with (quantized schemes' wire bytes and error
+    model depend on their ``block``)."""
     vc = case.cluster
     R = vc.num_devices
     cb = parse_collectives(hlo_text, num_devices=R, pod_size=vc.chips)
@@ -127,7 +140,7 @@ def inspect_case(case: BenchCase, hlo_text: str, outputs
         "result_bytes_per_node": result_node,
     }
 
-    exp_fast, exp_slow = expected_links(case)
+    exp_fast, exp_slow = expected_links(case, opts)
     checks = [
         Check("link/fast", exp_fast, cb.fast,
               "per-chip intra-pod link bytes (ring model) of the scheme's "
@@ -142,11 +155,23 @@ def inspect_case(case: BenchCase, hlo_text: str, outputs
     sch = registry.get_scheme(case.scheme)
     for name, expected, measured, note in sch.identities(
             case.family, traffic=case.traffic, pods=vc.pods, chips=vc.chips,
-            elems=case.elems, elem_bytes=ELEM_BYTES,
+            elems=case.elems, elem_bytes=case.wire_elem_bytes,
             fast_shape=vc.fast_shape, populations=case.populations,
             fast_total=cb.fast * R, slow_total=cb.slow * R,
             result_node=result_node):
         checks.append(Check(name, expected, measured, note))
+    # lossy schemes: measured end-to-end quantization error must sit inside
+    # the declared bound (host-side numpy reference — exact arithmetic)
+    err = sch.error_check(case.family, inputs=case.make_args(),
+                          output=outputs, pods=vc.pods, chips=vc.chips,
+                          elems=case.elems, dtype=case.dtype, opts=opts)
+    if err is not None:
+        bound, measured_err = err
+        checks.append(Check(
+            "error/bound", bound, measured_err,
+            "max abs quantization error vs the exact host-side reference; "
+            "the scheme's declared error model is a ceiling",
+            tol=0.0, one_sided=True))
     return meas, checks
 
 
@@ -228,10 +253,10 @@ def cross_scheme_checks(results: Sequence[CaseResult]) -> list[Check]:
     (the two-phase/pipelined schedule does not change the memory class)."""
     by_key: dict[tuple, dict] = {}
     for r in results:
-        k = (r.case.family, r.case.topology, r.case.elems)
+        k = (r.case.family, r.case.topology, r.case.elems, r.case.dtype)
         by_key.setdefault(k, {})[r.case.scheme] = r
     checks = []
-    for (fam, topo, elems), group in sorted(by_key.items()):
+    for (fam, topo, elems, dtype), group in sorted(by_key.items()):
         reps = [s for s in registry.scheme_names()
                 if s in group
                 and registry.get_scheme(s).result_class == "replicated"]
@@ -243,24 +268,27 @@ def cross_scheme_checks(results: Sequence[CaseResult]) -> list[Check]:
         base, sh = reps[0], shared[0]
         vc = group[base].case.cluster
         c = vc.chips
+        eb = group[base].case.elem_bytes
         exp_rep = registry.get_scheme(base).result_node(
-            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=ELEM_BYTES)
+            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=eb)
         exp_sh = registry.get_scheme(sh).result_node(
-            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=ELEM_BYTES)
+            fam, pods=vc.pods, chips=c, elems=elems, elem_bytes=eb)
         expected = exp_rep / exp_sh
         rep_b = group[base].hlo["result_bytes_per_node"]
         shared_b = group[sh].hlo["result_bytes_per_node"]
         what = "ranks_per_node" if expected == c \
             else "the registry closed-form ratio"
+        tag = f"C1/{fam}/{topo}/e{elems}" if dtype == "float32" \
+            else f"C1/{fam}/{topo}/e{elems}/{dtype}"
         checks.append(Check(
-            f"C1/{fam}/{topo}/e{elems}", expected, rep_b / shared_b,
+            tag, expected, rep_b / shared_b,
             f"{base}/{sh} resident-result ratio == {what} "
             f"({base} {rep_b} B, {sh} {shared_b} B per node)",
             tol=1e-9))
         for other in reps[1:]:
             other_b = group[other].hlo["result_bytes_per_node"]
             checks.append(Check(
-                f"C1/{fam}/{topo}/e{elems}/{other}-replicates", rep_b,
+                f"{tag}/{other}-replicates", rep_b,
                 other_b,
                 f"the {other} schedule is replication-class: same resident "
                 f"bytes as {base}", tol=0.0))

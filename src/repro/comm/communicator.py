@@ -185,25 +185,31 @@ class Communicator:
         return n
 
     def _resolve(self, family: str, scheme: str, x, opts: dict,
-                 result: Optional[str]) -> tuple[str, dict]:
+                 result: Optional[str], precision: str = "exact",
+                 tol: Optional[float] = None) -> tuple[str, dict]:
         """Turn ``scheme="auto"`` into a concrete registry entry (plus its
         recorded tunables; explicit caller opts win).  A concrete scheme
-        passes through — but still checked against ``result`` so a
-        constraint can never be silently violated."""
+        passes through — but still checked against ``result`` and
+        ``precision`` so a constraint can never be silently violated."""
         if scheme != "auto":
-            if result is not None and \
-                    registry.get_scheme(scheme).result_class != result:
+            sch = registry.get_scheme(scheme)
+            if result is not None and sch.result_class != result:
                 raise ValueError(
                     f"scheme {scheme!r} is "
-                    f"{registry.get_scheme(scheme).result_class}-class but "
+                    f"{sch.result_class}-class but "
                     f"the call requires result={result!r}")
+            if sch.precision == "lossy" and precision != "lossy":
+                raise ValueError(
+                    f"scheme {scheme!r} is lossy but the call did not opt "
+                    f"in with precision='lossy'")
             return scheme, opts
         from repro.comm import tuning
         import numpy as np
         dt = np.dtype(x.dtype)
         res = tuning.resolve_for(
             self, family, elems=self._auto_elems(family, x),
-            elem_bytes=dt.itemsize, dtype=dt.name, result_class=result)
+            elem_bytes=dt.itemsize, dtype=dt.name, result_class=result,
+            precision=precision, tol=tol)
         return res.scheme, {**res.opts, **opts}
 
     def _call(self, family: str, scheme: str, *args, **kw):
@@ -217,20 +223,25 @@ class Communicator:
         return out
 
     def allgather(self, x: jax.Array, *, scheme: str = "auto",
-                  axis: int = 0, result: Optional[str] = None, **opts):
+                  axis: int = 0, result: Optional[str] = None,
+                  precision: str = "exact", tol: Optional[float] = None,
+                  **opts):
         """Gather every rank's contribution.  Replicated schemes return the
         full rank-ordered buffer; ``shared`` returns the node's
         ``SharedWindow`` (chip *i* holds shard *i*, (local, pod) order).
         ``**opts`` are scheme tunables (e.g. ``pipelined``'s
         ``n_chunks=``); ``result=`` constrains an ``"auto"`` pick to one
-        result class."""
-        scheme, opts = self._resolve("allgather", scheme, x, opts, result)
+        result class; ``precision="lossy"`` admits quantized wire formats
+        (``tol=`` caps their relative error bound)."""
+        scheme, opts = self._resolve("allgather", scheme, x, opts, result,
+                                     precision, tol)
         sch, out = self._call("allgather", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def allgatherv(self, x_padded: jax.Array, valid: jax.Array, *,
                    scheme: str = "auto", axis: int = 0,
-                   result: Optional[str] = None, **opts):
+                   result: Optional[str] = None, precision: str = "exact",
+                   tol: Optional[float] = None, **opts):
         """Irregular allgather (padded blocks + valid counts).
 
         The one family that returns raw ``(blocks, counts)`` for EVERY
@@ -241,46 +252,76 @@ class Communicator:
         (rank-major vs node regions), so auto callers either handle both
         or pass ``result=``."""
         scheme, opts = self._resolve("allgatherv", scheme, x_padded, opts,
-                                     result)
+                                     result, precision, tol)
         _, out = self._call("allgatherv", scheme, x_padded, valid, axis=axis,
                             **opts)
         return out
 
     def broadcast(self, x: jax.Array, *, root: int = 0,
                   scheme: str = "auto", axis: int = 0,
-                  result: Optional[str] = None, **opts):
+                  result: Optional[str] = None, precision: str = "exact",
+                  tol: Optional[float] = None, **opts):
         """Broadcast from the flat SMP rank ``root`` (pod, chip row-major).
         ``shared`` returns the node's ``SharedWindow`` of the message."""
-        scheme, opts = self._resolve("broadcast", scheme, x, opts, result)
+        scheme, opts = self._resolve("broadcast", scheme, x, opts, result,
+                                     precision, tol)
         sch, out = self._call("broadcast", scheme, x, root=root, axis=axis,
                               **opts)
         return self._wrap(sch, out, axis)
 
     def allreduce(self, x: jax.Array, *, scheme: str = "auto",
-                  axis: int = 0, result: Optional[str] = None, **opts):
+                  axis: int = 0, result: Optional[str] = None,
+                  precision: str = "exact", tol: Optional[float] = None,
+                  error_feedback=None, **opts):
         """Global sum.  Replicated schemes return the full sum per rank;
-        ``shared`` returns it once per node as a ``SharedWindow``."""
-        scheme, opts = self._resolve("psum", scheme, x, opts, result)
+        ``shared`` returns it once per node as a ``SharedWindow``.
+
+        ``precision="lossy"`` admits quantized wire formats; with
+        ``error_feedback=`` (the carried residual, ``jnp.float32(0)`` to
+        start) the call returns ``(sum, new_residual)`` so the local
+        quantization error re-enters the next step's payload — the error-
+        feedback loop of the gradient bridge.  An exact pick under
+        ``"lossy"`` simply absorbs the residual and carries zero."""
+        scheme, opts = self._resolve("psum", scheme, x, opts, result,
+                                     precision, tol)
+        if error_feedback is not None:
+            if precision != "lossy":
+                raise ValueError(
+                    "error_feedback requires precision='lossy'")
+            import jax.numpy as jnp
+            if registry.get_scheme(scheme).precision == "lossy":
+                sch, pair = self._call("psum", scheme, x, axis=axis,
+                                       err=error_feedback, **opts)
+                out, new_err = pair
+            else:
+                sch, out = self._call("psum", scheme, x + error_feedback,
+                                      axis=axis, **opts)
+                new_err = jnp.zeros((), jnp.float32)
+            return self._wrap(sch, out, axis), new_err
         sch, out = self._call("psum", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def reduce_scatter(self, x: jax.Array, *, scheme: str = "auto",
-                       axis: int = 0, result: Optional[str] = None, **opts):
+                       axis: int = 0, result: Optional[str] = None,
+                       precision: str = "exact", tol: Optional[float] = None,
+                       **opts):
         """Sum + scatter.  ``naive``/``pipelined``: every rank gets its flat
         1/R slice; ``shared``: the node's window shards (1/c each,
         bridge-reduced)."""
         scheme, opts = self._resolve("reduce_scatter", scheme, x, opts,
-                                     result)
+                                     result, precision, tol)
         sch, out = self._call("reduce_scatter", scheme, x, axis=axis, **opts)
         return self._wrap(sch, out, axis)
 
     def alltoall(self, x: jax.Array, *, scheme: str = "auto", axis: int = 0,
-                 result: Optional[str] = None, **opts):
+                 result: Optional[str] = None, precision: str = "exact",
+                 tol: Optional[float] = None, **opts):
         """Personalized exchange: the local buffer along ``axis`` is R rank-
         ordered chunks; chunk *s* goes to rank *s*.  ``hier`` routes node
         superchunks over the bridge once (P messages instead of P*c), with
         identical results."""
-        scheme, opts = self._resolve("alltoall", scheme, x, opts, result)
+        scheme, opts = self._resolve("alltoall", scheme, x, opts, result,
+                                     precision, tol)
         _, out = self._call("alltoall", scheme, x, axis=axis, **opts)
         return out
 
@@ -301,11 +342,19 @@ class Communicator:
 
     # -- fused collective-matmul (compute overlap) ----------------------------
     def ag_matmul(self, x: jax.Array, w_shard: jax.Array, *,
-                  n_chunks: int = 2, use_kernel: bool = False):
+                  n_chunks: int = 2, use_kernel: bool = False,
+                  precision: str = "exact", q4_group: int = 32):
         """``x @ read(window)`` fused: the node-tier gather of the
         contraction-sharded weight streams behind the panel matmuls
-        (``repro.comm.pipeline.ag_matmul``)."""
+        (``repro.comm.pipeline.ag_matmul``).  ``precision="lossy"``
+        gathers the weight panels as packed int4 (group size
+        ``q4_group``) and dequantizes inside the matmul."""
         from repro.comm import pipeline
+        if precision == "lossy":
+            return pipeline.ag_matmul_q4(x, w_shard,
+                                         fast_axis=self.fast_axis,
+                                         n_chunks=n_chunks, group=q4_group,
+                                         use_kernel=use_kernel)
         return pipeline.ag_matmul(x, w_shard, fast_axis=self.fast_axis,
                                   n_chunks=n_chunks, use_kernel=use_kernel)
 

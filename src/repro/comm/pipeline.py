@@ -357,6 +357,57 @@ def ag_matmul(x: jax.Array, w_shard: jax.Array, *, fast_axis,
     return acc.astype(x.dtype)
 
 
+def ag_matmul_q4(x: jax.Array, w_shard: jax.Array, *, fast_axis,
+                 n_chunks: int = DEFAULT_CHUNKS, group: int = 32,
+                 use_kernel: bool = False) -> jax.Array:
+    """``ag_matmul`` with a packed-int4 weight wire format.
+
+    Each chunk's local K-panel piece is groupwise int4-quantized
+    (``quantize_q4``) BEFORE the gather, so the collective moves two
+    nibbles per weight plus one f32 scale per ``group`` rows instead of
+    four bytes per weight.  The gathered panel is never densified when
+    ``use_kernel=True``: the Pallas kernel (``kernels.quant``) unpacks and
+    rescales tiles inside the matmul loop.  The per-chip piece must divide
+    by ``group`` so concatenated packings respect group boundaries.
+    """
+    from repro.comm import quantize as qz
+    c = p.axis_size(fast_axis)
+    s, n_out = w_shard.shape
+    if s % n_chunks:
+        raise ValueError(f"weight shard rows {s} must divide by "
+                         f"n_chunks={n_chunks}")
+    piece = s // n_chunks
+    if piece % group:
+        raise ValueError(f"per-chunk shard rows {piece} must divide by "
+                         f"group={group}")
+    k_total = c * s
+    if x.shape[-1] != k_total:
+        raise ValueError(f"x contraction dim {x.shape[-1]} != gathered "
+                         f"weight rows {k_total}")
+    lead = x.shape[:-1]
+    xr = x.reshape(lead + (c, n_chunks, piece))
+    fence = _ReuseFence(n_chunks)
+    acc = jnp.zeros(lead + (n_out,), jnp.float32)
+    for j in range(n_chunks):
+        shard_piece = fence.enter(j, lax.slice_in_dim(
+            w_shard, j * piece, (j + 1) * piece, axis=0))
+        packed, scales = qz.quantize_q4(shard_piece, group=group)
+        # raw-collective: the packed-int4 panel gather IS the wire format
+        gp = lax.all_gather(packed, p._axes(fast_axis), axis=0, tiled=True)
+        gs = lax.all_gather(scales, p._axes(fast_axis), axis=0, tiled=True)
+        xj = xr[..., :, j, :].reshape(lead + (c * piece,))
+        x2d = xj.reshape(-1, c * piece)
+        if use_kernel:
+            from repro.kernels.ops import q4_matmul
+            prod2d = q4_matmul(x2d, gp, gs, group=group)
+        else:
+            prod2d = jnp.matmul(
+                x2d, qz.dequantize_q4(gp, gs, group=group))
+        prod = fence.exit(j, prod2d.reshape(lead + (n_out,)))
+        acc = acc + prod.astype(jnp.float32)
+    return acc.astype(x.dtype)
+
+
 def ag_matmul_rows(a_shard: jax.Array, b: jax.Array, *, fast_axis,
                    n_chunks: int = DEFAULT_CHUNKS, use_kernel: bool = False,
                    matmul: Optional[Callable] = None) -> jax.Array:

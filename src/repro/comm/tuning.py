@@ -330,11 +330,22 @@ class Resolution:
 
 
 def _usable(sch, family: str, result_class: Optional[str], pods: int,
-            chips: int, elems: int):
+            chips: int, elems: int, precision: str = "exact",
+            tol: Optional[float] = None):
     """The scheme's valid tunable grid for this cell, or ``None`` when the
-    caller's result-class constraint or the cell's tiling rules it out."""
+    caller's result-class / precision constraint or the cell's tiling
+    rules it out.  ``precision="exact"`` (the default) filters lossy
+    (quantized) schemes out of the walk entirely; ``"lossy"`` admits
+    them, optionally capped by ``tol`` — a lossy scheme whose declared
+    ``error_bound_rel`` exceeds the caller's tolerance is skipped."""
     if result_class is not None and sch.result_class != result_class:
         return None
+    if sch.precision == "lossy":
+        if precision != "lossy":
+            return None
+        if tol is not None and pods \
+                and sch.error_bound_rel(family, pods=pods) > tol:
+            return None
     cands = sch.candidates(family, pods=pods, chips=chips, elems=elems)
     return cands or None
 
@@ -342,6 +353,8 @@ def _usable(sch, family: str, result_class: Optional[str], pods: int,
 def best_scheme_predicted(family: str, *, pods: int, chips: int, elems: int,
                           elem_bytes: int = 4,
                           result_class: Optional[str] = None,
+                          precision: str = "exact",
+                          tol: Optional[float] = None,
                           populations: Optional[Sequence[int]] = None
                           ) -> Optional[tuple[str, dict, float]]:
     """Model-predicted (scheme, opts, time) for one cell: every registry
@@ -349,7 +362,8 @@ def best_scheme_predicted(family: str, *, pods: int, chips: int, elems: int,
     closed form; the cheapest wins (ties: registration order)."""
     best = None
     for sch in registry.schemes_for(family):
-        if _usable(sch, family, result_class, pods, chips, elems) is None:
+        if _usable(sch, family, result_class, pods, chips, elems,
+                   precision, tol) is None:
             continue
         pred = sch.predicted_time(family, pods=pods, chips=chips,
                                   elems=elems, elem_bytes=elem_bytes,
@@ -362,17 +376,31 @@ def best_scheme_predicted(family: str, *, pods: int, chips: int, elems: int,
     return best
 
 
+#: Static-fallback overrides under ``precision="lossy"``: a communicator
+#: with no pods/chips counts is all bridge (the ``reduce_grads`` gradient
+#: path), so lossy opt-in means "compress that bridge" — the q8 wire
+#: format, run single-tier.  Families without an override keep the exact
+#: fallback (lossy *admits* quantized schemes, it never requires one).
+LOSSY_FALLBACK = {"psum": "q8_hier", "allgather": "q8_hier"}
+
+
 def resolve(family: str, *, pods: Optional[int], chips: Optional[int],
             elems: int, elem_bytes: int = 4, dtype: str = "float32",
             n_fast_axes: int = 1, result_class: Optional[str] = None,
+            precision: str = "exact", tol: Optional[float] = None,
             table: Optional[TuningTable] = None) -> Resolution:
     """Resolve one ``scheme="auto"`` dispatch (see module docstring for the
     measured -> modeled -> fallback chain).  ``result_class`` constrains
     the pick to schemes of one result class (``"replicated"`` /
-    ``"shared"``) — call sites that consume plain arrays pass the
-    constraint instead of a scheme name."""
+    ``"shared"``); ``precision`` mirrors it for the exact/lossy axis —
+    ``"exact"`` (the default) never returns a quantized scheme,
+    ``"lossy"`` admits them (capped by ``tol``, a relative error bound).
+    Call sites pass constraints, never scheme names."""
     if result_class not in (None, "replicated", "shared"):
         raise ValueError(f"bad result constraint {result_class!r}")
+    if precision not in ("exact", "lossy"):
+        raise ValueError(f"bad precision constraint {precision!r} "
+                         "(pick 'exact' or 'lossy')")
     table = table if table is not None else active_table()
     if pods and chips:
         entry = table.lookup(family, topo_signature(pods, chips,
@@ -385,7 +413,7 @@ def resolve(family: str, *, pods: Optional[int], chips: Optional[int],
                 except KeyError:
                     continue           # table from a build with more schemes
                 cands = _usable(sch, family, result_class, pods, chips,
-                                elems)
+                                elems, precision, tol)
                 if cands is None:
                     continue
                 opts = dict(choice.opts)
@@ -399,7 +427,8 @@ def resolve(family: str, *, pods: Optional[int], chips: Optional[int],
                 return Resolution(sch.name, opts, entry.source, entry)
         best = best_scheme_predicted(family, pods=pods, chips=chips,
                                      elems=elems, elem_bytes=elem_bytes,
-                                     result_class=result_class)
+                                     result_class=result_class,
+                                     precision=precision, tol=tol)
         if best is not None:
             return Resolution(best[0], best[1], "modeled")
         raise ValueError(
@@ -407,13 +436,20 @@ def resolve(family: str, *, pods: Optional[int], chips: Optional[int],
             f"a {pods}x{chips} topology"
             + (f" under result={result_class!r}" if result_class else "")
             + " — every candidate grid is empty (tiling)")
-    try:
-        name = FALLBACK[result_class][family]
-    except KeyError:
-        raise ValueError(
-            f"scheme='auto' cannot resolve {family} under "
-            f"result={result_class!r} without static pods/chips counts"
-        ) from None
+    name = None
+    if precision == "lossy":
+        cand = LOSSY_FALLBACK.get(family)
+        if cand is not None and result_class in (
+                None, registry.get_scheme(cand).result_class):
+            name = cand
+    if name is None:
+        try:
+            name = FALLBACK[result_class][family]
+        except KeyError:
+            raise ValueError(
+                f"scheme='auto' cannot resolve {family} under "
+                f"result={result_class!r} without static pods/chips counts"
+            ) from None
     return Resolution(name, {}, "fallback")
 
 
@@ -425,13 +461,15 @@ resolve_scheme = resolve
 def resolve_for(comm, family: str, *, elems: int, elem_bytes: int = 4,
                 dtype: str = "float32",
                 result_class: Optional[str] = None,
+                precision: str = "exact", tol: Optional[float] = None,
                 table: Optional[TuningTable] = None) -> Resolution:
     """``resolve`` keyed by a ``Communicator``'s static structure."""
     from repro.comm import primitives as p
     return resolve(family, pods=comm.pods, chips=comm.chips, elems=elems,
                    elem_bytes=elem_bytes, dtype=dtype,
                    n_fast_axes=len(p._axes(comm.fast_axis)),
-                   result_class=result_class, table=table)
+                   result_class=result_class, precision=precision, tol=tol,
+                   table=table)
 
 
 # ---------------------------------------------------------------------------

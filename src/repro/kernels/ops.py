@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.lru_scan import lru_scan_pallas
 from repro.kernels.matmul import matmul_pallas
+from repro.kernels.quant import q4_matmul_pallas
 
 
 def _default_interpret() -> bool:
@@ -66,6 +67,29 @@ def matmul(a, b, *, block_m: int = 128, block_n: int = 128,
                     block_n if N >= block_n else N, 1)
     out = matmul_pallas(ap, bp, block_m=block_m, block_n=block_n,
                         block_k=block_k, interpret=interpret)
+    return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("group", "block_m", "block_n",
+                                             "interpret"))
+def q4_matmul(a, packed, scales, *, group: int = 32, block_m: int = 128,
+              block_n: int = 128, interpret: Optional[bool] = None):
+    """``a (M, K) @ dequantize_q4(packed (K//2, N), scales)`` fused.
+
+    K must already divide by ``group`` (the quantizer enforces it); M and N
+    are padded here.  Zero-padding N is sound because a padded column's
+    scale is zero, so its dequantized weights are exactly zero.
+    """
+    interpret = _default_interpret() if interpret is None else interpret
+    M, K = a.shape
+    N = packed.shape[1]
+    bm = min(block_m, M)
+    ap, _ = _pad_to(a, bm, 0)
+    bn = block_n if N >= block_n else N
+    pp, _ = _pad_to(packed, bn, 1)
+    sp, _ = _pad_to(scales, bn, 1)
+    out = q4_matmul_pallas(ap, pp, sp, group=group, block_m=block_m,
+                           block_n=block_n, interpret=interpret)
     return out[:M, :N]
 
 

@@ -199,7 +199,8 @@ class ParallelCtx:
         return Communicator(fast_axis=fast or axes, slow_axis=slow)
 
     def reduce_grads(self, grads, metas=None, *, compress=None,
-                     recorder=None):
+                     recorder=None, precision: str = "exact",
+                     tol: Optional[float] = None, error_state=None):
         """Bridge gradient reduction.  Gradients already match the param
         layout w.r.t. data (AD transposes the hier window reads into
         intra-pod reduce-scatters); what remains is the cross-pod (bridge)
@@ -207,16 +208,28 @@ class ParallelCtx:
 
         With ``metas`` (a leaf-aligned ``PMeta`` sequence) the reduction is
         per-leaf over ``grad_reduce_axes(meta)`` through ``Communicator``
-        dispatch — the schedule-driven path.  ``compress`` quantizes
-        bridge-crossing leaves (hier mode) before they hit the slow tier;
-        ``recorder`` (a ``Communicator.record()`` ``GraphRecorder``) defers
-        every uncompressed reduction into the step graph and returns
-        ``Deferred`` leaves — resolve them with the ``ScheduleResult`` of
-        ``recorder.run()``.  Without ``metas``: the legacy whole-tree
-        reduction (every leaf crosses the same axes)."""
+        dispatch — the schedule-driven path.  ``precision="lossy"`` routes
+        bridge-crossing leaves (hier mode) through the quantized wire
+        formats of the scheme registry (auto-resolved, never named here);
+        ``error_state`` (a grads-shaped tree of residuals, scalar
+        ``jnp.float32(0)`` leaves to start) threads error feedback through
+        those reductions, and the call then returns
+        ``(grads, new_error_state)``.  ``compress`` is the legacy explicit
+        hook (same leaves, caller-supplied fn); ``recorder`` (a
+        ``Communicator.record()`` ``GraphRecorder``) defers every exact
+        reduction into the step graph and returns ``Deferred`` leaves —
+        resolve them with the ``ScheduleResult`` of ``recorder.run()``.
+        Without ``metas``: the legacy whole-tree reduction (every leaf
+        crosses the same axes)."""
+        lossy = precision == "lossy"
+        if error_state is not None and not lossy:
+            raise ValueError("error_state requires precision='lossy'")
+        errs = jax.tree.leaves(error_state) \
+            if error_state is not None else None
         if metas is not None:
             leaves = jax.tree.leaves(grads)
-            reduced, comms = [], {}
+            new_errs = [jnp.zeros((), jnp.float32) for _ in leaves]
+            reduced, comms, lossy_comms = [], {}, {}
             for i, (g, meta) in enumerate(zip(leaves, metas)):
                 axes = self.grad_reduce_axes(meta)
                 if not axes:
@@ -229,6 +242,23 @@ class ParallelCtx:
                 if compress is not None and self.mode == "hier" and bridge:
                     reduced.append(compress(g, axes))
                     continue
+                if lossy and self.mode == "hier" and bridge:
+                    # single-tier over EXACTLY axes: quantize once over the
+                    # whole reduction (the legacy compress semantics —
+                    # arbitrary leaf shapes flatten+pad into blocks).
+                    comm = lossy_comms.get(axes)
+                    if comm is None:
+                        comm = lossy_comms[axes] = \
+                            Communicator(fast_axis=axes)
+                    if errs is not None:
+                        out, new_errs[i] = comm.allreduce(
+                            g, precision="lossy", tol=tol,
+                            result="replicated", error_feedback=errs[i])
+                    else:
+                        out = comm.allreduce(g, precision="lossy", tol=tol,
+                                             result="replicated")
+                    reduced.append(out)
+                    continue
                 if recorder is not None:
                     reduced.append(recorder.allreduce(
                         g, axes=axes, scheme="naive", key=("grad", i)))
@@ -238,10 +268,29 @@ class ParallelCtx:
                     comm = comms[axes] = self._axes_comm(axes)
                 reduced.append(comm.allreduce(g, scheme="naive",
                                               result="replicated"))
-            return jax.tree.unflatten(jax.tree.structure(grads), reduced)
+            tree = jax.tree.unflatten(jax.tree.structure(grads), reduced)
+            if error_state is not None:
+                return tree, jax.tree.unflatten(
+                    jax.tree.structure(grads), new_errs)
+            return tree
         if self.mode == "hier":
             if self.pod_axis is None:
-                return grads
+                return (grads, error_state) if error_state is not None \
+                    else grads
+            if lossy:
+                bcomm = Communicator(fast_axis=self.pod_axis)
+                leaves = jax.tree.leaves(grads)
+                if errs is not None:
+                    pairs = [bcomm.allreduce(g, precision="lossy", tol=tol,
+                                             result="replicated",
+                                             error_feedback=e)
+                             for g, e in zip(leaves, errs)]
+                    st = jax.tree.structure(grads)
+                    return (jax.tree.unflatten(st, [o for o, _ in pairs]),
+                            jax.tree.unflatten(st, [e for _, e in pairs]))
+                return jax.tree.map(
+                    lambda g: bcomm.allreduce(g, precision="lossy", tol=tol,
+                                              result="replicated"), grads)
             comm = self.comm
             if comm is None:     # no node tier: the bridge is the whole comm
                 comm = Communicator(fast_axis=self.pod_axis)
@@ -251,6 +300,9 @@ class ParallelCtx:
         axes = self.dp_axes
         if not axes:
             return grads
+        if error_state is not None:
+            raise ValueError("error_state needs the hier bridge path "
+                             "(metas, or hier mode)")
         # the dp reduction's own communicator: reduce over EXACTLY dp_axes.
         # scheme="auto" + the replicated constraint: the tuning table (or
         # the closed forms) picks the reduction schedule, but the result
@@ -259,7 +311,9 @@ class ParallelCtx:
         slow = self.pod_axis if (self.pod_axis in axes and fast) else None
         dp_comm = Communicator(fast_axis=fast or axes, slow_axis=slow)
         return jax.tree.map(
-            lambda g: dp_comm.allreduce(g, result="replicated"), grads)
+            lambda g: dp_comm.allreduce(g, result="replicated",
+                                        precision=precision, tol=tol),
+            grads)
 
     # ---- tp collectives ------------------------------------------------------
     def ag_tokens(self, x: jax.Array, dim: int = 1) -> jax.Array:

@@ -1,68 +1,85 @@
-"""Cross-pod gradient compression (beyond-paper slow-tier optimization).
+"""DEPRECATED gradient-compression free functions (one-release shims).
 
-The paper's bridge exchange is the only slow-tier traffic; int8-quantizing
-the bridge psum cuts it 4x (fp32) / 2x (bf16).  Error feedback keeps the
-quantization bias out of the optimizer trajectory: the residual of each
-step's quantization is added back before the next quantization.
+The int8 bridge wire format now lives in the scheme registry: ``q8_hier``
+(`repro.comm.quantize` bodies) reached through
+``Communicator.allreduce(..., precision="lossy")`` or
+``ParallelCtx.reduce_grads(..., precision="lossy")`` — the residual state
+of error feedback rides the same call (``error_state=`` / the returned new
+state).  Nothing here should gain new call sites
+(``scripts/check_api_surface.py`` flags them); the shims below delegate to
+the registry bodies and warn.
 
-Stateless variant (``int8_bridge_psum``) quantizes per-call with a shared
-absmax scale: q = round(g / s * 127); psum(q) stays exact in int32 for up to
-2^23/127 pods, so the only error is the rounding — bounded by s/254 per
-element and unbiased with stochastic rounding.
+The per-tensor absmax scale of the original ``_quantize`` is gone: the
+shared cores quantize per ``block`` (default
+``repro.comm.quantize.DEFAULT_BLOCK``), so one outlier gradient leaf no
+longer collapses every other element's grid to zero.
+
+Migration table:
+
+=====================================  ====================================
+deprecated                             replacement
+=====================================  ====================================
+``int8_bridge_psum(g, axes)``          ``Communicator(fast_axis=axes)``
+                                       ``.allreduce(g, precision="lossy")``
+``make_error_feedback(params)``        ``reduce_grads(grads, metas,``
+                                       ``precision="lossy",``
+                                       ``error_state=state)``
+=====================================  ====================================
 """
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
-from jax import lax
+
+from repro.comm import quantize as qz
+
+
+def _warn(name: str, repl: str) -> None:
+    warnings.warn(
+        f"repro.optim.compression.{name} is deprecated; use {repl} "
+        f"(removal next release)", DeprecationWarning, stacklevel=3)
 
 
 def _quantize(g32: jax.Array, axes, *, stochastic: bool = False, key=None):
-    """int8-quantize ``g32`` with an absmax scale agreed over ``axes`` via a
-    tiny fp32 pmax (one scalar per tensor).  Returns (q, scale)."""
-    amax = jnp.max(jnp.abs(g32))
-    amax = lax.pmax(amax, axes)
-    scale = jnp.maximum(amax, 1e-30) / 127.0
-    x = g32 / scale
-    if stochastic and key is not None:
-        x = jnp.floor(x + jax.random.uniform(key, x.shape))
-    else:
-        x = jnp.round(x)
-    q = jnp.clip(x, -127, 127).astype(jnp.int8)
+    """Per-BLOCK int8 quantization (scales agreed over ``axes`` via pmax).
+
+    Returns ``(q, scale)`` with ``q`` int8 ``(n_blocks, block)`` and
+    ``scale`` f32 ``(n_blocks,)`` — per-block now, so an outlier only
+    collapses its own block's grid.
+    """
+    q, scale, _ = qz.block_quantize(g32, block=qz.DEFAULT_BLOCK,
+                                    shared_axes=axes, stochastic=stochastic,
+                                    key=key)
     return q, scale
 
 
 def int8_bridge_psum(g: jax.Array, axes, *, stochastic: bool = False,
                      key=None) -> jax.Array:
-    """Quantized psum over ``axes`` (the bridge)."""
-    g32 = g.astype(jnp.float32)
-    q, scale = _quantize(g32, axes, stochastic=stochastic, key=key)
-    # int16 on the wire: exact for <= 256 pods (sum <= 127*256 < 2^15) and
-    # half the fp32 bridge bytes; int8 itself would overflow at 2 pods.
-    # raw-collective: int16 wire format, registry has no dtype dispatch
-    total = lax.psum(q.astype(jnp.int16), axes)
-    return (total.astype(jnp.float32) * scale).astype(g.dtype)
+    """Quantized psum over ``axes`` (the bridge).  DEPRECATED shim."""
+    _warn("int8_bridge_psum",
+          "Communicator.allreduce(..., precision='lossy')")
+    return qz.q8_psum_flat(g, axes, stochastic=stochastic, key=key)
 
 
 def make_error_feedback(params_like):
     """Returns (init_state, compress_fn(g, axes, state) -> (g_red, state)).
-    Residuals live on the gradient shards — same one-copy-per-pod layout."""
+    DEPRECATED shim over the registry error-feedback path
+    (``reduce_grads(..., precision="lossy", error_state=...)``)."""
+    _warn("make_error_feedback",
+          "reduce_grads(..., precision='lossy', error_state=...)")
+
     def init():
         return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                             params_like)
 
     def compress_leaf(g, err, axes):
-        g32 = g.astype(jnp.float32) + err
-        q, scale = _quantize(g32, axes)
         # residual of the LOCAL quantization only: the psum total includes
         # the other pods' contributions, so `g32 - total` would grow like
         # (P-1)*g per step and the feedback would diverge instead of
         # correcting rounding bias.
-        new_err = g32 - q.astype(jnp.float32) * scale
-        # raw-collective: int16 wire format (same as bridge path)
-        total = lax.psum(q.astype(jnp.int16), axes)
-        out = (total.astype(jnp.float32) * scale).astype(g.dtype)
-        return out, new_err
+        return qz.q8_psum_flat(g, axes, err=err)
 
     return init, compress_leaf

@@ -103,9 +103,10 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
                     unroll: int = 1, compress=None, opts=(),
                     compute_dtype=jnp.bfloat16) -> TrainStepBundle:
     model = build_model(cfg, topo, mode, compute_dtype, opts)
-    if compress is None and "int8_bridge" in opts:
-        from repro.optim.compression import int8_bridge_psum
-        compress = int8_bridge_psum
+    # the int8_bridge opt is now a precision constraint, not a function:
+    # auto-resolution picks the quantized wire scheme from the registry
+    grad_precision = "lossy" if (compress is None
+                                 and "int8_bridge" in opts) else "exact"
     ctx = model.ctx
     defs = model.defs
     pspecs = model.param_specs()
@@ -145,14 +146,16 @@ def make_train_step(cfg: ModelConfig, topo: MeshTopology, mesh, *,
                                result="replicated", bucketable=False,
                                key="cnt")
             grads = ctx.reduce_grads(grads, meta_leaves, compress=compress,
-                                     recorder=rec)
+                                     recorder=rec,
+                                     precision=grad_precision)
             res = rec.run()
             loss_g, cnt_g = res[rl], res[rc]
             grads = res.resolve(grads)
         else:
             loss_g = world.allreduce(loss_sum, result="replicated")
             cnt_g = world.allreduce(cnt, result="replicated")
-            grads = ctx.reduce_grads(grads, meta_leaves, compress=compress)
+            grads = ctx.reduce_grads(grads, meta_leaves, compress=compress,
+                                     precision=grad_precision)
         grads = jax.tree.map(lambda g: g / cnt_g, grads)
 
         # global grad norm: each leaf is tiled over the axes it is sharded on

@@ -34,7 +34,8 @@ except ImportError:
 
 _HYPOTHESIS_MODULES = ["test_attention_props.py", "test_moe_dispatch.py",
                        "test_plans.py", "test_pipeline_props.py",
-                       "test_prefetch_props.py", "test_stepgraph_props.py"]
+                       "test_prefetch_props.py", "test_stepgraph_props.py",
+                       "test_quantized_props.py"]
 
 collect_ignore = [] if _HAVE_HYPOTHESIS else list(_HYPOTHESIS_MODULES)
 

@@ -97,6 +97,7 @@ _HLO_KEYS = {"fast_link_bytes_per_chip", "slow_link_bytes_per_chip",
              "fast_link_bytes_total", "slow_link_bytes_total", "by_op",
              "result_bytes_per_node"}
 _CHECK_KEYS = {"name", "expected", "measured", "ok", "note"}
+_CHECK_KEYS_1SIDED = _CHECK_KEYS | {"one_sided"}    # error/bound ceilings
 
 
 @pytest.fixture(scope="module")
@@ -115,14 +116,16 @@ def test_report_schema_golden(small_suite):
     assert rep["schema"] == SCHEMA_VERSION
     assert set(rep) == _TOP_KEYS
     assert rep["matrix"] == ["2x2"]
-    assert len(rep["cases"]) == 6      # 4 allgather + 2 allgatherv schemes
+    # 4 exact + 3 quantized allgather schemes + 2 allgatherv schemes
+    assert len(rep["cases"]) == 9
     for case in rep["cases"]:
         assert set(case) == _CASE_KEYS
         assert set(case["timing"]) == _TIMING_KEYS
         assert set(case["traffic"]) == _TRAFFIC_KEYS
         assert set(case["hlo"]) == _HLO_KEYS
         for ch in case["checks"]:
-            assert set(ch) == _CHECK_KEYS
+            assert set(ch) == (_CHECK_KEYS_1SIDED if ch.get("one_sided")
+                               else _CHECK_KEYS)
         assert case["ok"] is True
     assert rep["validation"]["ok"] is True
     assert rep["validation"]["num_checks"] > 0
@@ -133,7 +136,7 @@ def test_report_schema_golden(small_suite):
 def test_csv_rows_format_and_fixed_copies_column(small_suite):
     suite = small_suite
     rows = report.csv_rows(suite)
-    assert len(rows) == 6
+    assert len(rows) == 9
     by_name = {}
     for row in rows:
         name, us, derived = row.split(",", 2)

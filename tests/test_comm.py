@@ -92,10 +92,17 @@ def test_registry_entries_and_errors():
     from repro.bench import serving, step_time  # noqa: F401
     assert set(scheme_names()) == {"naive", "hier", "shared", "pipelined",
                                    "eager", "prefetch", "stepgraph",
-                                   "sync", "recorded"}
+                                   "sync", "recorded",
+                                   "q8_hier", "qbf16_hier", "q4_shared"}
     assert get_scheme("shared").result_class == "shared"
     assert get_scheme("hier").result_class == "replicated"
     assert get_scheme("pipelined").result_class == "replicated"
+    # quantized wire formats declare themselves lossy; everything else is
+    # exact (the precision="exact" default filters on this flag)
+    for name in ("q8_hier", "qbf16_hier", "q4_shared"):
+        assert get_scheme(name).precision == "lossy"
+    for name in ("naive", "hier", "shared", "pipelined"):
+        assert get_scheme(name).precision == "exact"
     with pytest.raises(KeyError, match="registered"):
         get_scheme("quantum")
     # unsupported (scheme, family) pairs fail loudly, naming alternatives

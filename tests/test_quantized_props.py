@@ -1,0 +1,55 @@
+"""Property tests for the int4 wire format (hypothesis; skipped at
+collection when hypothesis is not installed — see ``tests/conftest.py``).
+
+The pack/unpack pair is the one piece of the quantized schemes with a
+bit-level contract (two codes per byte, bias to ``[1, 15]``): a rounding
+bound won't catch a nibble swap, only exact round-trip over the full code
+book will.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.comm import quantize as qz
+
+codes = st.integers(min_value=-7, max_value=7)
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.lists(codes, min_size=2, max_size=128).map(
+    lambda v: v[: len(v) // 2 * 2]))
+def test_pack_unpack_int4_roundtrip(vals):
+    q = jnp.asarray(np.array(vals, np.int8))
+    packed = qz.pack_int4(q)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape[-1] == len(vals) // 2
+    np.testing.assert_array_equal(np.asarray(qz.unpack_int4(packed)),
+                                  np.array(vals, np.int8))
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.integers(min_value=1, max_value=6),
+       st.lists(codes, min_size=8, max_size=8))
+def test_pack_int4_never_emits_zero_bytes(rows, vals):
+    """The bias to [1, 15] means no nibble is ever 0: an all-zero packed
+    buffer always signals a bug, never a legal payload."""
+    q = jnp.asarray(np.tile(np.array(vals, np.int8), (rows, 1)))
+    packed = np.asarray(qz.pack_int4(q))
+    assert np.all((packed & 0xF) != 0) and np.all((packed >> 4) != 0)
+
+
+@settings(deadline=None, max_examples=25)
+@given(st.lists(st.floats(min_value=-100.0, max_value=100.0,
+                          allow_nan=False, width=32),
+                min_size=32, max_size=32),
+       st.integers(min_value=1, max_value=4))
+def test_quantize_q4_roundtrip_within_grid(col, ncols):
+    """Groupwise int4 weight round-trip: error per element stays within
+    half a quantization step of its group's amax grid."""
+    w = np.tile(np.array(col, np.float32)[:, None], (1, ncols))
+    packed, scales = qz.quantize_q4(jnp.asarray(w), group=32)
+    deq = np.asarray(qz.dequantize_q4(packed, scales, group=32))
+    amax = np.max(np.abs(w), axis=0)
+    assert np.all(np.abs(deq - w) <= amax / 14 + 1e-6)

@@ -244,6 +244,75 @@ def test_recorded_opts_revalidated_against_dispatch_size():
         == 0
 
 
+def test_precision_exact_never_resolves_quantized():
+    """The acceptance bar of the quantized wire formats: a default
+    (``precision="exact"``) resolution must NEVER return a lossy scheme —
+    not from a measured table that ranks one first, not from the modeled
+    path, not from the committed table, on any matrix topology."""
+    from repro.comm import registry
+    vc = MATRIX[1]                          # 2x4
+    cases = [_case("psum", "q8_hier", vc, 1024, 1.0),   # lossy ranked 1st
+             _case("psum", "hier", vc, 1024, 30.0),
+             _case("psum", "naive", vc, 1024, 40.0)]
+    table = tuning.TuningTable.from_bench_report(_report(cases))
+    res = tuning.resolve("psum", pods=2, chips=4, elems=1024, table=table)
+    assert res.scheme == "hier" and res.source == "measured"
+    # modeled path (empty table) + committed table, full matrix sweep
+    tables = [tuning.TuningTable()]
+    if tuning.default_table_path().exists():
+        tables.append(tuning.TuningTable.load(tuning.default_table_path()))
+    for tbl in tables:
+        for cluster in MATRIX:
+            for family in ("psum", "allgather"):
+                for elems in (64, 1024, 65536):
+                    res = tuning.resolve(
+                        family, pods=cluster.pods, chips=cluster.chips,
+                        elems=elems, n_fast_axes=len(cluster.fast_names),
+                        table=tbl)
+                    assert registry.get_scheme(res.scheme).precision \
+                        == "exact", (cluster.label, family, elems,
+                                     res.scheme)
+
+
+def test_precision_lossy_walks_to_quantized_winner():
+    vc = MATRIX[1]                          # 2x4
+    cases = [_case("psum", "q8_hier", vc, 1024, 1.0),
+             _case("psum", "hier", vc, 1024, 30.0)]
+    table = tuning.TuningTable.from_bench_report(_report(cases))
+    res = tuning.resolve("psum", pods=2, chips=4, elems=1024,
+                         precision="lossy", table=table)
+    assert res.scheme == "q8_hier" and res.source == "measured"
+    # tol= caps the admitted error: q8 psum declares pods/254, so a
+    # tolerance below that walks on to the exact runner-up
+    res = tuning.resolve("psum", pods=2, chips=4, elems=1024,
+                         precision="lossy", tol=1e-4, table=table)
+    assert res.scheme == "hier"
+    res = tuning.resolve("psum", pods=2, chips=4, elems=1024,
+                         precision="lossy", tol=0.5, table=table)
+    assert res.scheme == "q8_hier"
+
+
+def test_precision_lossy_fallback_without_static_counts():
+    """The reduce_grads dispatch shape: no pods/chips counts at all.
+    Lossy opt-in compresses the bridge (q8), the exact default keeps the
+    old fallback, and a shared-result caller never gets a replicated
+    quantized scheme."""
+    res = tuning.resolve("psum", pods=None, chips=None, elems=64,
+                         precision="lossy")
+    assert (res.scheme, res.source) == ("q8_hier", "fallback")
+    assert tuning.resolve("psum", pods=None, chips=None, elems=64,
+                          precision="lossy",
+                          result_class="replicated").scheme == "q8_hier"
+    assert tuning.resolve("psum", pods=None, chips=None,
+                          elems=64).scheme == "shared"
+    assert tuning.resolve("psum", pods=None, chips=None, elems=64,
+                          precision="lossy",
+                          result_class="shared").scheme == "shared"
+    with pytest.raises(ValueError, match="precision"):
+        tuning.resolve("psum", pods=2, chips=4, elems=64,
+                       precision="fast-ish")
+
+
 def test_concrete_scheme_with_wrong_result_constraint_raises():
     vc = MATRIX[1]
     if not vc.available():
